@@ -1,0 +1,102 @@
+"""E4 — row-wise vs cascade parallelization of the recurrent matvec.
+
+Three views:
+  (a) single-host wall-clock of the two STRUCTURAL modes (lax.map grid vs
+      sequential-accumulation scan) at paper sizes and LM sizes,
+  (b) the analytic v5e model across row_shards (the AIE-tiles -> TPU-chips
+      translation of the paper's scaling argument),
+  (c) collective bytes/ops parsed from the compiled shard_map programs on a
+      4-device host mesh (subprocess; all-gather-only vs psum — Fig. 1b's
+      aggregation study), including the beyond-paper v3 single-aggregation
+      variant.
+
+CSV: name,us_per_call,derived
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GRUConfig
+from repro.core import gru
+from repro.core.latency import gru_step_model
+from repro.core.params import init_params
+
+_SUB = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp
+from repro.configs.base import GRUConfig
+from repro.core import gru, rowparallel
+from repro.core.params import init_params
+from repro.launch.hloparse import analyze
+H, X, B, T = 64, 16, 1, 8
+mesh = jax.make_mesh((4,), ("model",))
+params = init_params(gru.gru_cell_specs(X, H), jax.random.key(0))
+h0 = jnp.zeros((B, H)); xs = jnp.ones((B, T, X))
+for mode in ("rowwise", "cascade"):
+    for variant in ("v1", "v3"):
+        cfg = GRUConfig(input_dim=X, hidden_dim=H, matvec_mode=mode, variant=variant)
+        f = jax.jit(lambda p, h, x: rowparallel.gru_sequence_sharded(p, h, x, mesh=mesh, cfg=cfg))
+        a = analyze(f.lower(params, h0, xs).compile().as_text())
+        kinds = ",".join(f"{k}:{int(v)}" for k, v in sorted(a.coll_counts.items()))
+        print(f"E4SUB,{mode}_{variant},{a.total_coll_bytes:.0f},{kinds}")
+"""
+
+
+def _measure_seq(cfg: GRUConfig, H: int, X: int, T: int = 32,
+                 iters: int = 50) -> float:
+    params = init_params(gru.gru_cell_specs(X, H), jax.random.key(0))
+    h0 = jnp.zeros((1, H))
+    xs = jnp.ones((1, T, X))
+    f = jax.jit(lambda p, h, x: gru.gru_sequence(p, h, x, cfg=cfg)[0])
+    f(params, h0, xs).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = f(params, h0, xs)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(csv=True):
+    rows = []
+    for H, X in ((32, 5), (256, 64)):
+        for mode in ("rowwise", "cascade", "dense"):
+            cfg = GRUConfig(input_dim=X, hidden_dim=H, matvec_mode=mode)
+            us = _measure_seq(cfg, H, X)
+            rows.append((f"e4_seq_h{H}_{mode}", us, "structural_wall_clock"))
+    for shards in (1, 4, 16):
+        m = gru_step_model(1024, 256, row_shards=shards, dtype_bytes=2)
+        rows.append((f"e4_model_shards{shards}", 0.0,
+                     f"v5e_step_ns={m.total_s*1e9:.1f};"
+                     f"coll_ns={m.collective_s*1e9:.1f}"))
+    # (c) compiled collective study
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    try:
+        out = subprocess.run([sys.executable, "-c", _SUB], env=env, text=True,
+                             capture_output=True, timeout=420)
+        for line in out.stdout.splitlines():
+            if line.startswith("E4SUB,"):
+                _, name, cbytes, kinds = line.split(",", 3)
+                rows.append((f"e4_coll_{name}", 0.0,
+                             f"coll_bytes={cbytes};{kinds}"))
+        if out.returncode != 0:
+            rows.append(("e4_coll_error", 0.0, out.stderr[-200:].replace("\n", " ")))
+    except subprocess.TimeoutExpired:
+        rows.append(("e4_coll_timeout", 0.0, "subprocess timeout"))
+    if csv:
+        for name, us, derived in rows:
+            print(f"{name},{us:.2f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

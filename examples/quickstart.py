@@ -1,0 +1,60 @@
+"""Quickstart: the paper's GRU in 60 seconds.
+
+Builds the jet-tagging GRU (H=20, X=5), runs the three structural matvec
+modes, shows they agree with the dense oracle, and measures the
+latency-critical single-step serve path.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import GRUConfig
+from repro.configs.gru_jet import CONFIG
+from repro.core import gru
+from repro.core.latency import gru_step_model, gru_tile_cost
+from repro.core.params import init_params
+
+
+def main():
+    cfg = CONFIG.gru
+    params = init_params(gru.gru_classifier_specs(cfg), jax.random.key(0))
+    xs = jax.random.normal(jax.random.key(1), (1, cfg.seq_len, cfg.input_dim))
+
+    print(f"paper model: GRU H={cfg.hidden_dim} X={cfg.input_dim} "
+          f"(AIE tile cost model: {gru_tile_cost(cfg.hidden_dim)} tiles)")
+
+    h0 = jnp.zeros((1, cfg.hidden_dim))
+    ref, _ = gru.gru_reference(params["cell"], h0, xs)
+    for mode in ("rowwise", "cascade", "dense"):
+        c = GRUConfig(cfg.input_dim, cfg.hidden_dim, matvec_mode=mode)
+        h, _ = gru.gru_sequence(params["cell"], h0, xs, cfg=c)
+        err = float(jnp.abs(h - ref).max())
+        print(f"  {mode:8s} max|err| vs oracle = {err:.2e}")
+
+    logits = gru.gru_classify(params, xs, cfg=cfg)
+    print(f"jet-tagging logits: {np.asarray(logits)[0].round(3)}")
+
+    # latency path: one recurrent step, batch 1 (the paper's measurement)
+    step = jax.jit(lambda p, h, x: gru.gru_step(p, h, x=x, cfg=cfg))
+    x1 = xs[:, 0]
+    h = step(params["cell"], h0, x1)
+    h.block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(500):
+        h = step(params["cell"], h, x1)
+    h.block_until_ready()
+    us = (time.perf_counter() - t0) / 500 * 1e6
+    model = gru_step_model(cfg.hidden_dim, cfg.input_dim)
+    print(f"serve step: {us:.1f} us/step on this host; "
+          f"analytic v5e model: {model.total_s*1e9:.0f} ns/step "
+          f"(dominated by per-dispatch overhead — the gru_sequence Pallas "
+          f"kernel amortizes it across all T steps, the TPU analogue of the "
+          f"paper's free-running kernels; paper: 163-197 ns at H=28/32)")
+
+
+if __name__ == "__main__":
+    main()

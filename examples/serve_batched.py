@@ -1,0 +1,15 @@
+"""Serve a small LM with batched requests through the engine (the paper's
+latency-measurement methodology: consecutive step-to-step intervals).
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    serve_main(["--arch", "qwen3-0.6b", "--smoke", "--requests", "4",
+                "--prompt-len", "12", "--max-new", "24"])
+
+
+if __name__ == "__main__":
+    main()

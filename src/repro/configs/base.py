@@ -1,0 +1,223 @@
+"""Config system: model architecture, shapes, mesh, and training configs.
+
+Every assigned architecture is a `ModelConfig` in its own module under
+`repro.configs`; the registry maps ``--arch <id>`` to it. Shape cells
+(train_4k / prefill_32k / decode_32k / long_500k) live in `shapes.py`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_expert: int                    # per-expert FFN hidden size
+    shared_d_ff: int = 0             # 0 = no shared expert
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.001   # load-balance aux loss
+    norm_topk_prob: bool = True      # renormalize top-k weights (qwen3 style)
+    tp_mode: str = "gather"          # expert TP: "gather" (weight-gathered
+                                     # EP, §Perf H2) | "psum" (baseline)
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-style selective SSM (used by hymba's parallel SSM heads)."""
+    state_dim: int = 16
+    conv_width: int = 4
+    dt_rank: int = 0                 # 0 -> ceil(d_model/16)
+    expand: int = 1                  # inner expansion of the ssm path
+
+
+@dataclass(frozen=True)
+class XLSTMConfig:
+    slstm_layers: Tuple[int, ...] = ()   # layer indices that are sLSTM blocks
+    proj_factor: float = 2.0             # mLSTM up-projection factor
+    conv_width: int = 4
+
+
+@dataclass(frozen=True)
+class EncoderConfig:
+    """Encoder stack for enc-dec archs (whisper). Frontend is a stub:
+    input_specs() provides precomputed frame embeddings."""
+    num_layers: int
+    num_frames: int = 1500           # whisper: 30 s of audio after conv frontend
+
+
+@dataclass(frozen=True)
+class VisionStubConfig:
+    """VLM modality frontend stub: precomputed patch embeddings are inputs."""
+    num_patches: int = 576           # base-resolution tile (anyres tiles stubbed)
+    embed_dim: int = 1024            # pre-projection CLIP dim
+
+
+@dataclass(frozen=True)
+class GRUConfig:
+    """The paper's own model family (core contribution)."""
+    input_dim: int = 5
+    hidden_dim: int = 20
+    num_classes: int = 5
+    seq_len: int = 20
+    matvec_mode: str = "rowwise"     # "rowwise" | "cascade" | "dense"
+    fused_gates: bool = True         # hybrid fused aggregation vs unfused
+    decoupled_wx: bool = True        # hoist W.x out of the recurrence
+    variant: str = "v1"              # "v1" (paper/Cho) | "v3" (beyond-paper fused-U)
+    backend: str = "xla"             # "xla" | "pallas"
+    row_block: int = 0               # rows per block (0 = auto)
+    unroll: int = 1                  # scan unroll for short-seq latency mode
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense|moe|ssm|hybrid|audio|vlm|gru
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // num_heads
+    # attention / block details
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    out_bias: bool = False
+    mlp_bias: bool = False
+    rope_theta: float = 10_000.0
+    rope: bool = True
+    norm: str = "rmsnorm"            # rmsnorm | layernorm
+    mlp: str = "swiglu"              # swiglu | gelu
+    parallel_block: bool = False     # cohere-style attn ∥ mlp
+    tie_embeddings: bool = False
+    sliding_window: int = 0          # 0 = full attention
+    global_attn_layers: Tuple[int, ...] = ()  # layers that ignore sliding_window
+    logit_softcap: float = 0.0
+    # sub-configs
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    xlstm: Optional[XLSTMConfig] = None
+    encoder: Optional[EncoderConfig] = None
+    vision: Optional[VisionStubConfig] = None
+    gru: Optional[GRUConfig] = None
+    # numerics
+    dtype: str = "bfloat16"          # activation/compute dtype
+    param_dtype: str = "float32"     # parameter dtype (dry-run may override)
+    # scan-over-layers (compile-time discipline for deep stacks)
+    scan_layers: bool = True
+    remat: bool = True
+    # attention implementation: xla_flash (chunked, compiles everywhere),
+    # pallas (TPU target kernel), naive (oracle)
+    attn_impl: str = "xla_flash"
+    attn_chunk: int = 1024           # kv-chunk for xla_flash / pallas block
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // self.num_heads)
+
+    @property
+    def is_recurrent(self) -> bool:
+        return self.family in ("ssm", "hybrid", "gru")
+
+    @property
+    def supports_long_context(self) -> bool:
+        """Sub-quadratic decode: recurrent/hybrid archs only."""
+        return self.family in ("ssm", "hybrid", "gru")
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks + head)."""
+        d, hd = self.d_model, self.resolved_head_dim
+        n_q, n_kv = self.num_heads, self.num_kv_heads
+        attn = d * hd * n_q + 2 * d * hd * n_kv + hd * n_q * d
+        if self.mlp == "swiglu":
+            mlp = 3 * d * self.d_ff
+        else:
+            mlp = 2 * d * self.d_ff
+        per_layer = attn + mlp + 2 * d
+        if self.moe is not None:
+            m = self.moe
+            emlp = m.num_experts * 3 * d * m.d_expert + d * m.num_experts
+            if m.shared_d_ff:
+                emlp += 3 * d * m.shared_d_ff
+            per_layer = attn + emlp + 2 * d
+        total = self.num_layers * per_layer + self.vocab_size * d
+        if not self.tie_embeddings:
+            total += self.vocab_size * d
+        if self.encoder is not None:
+            total += self.encoder.num_layers * (attn * 2 + mlp + 3 * d)
+        return total
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only routed top-k + shared)."""
+        if self.moe is None:
+            return self.param_count()
+        d = self.d_model
+        m = self.moe
+        full_moe = m.num_experts * 3 * d * m.d_expert
+        active_moe = m.top_k * 3 * d * m.d_expert
+        return self.param_count() - self.num_layers * (full_moe - active_moe)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                        # "train" | "prefill" | "decode"
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    microbatches: int = 1            # gradient accumulation
+    seed: int = 0
+    checkpoint_every: int = 200
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    keep_checkpoints: int = 3
+    grad_compression: str = "none"   # none | bf16 | bf16_ef (error feedback)
+    opt_dtype: str = "float32"       # Adam moment dtype
+
+
+_REGISTRY = {
+    "gru-jet": "gru_jet",
+    "xlstm-125m": "xlstm_125m",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "qwen3-0.6b": "qwen3_0_6b",
+    "command-r-35b": "command_r_35b",
+    "phi4-mini-3.8b": "phi4_mini_3_8b",
+    "qwen2.5-3b": "qwen2_5_3b",
+    "whisper-large-v3": "whisper_large_v3",
+    "hymba-1.5b": "hymba_1_5b",
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+}
+
+ASSIGNED_ARCHS = [a for a in _REGISTRY if a != "gru-jet"]
+ALL_ARCHS = list(_REGISTRY)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _REGISTRY:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_REGISTRY)}")
+    mod = importlib.import_module(f"repro.configs.{_REGISTRY[arch]}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests."""
+    mod = importlib.import_module(f"repro.configs.{_REGISTRY[arch]}")
+    return mod.SMOKE

@@ -1,0 +1,32 @@
+"""The paper's own model: jet-tagging GRU (H=20, X=5, 5 classes, T=20).
+
+Numerically validated configuration from the paper (§5: "we numerically
+tested the H = 20 and X = 5 with a GRU trained in a jet tagging dataset").
+Full fp32, batch 1 at serve time — the latency-measurement regime.
+"""
+from repro.configs.base import GRUConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="gru-jet",
+    family="gru",
+    num_layers=1,
+    d_model=20,
+    num_heads=1,
+    num_kv_heads=1,
+    d_ff=0,
+    vocab_size=5,
+    gru=GRUConfig(input_dim=5, hidden_dim=20, num_classes=5, seq_len=20,
+                  matvec_mode="rowwise", fused_gates=True, decoupled_wx=True),
+    dtype="float32",          # the paper is fp32 end-to-end (AIE native fp32)
+    param_dtype="float32",
+    scan_layers=False,
+    remat=False,
+)
+
+# scaled-up variant used by the latency sweeps (H up to 32 like Table 1)
+def scaled(hidden: int = 32, input_dim: int = 32, **kw) -> ModelConfig:
+    return CONFIG.replace(gru=GRUConfig(
+        input_dim=input_dim, hidden_dim=hidden, num_classes=5, seq_len=20,
+        **kw))
+
+SMOKE = CONFIG  # already CPU-sized

@@ -1,0 +1,21 @@
+"""qwen2.5-3b [dense]: 36L d_model=2048 16H (kv=2) d_ff=11008 vocab=151936,
+QKV bias, tied embeddings [hf:Qwen/Qwen2.5 family; hf]. kv=2 does not
+divide model=16 -> KV heads replicate on the TP axis (resolver drop)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2.5-3b",
+    family="dense",
+    num_layers=36,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=2,
+    d_ff=11008,
+    vocab_size=151936,
+    qkv_bias=True,
+    tie_embeddings=True,
+    rope_theta=1_000_000.0,
+)
+
+SMOKE = CONFIG.replace(num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+                       d_ff=128, vocab_size=256, remat=False)

@@ -1,0 +1,237 @@
+"""The paper's GRU, TPU-adapted: row-wise vs cascade matvec, decoupled Wx,
+fused vs unfused gate aggregation.
+
+Gate math (paper eq. 1, "v1"/Cho variant):
+
+    z = sigmoid(Wz x + Uz h + bz)
+    r = sigmoid(Wr x + Ur h + br)
+    h~ = tanh(Wh x + Uh (r*h) + bh)
+    h' = (1-z)*h + z*h~
+
+Structural modes (all numerically equal to the dense oracle; they differ in
+the *shape of the computation*, which is what the paper studies):
+
+* ``matvec_mode="rowwise"`` — output-stationary: the weight matrix is
+  partitioned by output rows; every block consumes the full vector and emits
+  complete outputs (no cross-block reduction). TPU analogue of the paper's
+  row-wise AIE tiling; lowers to a parallel map over row blocks.
+* ``matvec_mode="cascade"`` — contraction-stationary baseline: the matrix is
+  partitioned by columns and partial sums accumulate sequentially across
+  blocks (the AIE cascade-stream pipeline); lowers to ``lax.scan``.
+* ``matvec_mode="dense"`` — plain ``x @ w`` oracle.
+
+``fused_gates=True`` is the hybrid-aggregation analogue: gate matvecs are
+batched into stacked matmuls and the bias+activation+Hadamard epilogue is
+applied without materializing per-gate intermediates (2 matmuls/step).
+``False`` is the unfused baseline (3 separate matvecs + separate adds).
+
+``decoupled_wx=True`` hoists the input projection out of the recurrence:
+``Xp = xs @ W`` runs as one MXU-shaped GEMM over all timesteps before the
+scan — the paper's free-running ``W.x`` tiles that prefetch ahead of the
+recurrent path.
+
+``variant="v3"`` is a *beyond-paper* option (cuDNN-style gate math,
+``h~ = tanh(Wh x + r*(Uh h + bh))``) that makes all three U matvecs
+fusable into ONE matmul per step, shortening the recurrent critical path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GRUConfig
+from repro.core.params import Spec
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+def gru_cell_specs(input_dim: int, hidden_dim: int) -> dict:
+    """One GRU layer. Gate stacking order along the last axis: [z, r, h]."""
+    return {
+        "w": Spec((input_dim, 3 * hidden_dim), ("rnn_in", "gates")),
+        "u": Spec((hidden_dim, 3 * hidden_dim), ("hidden", "gates"), init="recurrent"),
+        "b": Spec((3 * hidden_dim,), ("gates",), init="zeros"),
+    }
+
+
+def gru_classifier_specs(cfg: GRUConfig) -> dict:
+    """The paper's jet-tagging model: GRU layer + linear classifier head."""
+    return {
+        "cell": gru_cell_specs(cfg.input_dim, cfg.hidden_dim),
+        "head": {
+            "w": Spec((cfg.hidden_dim, cfg.num_classes), ("hidden", None)),
+            "b": Spec((cfg.num_classes,), (None,), init="zeros"),
+        },
+    }
+
+
+# ---------------------------------------------------------------------------
+# structural matvec modes
+# ---------------------------------------------------------------------------
+
+def _row_blocks(n: int, blk: int) -> int:
+    assert n % blk == 0, f"output dim {n} not divisible by row block {blk}"
+    return n // blk
+
+
+def matvec(x: jax.Array, w: jax.Array, mode: str = "dense", block: int = 0) -> jax.Array:
+    """``x @ w`` with an explicit structural decomposition.
+
+    x: (..., K), w: (K, N) -> (..., N).
+    ``block`` = rows-per-block (rowwise) or contraction chunk (cascade);
+    0 picks N//4 (rowwise, >=1) or K//4 (cascade, >=1).
+    """
+    K, N = w.shape
+    if mode == "dense":
+        return x @ w
+    if mode == "rowwise":
+        blk = block or max(N // 4, 1)
+        while N % blk:
+            blk -= 1
+        nb = _row_blocks(N, blk)
+        # (nb, K, blk): each block holds whole rows; every block sees the full
+        # vector x and emits finished outputs. lax.map keeps the block
+        # structure visible in HLO (parallel, no cross-block reduction).
+        wb = jnp.moveaxis(w.reshape(K, nb, blk), 1, 0)
+        yb = jax.lax.map(lambda wi: x @ wi, wb)          # (nb, ..., blk)
+        return jnp.moveaxis(yb, 0, -2).reshape(*x.shape[:-1], N)
+    if mode == "cascade":
+        blk = block or max(K // 4, 1)
+        while K % blk:
+            blk -= 1
+        kb = K // blk
+        xs = x.reshape(*x.shape[:-1], kb, blk)
+        ws = w.reshape(kb, blk, N)
+        # sequential accumulation across contraction blocks = cascade stream.
+        def body(carry, operand):
+            xi, wi = operand
+            return carry + xi @ wi, None
+        x_first = jnp.moveaxis(xs, -2, 0)                # (kb, ..., blk)
+        init = jnp.zeros((*x.shape[:-1], N), _acc_dtype(x.dtype))
+        out, _ = jax.lax.scan(body, init, (x_first, ws))
+        return out.astype(x.dtype)
+    raise ValueError(f"unknown matvec mode {mode!r}")
+
+
+def _acc_dtype(dt):
+    return jnp.float32 if dt in (jnp.bfloat16, jnp.float16) else dt
+
+
+# ---------------------------------------------------------------------------
+# single step
+# ---------------------------------------------------------------------------
+
+def input_projection(params: dict, xs: jax.Array, cfg: GRUConfig) -> jax.Array:
+    """The decoupled ``W.x`` path: one GEMM over however many timesteps are
+    given (MXU-shaped; runs off the recurrent critical path)."""
+    return matvec(xs, params["w"], cfg.matvec_mode, cfg.row_block)
+
+
+def gru_step(params: dict, h: jax.Array, x: Optional[jax.Array] = None,
+             x_proj: Optional[jax.Array] = None, *, cfg: GRUConfig) -> jax.Array:
+    """One recurrent step. Pass ``x_proj`` (precomputed Wx, shape (..., 3H))
+    when decoupled, else raw ``x``."""
+    H = params["u"].shape[0]
+    if x_proj is None:
+        x_proj = input_projection(params, x, cfg)
+    u, b = params["u"], params["b"]
+    mode, blk = cfg.matvec_mode, cfg.row_block
+    xz, xr, xh = x_proj[..., :H], x_proj[..., H:2 * H], x_proj[..., 2 * H:]
+
+    if cfg.variant == "v3":
+        # beyond-paper: single stacked U matvec per step (cuDNN gate math).
+        uh_all = matvec(h, u, mode, blk) + b
+        z = jax.nn.sigmoid(xz + uh_all[..., :H])
+        r = jax.nn.sigmoid(xr + uh_all[..., H:2 * H])
+        h_tilde = jnp.tanh(xh + r * uh_all[..., 2 * H:])
+    elif cfg.fused_gates:
+        # paper's hybrid aggregation: phase 1 fuses z,r (one (H,2H) matmul +
+        # epilogue), phase 2 the candidate (one (H,H) matmul + epilogue).
+        zr = matvec(h, u[:, :2 * H], mode, blk) + b[: 2 * H]
+        z = jax.nn.sigmoid(xz + zr[..., :H])
+        r = jax.nn.sigmoid(xr + zr[..., H:])
+        h_tilde = jnp.tanh(xh + matvec(r * h, u[:, 2 * H:], mode, blk) + b[2 * H:])
+    else:
+        # unfused baseline: three separate matvecs, materialized per-gate
+        # intermediates (the pure-AIE aggregator path).
+        z = jax.nn.sigmoid(xz + matvec(h, u[:, :H], mode, blk) + b[:H])
+        r = jax.nn.sigmoid(xr + matvec(h, u[:, H:2 * H], mode, blk) + b[H:2 * H])
+        h_tilde = jnp.tanh(xh + matvec(r * h, u[:, 2 * H:], mode, blk) + b[2 * H:])
+    return (1.0 - z) * h + z * h_tilde
+
+
+# ---------------------------------------------------------------------------
+# sequence
+# ---------------------------------------------------------------------------
+
+def gru_sequence(params: dict, h0: jax.Array, xs: jax.Array, *, cfg: GRUConfig,
+                 return_all: bool = False):
+    """Run the recurrence over ``xs`` (..., T, X), time axis = -2.
+
+    Respects ``cfg.decoupled_wx`` (hoisted input GEMM), ``cfg.backend``
+    ("xla" | "pallas"), and ``cfg.unroll`` (short-sequence latency mode).
+    """
+    if cfg.backend == "pallas":
+        from repro.kernels.gru_sequence import ops as seq_ops
+        return seq_ops.gru_sequence_pallas(params, h0, xs, cfg=cfg, return_all=return_all)
+
+    step = functools.partial(gru_step, params, cfg=cfg)
+    if cfg.decoupled_wx:
+        xp = input_projection(params, xs, cfg)           # (..., T, 3H) one GEMM
+        xp_t = jnp.moveaxis(xp, -2, 0)
+
+        def body(h, xpt):
+            h2 = step(h, x_proj=xpt)
+            return h2, (h2 if return_all else None)
+        hT, hs = jax.lax.scan(body, h0, xp_t, unroll=cfg.unroll)
+    else:
+        xs_t = jnp.moveaxis(xs, -2, 0)
+
+        def body(h, xt):
+            h2 = step(h, x=xt)
+            return h2, (h2 if return_all else None)
+        hT, hs = jax.lax.scan(body, h0, xs_t, unroll=cfg.unroll)
+    if return_all:
+        return hT, jnp.moveaxis(hs, 0, -2)
+    return hT, None
+
+
+def gru_classify(params: dict, xs: jax.Array, *, cfg: GRUConfig) -> jax.Array:
+    """Paper's jet-tagging forward pass: xs (B, T, X) -> logits (B, C)."""
+    B = xs.shape[0]
+    h0 = jnp.zeros((B, cfg.hidden_dim), xs.dtype)
+    hT, _ = gru_sequence(params["cell"], h0, xs, cfg=cfg)
+    return hT @ params["head"]["w"] + params["head"]["b"]
+
+
+def gru_decode_step(params: dict, h: jax.Array, x: jax.Array, *, cfg: GRUConfig) -> jax.Array:
+    """Latency-critical single-step serve path (batch can be 1)."""
+    return gru_step(params["cell"] if "cell" in params else params, h, x=x, cfg=cfg)
+
+
+# pure-jnp dense oracle used by every test --------------------------------
+
+def gru_reference(params: dict, h0: jax.Array, xs: jax.Array, return_all: bool = False):
+    """Dense, unfused, fp32 oracle (no structural modes, no scan tricks)."""
+    w = params["w"].astype(jnp.float32)
+    u = params["u"].astype(jnp.float32)
+    b = params["b"].astype(jnp.float32)
+    H = u.shape[0]
+    h = h0.astype(jnp.float32)
+    out = []
+    for t in range(xs.shape[-2]):
+        x = xs[..., t, :].astype(jnp.float32)
+        z = jax.nn.sigmoid(x @ w[:, :H] + h @ u[:, :H] + b[:H])
+        r = jax.nn.sigmoid(x @ w[:, H:2 * H] + h @ u[:, H:2 * H] + b[H:2 * H])
+        ht = jnp.tanh(x @ w[:, 2 * H:] + (r * h) @ u[:, 2 * H:] + b[2 * H:])
+        h = (1 - z) * h + z * ht
+        if return_all:
+            out.append(h)
+    if return_all:
+        return h, jnp.stack(out, axis=-2)
+    return h, None

@@ -1,0 +1,124 @@
+"""Analytical latency / roofline model (TPU v5e-like target).
+
+Two consumers:
+
+1. ``launch/roofline.py`` — turns the dry-run's compiled ``cost_analysis()``
+   + HLO-parsed collective bytes into the three roofline terms.
+2. ``benchmarks/fig3_latency.py`` — the paper's latency study re-derived for
+   TPU: per-step GRU latency vs hidden/input size, rowwise vs cascade,
+   fused vs unfused (the AIE tile-count model's analogue, §2 of DESIGN.md).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+
+@dataclass(frozen=True)
+class Hardware:
+    """Per-chip v5e-like numbers used throughout (assignment constants)."""
+    name: str = "tpu-v5e-like"
+    peak_flops_bf16: float = 197e12      # FLOP/s
+    peak_flops_fp32: float = 197e12 / 4  # MXU fp32 ~ 1/4 bf16
+    hbm_bw: float = 819e9                # B/s
+    ici_bw: float = 50e9                 # B/s per link
+    vmem_bytes: int = 128 * 1024 * 1024  # v5e ~128 MiB VMEM
+    vmem_bw: float = 819e9 * 20          # VMEM is ~an order faster than HBM
+    launch_overhead_s: float = 2e-6      # per dispatched program
+
+
+V5E = Hardware()
+
+
+@dataclass(frozen=True)
+class RooflineTerms:
+    """The three-term model: each term is the time (s) if that resource were
+    the only constraint; the max is the roofline-optimal step time."""
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def bound(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def total_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def as_dict(self) -> Dict[str, float]:
+        return {"compute_s": self.compute_s, "memory_s": self.memory_s,
+                "collective_s": self.collective_s, "bound": self.bound}
+
+
+def roofline(flops: float, hbm_bytes: float, collective_bytes: float,
+             chips: int = 1, hw: Hardware = V5E, dtype: str = "bfloat16") -> RooflineTerms:
+    """Aggregate-workload roofline: inputs are WHOLE-PROGRAM totals; each term
+    divides by the chip count (the assignment's formulas)."""
+    peak = hw.peak_flops_bf16 if dtype in ("bfloat16", "bf16") else hw.peak_flops_fp32
+    return RooflineTerms(
+        compute_s=flops / (chips * peak),
+        memory_s=hbm_bytes / (chips * hw.hbm_bw),
+        collective_s=collective_bytes / (chips * hw.ici_bw),
+    )
+
+
+# ---------------------------------------------------------------------------
+# GRU per-step analytical model (the paper's latency study, TPU-translated)
+# ---------------------------------------------------------------------------
+
+def gru_step_model(hidden: int, input_dim: int, *, batch: int = 1,
+                   fused_gates: bool = True, decoupled_wx: bool = True,
+                   variant: str = "v1", row_shards: int = 1,
+                   dtype_bytes: int = 4, weights_resident: bool = True,
+                   hw: Hardware = V5E) -> RooflineTerms:
+    """Latency terms for ONE recurrent step (the paper's Fig-3 axis).
+
+    * ``row_shards`` — the paper's row-wise parallelization degree (AIE tiles
+      -> TPU chips/row-blocks). Output rows of U split ``row_shards`` ways;
+      each shard emits finished outputs; aggregation = all-gather of h'
+      (paper: interface-tile broadcast + PL reassembly).
+    * ``weights_resident`` — paper's "row reuse": after the first pass the
+      vector/weights live in local memory; U streams from VMEM not HBM.
+    * ``decoupled_wx`` — W.x is prefetched off the critical path, so its
+      FLOPs/bytes drop off the per-step latency (the Fig-3 plateau in X).
+    """
+    H, X, B = hidden, input_dim, batch
+    # FLOPs on the recurrent critical path (per shard): U matvecs are 2*H*H
+    # MACs each; elementwise gates ~ 10*H.
+    u_flops = 2 * 3 * H * (H // row_shards) * B
+    x_flops = 0 if decoupled_wx else 2 * 3 * H * (X // max(row_shards, 1)) * B
+    ew_flops = 12 * H * B
+    # one matmul dispatch per phase: v3 = 1 phase, fused v1 = 2, unfused = 3
+    phases = 1 if variant == "v3" else (2 if fused_gates else 3)
+    flops = u_flops + x_flops + ew_flops
+
+    # Bytes: U rows for this shard (+W if not decoupled) + h vector + epilogue
+    u_bytes = 3 * H * (H // row_shards) * dtype_bytes
+    w_bytes = 0 if decoupled_wx else 3 * H * X * dtype_bytes
+    act_bytes = (4 * H * B) * dtype_bytes          # h in, h' out, gates traffic
+    mem_bw = hw.vmem_bw if weights_resident else hw.hbm_bw
+    memory_s = (u_bytes + w_bytes) / mem_bw + act_bytes / hw.hbm_bw
+
+    # Aggregation: all-gather of the sharded h' (paper's reassembly path).
+    coll_bytes = 0.0
+    if row_shards > 1:
+        coll_bytes = (row_shards - 1) / row_shards * H * B * dtype_bytes
+    peak = hw.peak_flops_bf16 if dtype_bytes == 2 else hw.peak_flops_fp32
+    return RooflineTerms(
+        compute_s=flops / peak + phases * hw.launch_overhead_s,
+        memory_s=memory_s,
+        collective_s=coll_bytes / hw.ici_bw + (1e-6 if row_shards > 1 else 0.0),
+    )
+
+
+def gru_tile_cost(hidden: int) -> int:
+    """The paper's AIE tile-count model: 3 tiles x 3 gates x H rows + 1."""
+    return 3 * hidden * 3 + 1
+
+
+def model_flops(n_active_params: int, tokens: int, training: bool = True) -> float:
+    """MODEL_FLOPS = 6*N*D for training, 2*N*D for inference forward."""
+    return (6.0 if training else 2.0) * n_active_params * tokens

@@ -1,0 +1,181 @@
+"""The paper's parallelization study as explicit shard_map programs.
+
+Row-wise (the paper's scheme, output-stationary):
+    U's OUTPUT rows are sharded across the mesh axis. Every shard receives
+    the full vector (the broadcast), emits FINISHED outputs for its rows,
+    and the next step's full vector is reassembled with an ALL-GATHER —
+    the paper's interface-tile aggregation. There is never a partial-sum
+    reduction.
+
+Cascade (the paper's baseline, contraction-stationary):
+    U's CONTRACTION dim is sharded; every shard MACs its slice of the
+    vector against its column block and partial sums are combined with a
+    PSUM — the AIE cascade-stream reduction pipeline.
+
+GRU specifics (Fig. 1b): with paper gate math (v1), the candidate gate
+needs the full ``r * h`` vector, so the row-wise step takes TWO
+aggregations per step (after z,r and after h'). The beyond-paper ``v3``
+gate variant fuses all U matvecs and needs ONE — this halves the
+per-step collective latency and is one of the §Perf hillclimbs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import GRUConfig
+
+
+# ---------------------------------------------------------------------------
+# plain matvec (benchmark E4 building block)
+# ---------------------------------------------------------------------------
+
+def rowparallel_matmul(x: jax.Array, w: jax.Array, mesh: Mesh,
+                       axis: str = "model") -> jax.Array:
+    """y = x @ w with w's OUTPUT dim sharded; all-gather of finished outputs."""
+    def f(x_full, w_shard):
+        y_shard = x_full @ w_shard
+        return jax.lax.all_gather(y_shard, axis, axis=y_shard.ndim - 1,
+                                  tiled=True)
+    return jax.shard_map(f, mesh=mesh, in_specs=(P(), P(None, axis)),
+                     out_specs=P(), check_vma=False)(x, w)
+
+
+def colparallel_matmul(x: jax.Array, w: jax.Array, mesh: Mesh,
+                       axis: str = "model") -> jax.Array:
+    """y = x @ w with the CONTRACTION dim sharded; psum of partial sums."""
+    def f(x_shard, w_shard):
+        return jax.lax.psum(x_shard @ w_shard, axis)
+    return jax.shard_map(f, mesh=mesh, in_specs=(P(None, axis), P(axis, None)),
+                     out_specs=P(), check_vma=False)(x, w)
+
+
+# ---------------------------------------------------------------------------
+# row-parallel GRU step / sequence (the paper's full scheme)
+# ---------------------------------------------------------------------------
+
+def _rowwise_step(h_full, xp_shard, u_shard, b_shard, shard_idx, *,
+                  axis: str, n: int, variant: str):
+    """One GRU step on one shard. h_full: (B,H) replicated; u_shard:
+    (H, 3H/n) output rows of all three gates; xp/b sharded to match.
+    Returns the all-gathered full h'."""
+    B, H = h_full.shape
+    Hl = H // n
+    h32 = h_full.astype(jnp.float32)
+    xz = xp_shard[..., :Hl]
+    xr = xp_shard[..., Hl:2 * Hl]
+    xh = xp_shard[..., 2 * Hl:]
+    uz = u_shard[:, :Hl]
+    ur = u_shard[:, Hl:2 * Hl]
+    uh = u_shard[:, 2 * Hl:]
+    bz, br, bh = b_shard[:Hl], b_shard[Hl:2 * Hl], b_shard[2 * Hl:]
+    h_local = jax.lax.dynamic_slice_in_dim(h32, shard_idx * Hl, Hl, axis=1)
+
+    if variant == "v3":
+        # ONE U matvec, no mid-step aggregation (beyond-paper)
+        z = jax.nn.sigmoid(xz + h32 @ uz + bz)
+        r = jax.nn.sigmoid(xr + h32 @ ur + br)
+        ht = jnp.tanh(xh + r * (h32 @ uh + bh))
+        h_new_local = (1 - z) * h_local + z * ht
+        return jax.lax.all_gather(h_new_local, axis, axis=1, tiled=True)
+
+    # paper math: phase 1 -> aggregate r*h -> phase 2 -> aggregate h'
+    z = jax.nn.sigmoid(xz + h32 @ uz + bz)
+    r = jax.nn.sigmoid(xr + h32 @ ur + br)
+    rh_local = r * h_local
+    rh_full = jax.lax.all_gather(rh_local, axis, axis=1, tiled=True)  # agg #1
+    ht = jnp.tanh(xh + rh_full @ uh + bh)
+    h_new_local = (1 - z) * h_local + z * ht
+    return jax.lax.all_gather(h_new_local, axis, axis=1, tiled=True)  # agg #2
+
+
+def _cascade_step(h_shard, xp_full, u_rows, b_full, *, axis: str, variant: str):
+    """Contraction-parallel step: h sharded (B,H/n), u_rows (H/n,3H) this
+    shard's contraction slice; partial sums psum'd; h' kept sharded."""
+    B, Hl = h_shard.shape
+    H = xp_full.shape[-1] // 3
+    h32 = h_shard.astype(jnp.float32)
+    idx = jax.lax.axis_index(axis)
+    if variant == "v3":
+        g = jax.lax.psum(h32 @ u_rows, axis) + b_full         # (B,3H) psum #1
+        z = jax.nn.sigmoid(xp_full[..., :H] + g[..., :H])
+        r = jax.nn.sigmoid(xp_full[..., H:2 * H] + g[..., H:2 * H])
+        ht = jnp.tanh(xp_full[..., 2 * H:] + r * g[..., 2 * H:])
+    else:
+        zr = jax.lax.psum(h32 @ u_rows[:, :2 * H], axis) + b_full[:2 * H]  # psum #1
+        z = jax.nn.sigmoid(xp_full[..., :H] + zr[..., :H])
+        r = jax.nn.sigmoid(xp_full[..., H:2 * H] + zr[..., H:])
+        rh_shard = jax.lax.dynamic_slice_in_dim(r, idx * Hl, Hl, 1) * h32
+        ht_p = jax.lax.psum(rh_shard @ u_rows[:, 2 * H:], axis)           # psum #2
+        ht = jnp.tanh(xp_full[..., 2 * H:] + ht_p + b_full[2 * H:])
+    z_l = jax.lax.dynamic_slice_in_dim(z, idx * Hl, Hl, 1)
+    ht_l = jax.lax.dynamic_slice_in_dim(ht, idx * Hl, Hl, 1)
+    return (1 - z_l) * h32 + z_l * ht_l
+
+
+def gru_sequence_sharded(params: dict, h0: jax.Array, xs: jax.Array, *,
+                         mesh: Mesh, cfg: GRUConfig, axis: str = "model"):
+    """Run the recurrence with the paper's scheme (cfg.matvec_mode) across
+    ``axis``. Returns final h (B,H) replicated. Requires H % axis_size == 0.
+
+    The decoupled input projection runs OUTSIDE the shard_map as one sharded
+    GEMM (output rows sharded for rowwise; replicated for cascade)."""
+    n = mesh.shape[axis]
+    B, T, X = xs.shape
+    H = h0.shape[-1]
+    assert H % n == 0 and 3 * H % n == 0
+
+    w, u, b = params["w"], params["u"], params["b"]
+    # gate-major reshaped views so each shard gets rows of ALL THREE gates
+    u3 = u.reshape(H, 3, H)     # (H, gate, H) -> shard last dim
+    w3 = w.reshape(X, 3, H)
+    b3 = b.reshape(3, H)
+
+    if cfg.matvec_mode == "rowwise":
+        def f(xs_l, h0_full, w_sh, u_sh, b_sh):
+            # decoupled Wx on the shard's rows: (B,T,3,H/n)
+            xp = jnp.einsum("btx,xgh->btgh", xs_l, w_sh)
+            xp = xp.reshape(B, T, -1)
+            u_flat = u_sh.reshape(H, -1)
+            b_flat = b_sh.reshape(-1)
+            idx = jax.lax.axis_index(axis)
+            step = functools.partial(_rowwise_step, axis=axis, n=n,
+                                     variant=cfg.variant)
+
+            def body(h, xp_t):
+                return step(h, xp_t, u_flat, b_flat, idx), None
+            hT, _ = jax.lax.scan(body, h0_full.astype(jnp.float32),
+                                 jnp.moveaxis(xp, 1, 0))
+            return hT
+
+        return jax.shard_map(
+            f, mesh=mesh,
+            in_specs=(P(), P(), P(None, None, axis), P(None, None, axis),
+                      P(None, axis)),
+            out_specs=P(), check_vma=False,
+        )(xs, h0, w3, u3, b3)
+
+    # cascade: contraction sharded; xs and Wx replicated
+    def f(xs_full, h0_full, u_rows, b_full):
+        xp = jnp.einsum("btx,xh->bth", xs_full, w.reshape(X, 3 * H))
+        idx = jax.lax.axis_index(axis)
+        Hl = H // n
+        h_shard = jax.lax.dynamic_slice_in_dim(
+            h0_full.astype(jnp.float32), idx * Hl, Hl, 1)
+        step = functools.partial(_cascade_step, axis=axis, variant=cfg.variant)
+
+        def body(h_l, xp_t):
+            return step(h_l, xp_t, u_rows, b_full), None
+        hT_l, _ = jax.lax.scan(body, h_shard, jnp.moveaxis(xp, 1, 0))
+        return jax.lax.all_gather(hT_l, axis, axis=1, tiled=True)
+
+    return jax.shard_map(
+        f, mesh=mesh,
+        in_specs=(P(), P(), P(axis, None), P()),
+        out_specs=P(), check_vma=False,
+    )(xs, h0, u.reshape(H, 3 * H), b)

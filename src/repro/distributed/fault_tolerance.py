@@ -1,0 +1,146 @@
+"""Fault tolerance for 1000+ node meshes: heartbeats, straggler detection,
+elastic re-meshing, and a supervised training loop.
+
+On a real multi-host deployment the signals come from the cluster manager
+(missed heartbeats, ICI link errors); here the control logic is implemented
+fully and exercised by tests with injected failures — the policy layer is
+host-side pure Python and identical either way.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclass
+class HeartbeatMonitor:
+    """Tracks per-host heartbeats; a host is dead after ``timeout_s``."""
+    timeout_s: float = 60.0
+    _last: Dict[str, float] = field(default_factory=dict)
+
+    def beat(self, host: str, now: Optional[float] = None):
+        self._last[host] = time.monotonic() if now is None else now
+
+    def dead_hosts(self, now: Optional[float] = None) -> List[str]:
+        now = time.monotonic() if now is None else now
+        return [h for h, t in self._last.items() if now - t > self.timeout_s]
+
+    def alive_hosts(self, now: Optional[float] = None) -> List[str]:
+        now = time.monotonic() if now is None else now
+        return [h for h, t in self._last.items() if now - t <= self.timeout_s]
+
+
+@dataclass
+class StragglerMonitor:
+    """Flags hosts whose step times exceed ``factor`` x the fleet median.
+
+    Mitigation hook: the supervisor can drop a straggler from the mesh
+    (treat as failed) or trigger data-rebalancing — policy is pluggable.
+    """
+    factor: float = 2.0
+    window: int = 16
+    _times: Dict[str, List[float]] = field(default_factory=dict)
+
+    def record(self, host: str, step_time_s: float):
+        self._times.setdefault(host, []).append(step_time_s)
+        self._times[host] = self._times[host][-self.window:]
+
+    def medians(self) -> Dict[str, float]:
+        return {h: float(np.median(t)) for h, t in self._times.items() if t}
+
+    def stragglers(self) -> List[str]:
+        med = self.medians()
+        if len(med) < 2:
+            return []
+        fleet = float(np.median(list(med.values())))
+        return [h for h, m in med.items() if m > self.factor * fleet]
+
+
+def largest_feasible_mesh(n_devices: int, model_parallel: int,
+                          prefer_pods: int = 1) -> Tuple[int, ...]:
+    """Elastic re-mesh policy: keep the model axis intact (parameter layout
+    survives), shrink data (and pod) parallelism to the largest multiple
+    that the survivors support. Returns (pod, data, model) or (data, model).
+    """
+    assert n_devices >= model_parallel, "cannot keep model axis"
+    rest = n_devices // model_parallel
+    if prefer_pods > 1 and rest % prefer_pods == 0 and rest >= 2 * prefer_pods:
+        return (prefer_pods, rest // prefer_pods, model_parallel)
+    return (rest, model_parallel)
+
+
+@dataclass
+class ElasticMeshManager:
+    """Owns the current mesh shape; on failure, computes the next one."""
+    total_devices: int
+    model_parallel: int
+    pods: int = 1
+    failed: set = field(default_factory=set)
+
+    def survivors(self) -> int:
+        return self.total_devices - len(self.failed)
+
+    def fail(self, device_ids: Sequence[int]):
+        self.failed.update(device_ids)
+
+    def heal(self, device_ids: Sequence[int]):
+        self.failed.difference_update(device_ids)
+
+    def current_shape(self) -> Tuple[int, ...]:
+        # shrink to the largest data multiple the survivors allow
+        n = self.survivors()
+        usable = (n // self.model_parallel) * self.model_parallel
+        if usable == 0:
+            raise RuntimeError("not enough survivors to keep the model axis")
+        return largest_feasible_mesh(usable, self.model_parallel, self.pods)
+
+
+class Supervisor:
+    """Run a training loop with checkpoint/restart on injected failures.
+
+    ``build_fn(mesh_shape) -> (step_fn, state, save_fn, restore_fn)`` lets
+    tests rebuild the jitted step for a shrunken mesh. Any exception from
+    ``step_fn`` is treated as a node failure: the supervisor marks devices
+    failed, re-meshes, restores the last committed checkpoint and resumes.
+    """
+
+    def __init__(self, mesh_mgr: ElasticMeshManager, build_fn: Callable,
+                 checkpoint_every: int = 10, max_restarts: int = 8):
+        self.mesh_mgr = mesh_mgr
+        self.build_fn = build_fn
+        self.checkpoint_every = checkpoint_every
+        self.max_restarts = max_restarts
+        self.restarts = 0
+        self.stragglers = StragglerMonitor()
+        self.heartbeats = HeartbeatMonitor()
+
+    def run(self, total_steps: int, inject: Optional[Dict[int, Sequence[int]]] = None):
+        """inject: {step: [device_ids]} failures to raise at given steps."""
+        inject = inject or {}
+        shape = self.mesh_mgr.current_shape()
+        step_fn, state, save_fn, restore_fn = self.build_fn(shape)
+        step = 0
+        history = []
+        while step < total_steps:
+            try:
+                if step in inject:
+                    self.mesh_mgr.fail(inject.pop(step))
+                    raise RuntimeError("injected node failure")
+                t0 = time.monotonic()
+                state, metrics = step_fn(state, step)
+                self.stragglers.record("host0", time.monotonic() - t0)
+                history.append((step, metrics))
+                step += 1
+                if step % self.checkpoint_every == 0:
+                    save_fn(state, step)
+            except Exception:
+                self.restarts += 1
+                if self.restarts > self.max_restarts:
+                    raise
+                shape = self.mesh_mgr.current_shape()   # shrunken mesh
+                step_fn, state, save_fn, restore_fn = self.build_fn(shape)
+                state, step = restore_fn(state)
+        return state, step, history

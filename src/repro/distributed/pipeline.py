@@ -1,0 +1,82 @@
+"""Pipeline parallelism over the ``pod`` axis: GPipe microbatch schedule as
+an explicit shard_map + collective_permute program.
+
+Stage s processes microbatch m at tick t = s + m; activations hop to the
+next stage with ``ppermute`` after every tick (total ticks = M + n - 1).
+All stages execute the same SPMD program with activity masking — this is
+the standard TPU pipeline pattern, proven to lower for the multi-pod mesh
+in the dry-run and validated numerically against sequential execution.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def pipeline_apply(stage_fn: Callable, stage_params, xs: jax.Array, *,
+                   mesh: Mesh, axis: str = "pod") -> jax.Array:
+    """Run ``stage_fn(params_s, x)`` as an n-stage pipeline.
+
+    stage_params: pytree with leading dim = n_stages on every leaf (sharded
+    over ``axis``). xs: (M, mb, d) microbatches (replicated). Returns
+    (M, mb, d) outputs (replicated).
+    """
+    n = mesh.shape[axis]
+
+    def f(params_local, xs_full):
+        # params_local leaves: (1, ...) — this stage's slice
+        p_stage = jax.tree_util.tree_map(lambda a: a[0], params_local)
+        idx = jax.lax.axis_index(axis)
+        M, mb, d = xs_full.shape
+        ticks = M + n - 1
+
+        def tick(t, carry):
+            act, outs = carry
+            m = t - idx                                   # my microbatch id
+            active = jnp.logical_and(m >= 0, m < M)
+            x_in = jnp.where(idx == 0,
+                             xs_full[jnp.clip(m, 0, M - 1)], act)
+            y = stage_fn(p_stage, x_in)
+            y = jnp.where(active, y, jnp.zeros_like(y))
+            # last stage banks its finished microbatch
+            is_last = idx == n - 1
+            slot = jnp.clip(m, 0, M - 1)
+            outs = jax.lax.cond(
+                jnp.logical_and(is_last, active),
+                lambda o: o.at[slot].set(y),
+                lambda o: o, outs)
+            # hop to the next stage
+            act_next = jax.lax.ppermute(
+                y, axis, [(i, (i + 1) % n) for i in range(n)])
+            return act_next, outs
+
+        act0 = jnp.zeros((mb, d), xs_full.dtype)
+        outs0 = jnp.zeros((M, mb, d), xs_full.dtype)
+        _, outs = jax.lax.fori_loop(0, ticks, tick, (act0, outs0))
+        # outputs live on the last stage only; replicate them
+        outs = jax.lax.psum(
+            jnp.where(idx == n - 1, outs, jnp.zeros_like(outs)), axis)
+        return outs
+
+    pspecs = jax.tree_util.tree_map(lambda _: P(axis), stage_params)
+    smapped = jax.shard_map(f, mesh=mesh, axis_names={axis},
+                            in_specs=(pspecs, P()), out_specs=P(),
+                            check_vma=False)
+    # partial-manual shard_map (auto axes remaining) requires a jit context
+    return jax.jit(smapped)(stage_params, xs)
+
+
+def sequential_reference(stage_fn: Callable, stage_params, xs: jax.Array):
+    """Oracle: apply stages one after another on every microbatch."""
+    n = jax.tree_util.tree_leaves(stage_params)[0].shape[0]
+
+    def run_one(x):
+        for s in range(n):
+            p = jax.tree_util.tree_map(lambda a: a[s], stage_params)
+            x = stage_fn(p, x)
+        return x
+
+    return jax.vmap(run_one)(xs)

@@ -1,0 +1,174 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style), with profiles.
+
+Params declare LOGICAL axes (repro.core.params.Spec); activations are
+annotated with logical tuples at block boundaries. This module resolves both
+to ``PartitionSpec``s for a concrete mesh, dropping axes that don't divide
+and de-duplicating mesh-axis use.
+
+Profiles (the paper's design study, system-wide):
+
+* ``default``   — Megatron TP over "model" (+ FSDP params over "data"):
+  column-parallel in-projections, row-parallel out-projections (psum).
+* ``sp``        — default + sequence parallelism: activations between blocks
+  shard their sequence axis over "model" (reduce-scatter/all-gather pairs).
+* ``rowwise``   — the PAPER's scheme applied to recurrent/decode matvecs:
+  output rows (GRU "gates", recurrent "hidden") sharded over "model"; every
+  shard emits finished outputs; aggregation is an all-gather of activations,
+  never a psum of partials.
+* ``cascade``   — the paper's baseline: recurrent CONTRACTION dims sharded
+  over "model" (partial sums -> psum), output rows replicated.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.params import Spec, is_spec, logical_axes
+
+Rules = Tuple[Tuple[str, Optional[Tuple[str, ...]]], ...]
+
+_BASE: Rules = (
+    # --- activations ---
+    ("batch", ("pod", "data")),
+    ("act_seq", ()),                 # () = explicitly replicated
+    ("act_embed", ()),
+    ("act_heads", ("model",)),
+    ("act_kv_heads", ("model",)),
+    ("act_mlp", ("model",)),
+    ("act_experts", ("data",)),
+    ("act_gates", ("model",)),       # row-parallel recurrent activations
+    ("act_hidden", ()),
+    # KV-cache capacity: picks up "model" when kv_heads cannot divide it
+    # (GQA kv<16) — flash-decode-style sequence sharding of the cache.
+    ("act_kv_seq", ("model",)),
+    # SP-attention fallback: shard the sequence over model when heads can't
+    # (hymba 25H, whisper 20H, xlstm 4H vs model=16)
+    ("act_seq_tp", ("model",)),
+    # --- params ---
+    ("layers", ()),
+    ("vocab", ("model",)),
+    ("embed", ("data",)),            # FSDP/ZeRO-3 weight shard
+    ("heads", ("model",)),
+    ("kv_heads", ("model",)),
+    ("head_dim", ()),
+    ("mlp", ("model",)),
+    ("experts", ("data",)),          # EP
+    ("expert_mlp", ("model",)),
+    # --- recurrent cells (paper) ---
+    ("gates", ("model",)),           # U/W output rows -> the row-wise scheme
+    ("hidden", ()),                  # contraction replicated (rowwise)
+    ("rnn_in", ()),
+    ("state", ()), ("conv", ()), ("dt", ()),
+    ("frames", ()), ("patches", ()), ("vis_embed", ()),
+    ("podwise", ("pod",)),           # per-pod local state (EF residuals)
+)
+
+
+def _with(rules: Rules, **over) -> Rules:
+    d = dict(rules)
+    for k, v in over.items():
+        d[k] = v
+    return tuple(d.items())
+
+
+PROFILES: dict = {
+    "default": _BASE,
+    # sequence parallelism: inter-block activations shard seq over model
+    "sp": _with(_BASE, act_seq=("model",)),
+    # paper's row-wise scheme (it IS the default for recurrent axes; this
+    # profile additionally row-shards decode-time activations)
+    "rowwise": _BASE,
+    # paper's baseline: contraction-parallel recurrence (cascade + psum)
+    "cascade": _with(_BASE, gates=(), hidden=("model",),
+                     act_gates=(), act_hidden=()),
+}
+
+
+@dataclass(frozen=True)
+class ShardCtx:
+    """Everything a model needs to place itself on a mesh.
+
+    ``manual`` lists mesh axes already consumed by an enclosing shard_map
+    (e.g. the pod-explicit trainer): sharding constraints inside may only
+    reference the remaining auto axes."""
+    mesh: Optional[Mesh] = None
+    profile: str = "default"
+    manual: Tuple[str, ...] = ()
+
+    @property
+    def rules(self) -> Rules:
+        return PROFILES[self.profile]
+
+    def axis_size(self, name: str) -> int:
+        if self.mesh is None or name not in self.mesh.axis_names:
+            return 1
+        return self.mesh.shape[name]
+
+
+NO_SHARD = ShardCtx()
+
+
+def resolve_pspec(axes: Sequence[Optional[str]], shape: Sequence[int],
+                  ctx: ShardCtx) -> P:
+    """Logical axes tuple -> PartitionSpec, with divisibility + dedup guards."""
+    if ctx.mesh is None:
+        return P()
+    rules = dict(ctx.rules)
+    used: set = set()
+    out = []
+    for dim, name in zip(shape, axes):
+        entry: Tuple[str, ...] = ()
+        if name is not None:
+            entry = tuple(rules.get(name, ()) or ())
+        # keep only axes present in this mesh, unused so far, and dividing
+        picked = []
+        size = 1
+        for ax in entry:
+            if ax not in ctx.mesh.axis_names or ax in used or ax in ctx.manual:
+                continue
+            if dim % (size * ctx.mesh.shape[ax]) != 0:
+                continue
+            picked.append(ax)
+            size *= ctx.mesh.shape[ax]
+        used.update(picked)
+        if not picked:
+            out.append(None)
+        elif len(picked) == 1:
+            out.append(picked[0])
+        else:
+            out.append(tuple(picked))
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def param_pspecs(specs, ctx: ShardCtx):
+    """Spec tree -> PartitionSpec tree."""
+    return jax.tree_util.tree_map(
+        lambda s: resolve_pspec(s.axes, s.shape, ctx), specs, is_leaf=is_spec)
+
+
+def param_shardings(specs, ctx: ShardCtx):
+    """Spec tree -> NamedSharding tree (jit in_shardings for the dry-run)."""
+    assert ctx.mesh is not None
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(ctx.mesh, resolve_pspec(s.axes, s.shape, ctx)),
+        specs, is_leaf=is_spec)
+
+
+def constrain(x: jax.Array, axes: Sequence[Optional[str]],
+              ctx: ShardCtx) -> jax.Array:
+    """with_sharding_constraint via logical axes; no-op without a mesh."""
+    if ctx.mesh is None:
+        return x
+    ps = resolve_pspec(axes, x.shape, ctx)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, ps))
+
+
+def sharding_for(x_shape: Sequence[int], axes: Sequence[Optional[str]],
+                 ctx: ShardCtx) -> NamedSharding:
+    assert ctx.mesh is not None
+    return NamedSharding(ctx.mesh, resolve_pspec(axes, x_shape, ctx))

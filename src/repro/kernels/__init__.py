@@ -1,0 +1,18 @@
+"""Pallas TPU kernels (validated with interpret=True on CPU).
+
+The paper's compute hot-spot IS the kernel story: latency-constrained
+recurrent matvecs with fused gate epilogues. Each kernel is a subpackage:
+``kernel.py`` (pl.pallas_call + explicit BlockSpec VMEM tiling),
+``ops.py`` (jit'd public wrapper), ``ref.py`` (pure-jnp oracle).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+
+@functools.cache
+def on_cpu() -> bool:
+    """True when the default backend is CPU -> kernels run interpret=True."""
+    return jax.default_backend() == "cpu"

@@ -1,0 +1,4 @@
+from repro.kernels.decode_attn import ops, ref
+from repro.kernels.decode_attn.kernel import flash_decode
+
+__all__ = ["ops", "ref", "flash_decode"]

@@ -1,0 +1,87 @@
+"""Flash-decode Pallas kernel: one query token vs a ring-buffer KV cache.
+
+The §Perf H3 endgame: at decode, HBM traffic should be exactly one read of
+the cache block sweep — scores/probabilities never leave VMEM. Grid =
+(batch, kv_heads, cache_blocks), cache axis minor; online-softmax running
+stats live in VMEM scratch across the block sweep; the output tile is
+finalized on the last block. Validity (ring occupancy + sliding window) is
+precomputed host-side as a (1, C) mask so the kernel body is pure MAC +
+epilogue — the fused-aggregation idea of the paper applied to attention.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, m_s, l_s, acc_s, *,
+            scale: float):
+    c = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(c == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, _NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    q = q_ref[...][0, 0].astype(jnp.float32) * scale       # (G, D)
+    k = k_ref[...][0, 0].astype(jnp.float32)               # (bc, D)
+    v = v_ref[...][0, 0].astype(jnp.float32)               # (bc, D)
+    mask = mask_ref[...][0] != 0                           # (bc,)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # (G, bc)
+    s = jnp.where(mask[None, :], s, _NEG_INF)
+    m_prev, l_prev = m_s[...], l_s[...]
+    m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    p = jnp.where(mask[None, :], p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_s[...] = alpha * l_prev + p.sum(-1, keepdims=True)
+    acc_s[...] = acc_s[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_s[...] = m_new
+
+    @pl.when(c == nc - 1)
+    def _fin():
+        l = l_s[...]
+        o_ref[...] = (acc_s[...] / jnp.where(l == 0.0, 1.0, l)
+                      )[None, None].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "interpret"))
+def flash_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                 mask: jax.Array, *, block_c: int = 512,
+                 interpret: bool = False) -> jax.Array:
+    """q: (B, Hkv, G, D); k/v cache: (B, Hkv, C, D); mask: (C,) int8/bool
+    (1 = valid slot) -> (B, Hkv, G, D)."""
+    B, Hkv, G, D = q.shape
+    C = k_cache.shape[2]
+    bc = min(block_c, C)
+    assert C % bc == 0, (C, bc)
+    scale = 1.0 / (D ** 0.5)
+    mask2 = mask.astype(jnp.int8)[None, :]                 # (1, C)
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale),
+        grid=(B, Hkv, C // bc),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, c: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bc, D), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, bc, D), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, bc), lambda b, h, c: (0, c)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, c: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k_cache, v_cache, mask2)

@@ -1,0 +1,27 @@
+"""Public wrapper for the flash-decode kernel (matches the shapes used by
+``models.attention.decode_attend``)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import on_cpu
+from repro.kernels.decode_attn.kernel import flash_decode
+
+
+def decode_attend_pallas(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                         slot_pos: jax.Array, pos: jax.Array,
+                         window: int = 0, block_c: int = 512) -> jax.Array:
+    """q: (B, Hkv, G, D); caches (B, Hkv, C, D); slot_pos (C,) absolute
+    positions (-1 empty) -> (B, Hkv, G, D) fp32."""
+    valid = slot_pos >= 0
+    if window > 0:
+        valid = valid & (slot_pos > pos - window)
+    valid = valid & (slot_pos <= pos)
+    C = k_cache.shape[2]
+    bc = block_c
+    while C % bc:
+        bc //= 2
+    out = flash_decode(q, k_cache, v_cache, valid, block_c=max(bc, 1),
+                       interpret=on_cpu())
+    return out.astype(jnp.float32)

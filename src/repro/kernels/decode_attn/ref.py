@@ -1,0 +1,15 @@
+"""Oracle: masked single-token attention against the cache (fp32)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_decode_ref(q, k_cache, v_cache, mask):
+    """q: (B,Hkv,G,D); cache: (B,Hkv,C,D); mask: (C,) -> (B,Hkv,G,D)."""
+    D = q.shape[-1]
+    s = jnp.einsum("bhgd,bhcd->bhgc", q.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) / (D ** 0.5)
+    s = jnp.where(mask[None, None, None, :] != 0, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgc,bhcd->bhgd", w, v_cache.astype(jnp.float32))

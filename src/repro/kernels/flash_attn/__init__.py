@@ -1,0 +1,4 @@
+from repro.kernels.flash_attn import ops, ref
+from repro.kernels.flash_attn.kernel import flash_attention
+
+__all__ = ["ops", "ref", "flash_attention"]

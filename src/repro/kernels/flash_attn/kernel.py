@@ -1,0 +1,121 @@
+"""Blocked causal attention (flash-style) Pallas kernel — prefill path.
+
+Online-softmax forward: grid = (batch, q_heads, q_blocks, kv_blocks), kv
+minor. Running max / denominator / output accumulator live in VMEM scratch
+and persist across the kv sweep (TPU grids are sequential); the output block
+is finalized on the last kv step. GQA is expressed in the K/V ``index_map``
+(q-head -> kv-head integer division), sliding-window and causal masking via
+block-local index arithmetic, with fully-masked kv blocks skipped by
+``pl.when`` (they still iterate but do no FLOPs).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *,
+                 scale: float, block_q: int, block_k: int, causal: bool,
+                 window: int, kv_len: int):
+    i, j = pl.program_id(2), pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, _NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    q_pos = i * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+
+    # block-level skip: with causal masking, kv blocks entirely above the
+    # diagonal (or entirely outside the window) contribute nothing.
+    run = True
+    if causal:
+        run = (j * block_k) <= (i * block_q + block_q - 1)
+    if window > 0:
+        in_win = (j * block_k + block_k - 1) >= (i * block_q - window + 1)
+        run = jnp.logical_and(run, in_win) if causal else in_win
+
+    @pl.when(run if isinstance(run, jax.Array) else (jnp.bool_(run)))
+    def _compute():
+        q = q_ref[...][0, 0].astype(jnp.float32) * scale       # (bq, D)
+        k = k_ref[...][0, 0].astype(jnp.float32)               # (bk, D)
+        v = v_ref[...][0, 0].astype(jnp.float32)               # (bk, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (bq, bk)
+        mask = k_pos < kv_len
+        if causal:
+            mask = jnp.logical_and(mask, q_pos >= k_pos)
+        if window > 0:
+            mask = jnp.logical_and(mask, q_pos - k_pos < window)
+        s = jnp.where(mask, s, _NEG_INF)
+        m_prev, l_prev = m_s[...], l_s[...]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)             # (bq, 1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc_s[...] = acc_s[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_s[...] = m_new
+        l_s[...] = l_new
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        l = l_s[...]
+        o = acc_s[...] / jnp.where(l == 0.0, 1.0, l)
+        o_ref[...] = o[None, None].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, Hq, Sq, D), k/v: (B, Hkv, Sk, D) -> (B, Hq, Sq, D).
+
+    GQA when Hq > Hkv (Hq % Hkv == 0). ``window`` > 0 = sliding-window
+    causal attention (kv positions within [q-window+1, q]).
+    """
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    assert Hq % Hkv == 0
+    group = Hq // Hkv
+    bq, bk = min(block_q, Sq), min(block_k, Sk)
+    # pad sequence dims up to block multiples
+    Sq_p, Sk_p = -(-Sq // bq) * bq, -(-Sk // bk) * bk
+    if Sq_p != Sq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, Sq_p - Sq), (0, 0)))
+    if Sk_p != Sk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, Sk_p - Sk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, Sk_p - Sk), (0, 0)))
+    scale = 1.0 / (D ** 0.5)
+    out = pl.pallas_call(
+        functools.partial(_attn_kernel, scale=scale, block_q=bq, block_k=bk,
+                          causal=causal, window=window, kv_len=Sk),
+        grid=(B, Hq, Sq_p // bq, Sk_p // bk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h // group, j, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sq_p, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :Sq]

@@ -1,0 +1,13 @@
+"""Public wrapper for the flash attention kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import on_cpu
+from repro.kernels.flash_attn.kernel import flash_attention
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
+              window: int = 0, block_q: int = 128, block_k: int = 128) -> jax.Array:
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           block_q=block_q, block_k=block_k, interpret=on_cpu())

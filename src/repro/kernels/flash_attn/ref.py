@@ -1,0 +1,29 @@
+"""Naive fp32 attention oracle (materializes the score matrix)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q, k, v, causal: bool = True, window: int = 0):
+    """q: (B,Hq,Sq,D), k/v: (B,Hkv,Sk,D) -> (B,Hq,Sq,D), GQA-aware."""
+    q = jnp.asarray(q, jnp.float32)
+    k = jnp.asarray(k, jnp.float32)
+    v = jnp.asarray(v, jnp.float32)
+    B, Hq, Sq, D = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k) / np.sqrt(D)
+    qi = jnp.arange(Sq)[:, None]
+    ki = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= qi >= ki
+    if window > 0:
+        mask &= (qi - ki) < window
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jnp.where(mask.any(-1, keepdims=True), jnp.exp(s - s.max(-1, keepdims=True)), 0.0)
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)

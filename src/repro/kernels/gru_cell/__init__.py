@@ -1,0 +1,4 @@
+from repro.kernels.gru_cell import ops, ref
+from repro.kernels.gru_cell.kernel import gru_step_blocked, gru_step_fused
+
+__all__ = ["ops", "ref", "gru_step_fused", "gru_step_blocked"]

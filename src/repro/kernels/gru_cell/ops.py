@@ -1,0 +1,23 @@
+"""Public wrapper: dispatches fused vs blocked on the VMEM working set."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import on_cpu
+from repro.kernels.gru_cell.kernel import gru_step_blocked, gru_step_fused
+
+# single-block path budget: u (H,3H) + h/x/scratch must fit comfortably.
+_FUSED_VMEM_BUDGET = 12 * 1024 * 1024
+
+
+def gru_step_pallas(h: jax.Array, x_proj: jax.Array, u: jax.Array, b: jax.Array,
+                    variant: str = "v1", block_n: int = 256) -> jax.Array:
+    B, H = h.shape
+    working = (3 * H * H + 4 * B * H + 3 * B * H) * u.dtype.itemsize
+    if working <= _FUSED_VMEM_BUDGET or H % block_n:
+        return gru_step_fused(h, x_proj, u, b, variant=variant, interpret=on_cpu())
+    if variant == "v3":
+        # v3's single stacked matvec has no cross-phase dependency; the
+        # blocked path only implements paper math -> fall back to fused.
+        return gru_step_fused(h, x_proj, u, b, variant=variant, interpret=on_cpu())
+    return gru_step_blocked(h, x_proj, u, b, block_n=block_n, interpret=on_cpu())

@@ -1,0 +1,25 @@
+"""Pure-jnp fp32 oracle for the fused GRU step kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gru_step_ref(h, x_proj, u, b, variant: str = "v1"):
+    """h: (B,H), x_proj: (B,3H) = Wx already applied, u: (H,3H), b: (3H,)."""
+    h = jnp.asarray(h, jnp.float32)
+    xp = jnp.asarray(x_proj, jnp.float32)
+    u = jnp.asarray(u, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    H = h.shape[-1]
+    xz, xr, xh = xp[..., :H], xp[..., H:2 * H], xp[..., 2 * H:]
+    if variant == "v3":
+        ua = h @ u + b
+        z = jax.nn.sigmoid(xz + ua[..., :H])
+        r = jax.nn.sigmoid(xr + ua[..., H:2 * H])
+        ht = jnp.tanh(xh + r * ua[..., 2 * H:])
+    else:
+        z = jax.nn.sigmoid(xz + h @ u[:, :H] + b[:H])
+        r = jax.nn.sigmoid(xr + h @ u[:, H:2 * H] + b[H:2 * H])
+        ht = jnp.tanh(xh + (r * h) @ u[:, 2 * H:] + b[2 * H:])
+    return (1 - z) * h + z * ht

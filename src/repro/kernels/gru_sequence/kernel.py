@@ -1,0 +1,77 @@
+"""Whole-sequence GRU Pallas kernel: grid = time, U pinned in VMEM.
+
+The paper's "row reuse": after the first pass, the vector (and here the
+recurrent matrix U) lives in tile-local memory, so subsequent steps are
+bounded by local-memory bandwidth, not streaming. TPU translation: the
+sequence runs as ONE ``pallas_call`` whose grid axis is time. U's
+``index_map`` is constant, so the Pallas pipeline fetches it from HBM
+exactly once; the hidden state is carried in a VMEM scratch buffer across
+grid steps (TPU grids iterate sequentially). Per step, only the
+(1, B, 3H) slice of the precomputed input projection streams in — the
+decoupled ``W.x`` path feeding the free-running recurrence.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _dot(a, b):
+    return jax.lax.dot_general(a, b, (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+
+
+def _seq_kernel(h0_ref, xp_ref, u_ref, b_ref, o_ref, h_s, *, variant: str):
+    t = pl.program_id(0)
+    H = h0_ref.shape[-1]
+
+    @pl.when(t == 0)
+    def _init():
+        h_s[...] = h0_ref[...].astype(jnp.float32)
+
+    h = h_s[...]
+    u = u_ref[...]
+    b = b_ref[...].astype(jnp.float32)                    # (1, 3H)
+    xp = xp_ref[...][0].astype(jnp.float32)               # (B, 3H) this step
+    xz, xr, xh = xp[:, :H], xp[:, H:2 * H], xp[:, 2 * H:]
+    if variant == "v3":
+        ua = _dot(h.astype(u.dtype), u) + b
+        z = jax.nn.sigmoid(xz + ua[:, :H])
+        r = jax.nn.sigmoid(xr + ua[:, H:2 * H])
+        ht = jnp.tanh(xh + r * ua[:, 2 * H:])
+    else:
+        zr = _dot(h.astype(u.dtype), u[:, :2 * H]) + b[:, :2 * H]
+        z = jax.nn.sigmoid(xz + zr[:, :H])
+        r = jax.nn.sigmoid(xr + zr[:, H:])
+        ht = jnp.tanh(xh + _dot((r * h).astype(u.dtype), u[:, 2 * H:]) + b[:, 2 * H:])
+    h_new = (1.0 - z) * h + z * ht
+    h_s[...] = h_new
+    o_ref[...] = h_new[None].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("variant", "interpret"))
+def gru_sequence_kernel(h0: jax.Array, x_proj: jax.Array, u: jax.Array,
+                        b: jax.Array, *, variant: str = "v1",
+                        interpret: bool = False) -> jax.Array:
+    """h0: (B,H), x_proj: (T,B,3H) time-major precomputed Wx, u: (H,3H),
+    b: (3H,) -> all hidden states (T,B,H)."""
+    T, B, H3 = x_proj.shape
+    H = H3 // 3
+    return pl.pallas_call(
+        functools.partial(_seq_kernel, variant=variant),
+        grid=(T,),
+        in_specs=[
+            pl.BlockSpec((B, H), lambda t: (0, 0)),        # h0: resident
+            pl.BlockSpec((1, B, 3 * H), lambda t: (t, 0, 0)),  # stream step t
+            pl.BlockSpec((H, 3 * H), lambda t: (0, 0)),    # U: fetched ONCE
+            pl.BlockSpec((1, 3 * H), lambda t: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, B, H), lambda t: (t, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((T, B, H), h0.dtype),
+        scratch_shapes=[pltpu.VMEM((B, H), jnp.float32)],  # carried hidden state
+        interpret=interpret,
+    )(h0, x_proj, u, b[None, :])

@@ -1,0 +1,27 @@
+"""Public wrapper: run a GRU over a sequence with the Pallas backend.
+
+Interface matches ``repro.core.gru.gru_sequence`` (called from there when
+``cfg.backend == "pallas"``). The input projection (decoupled W.x) is one
+MXU GEMM outside the kernel; the kernel owns only the recurrent path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import on_cpu
+from repro.kernels.gru_sequence.kernel import gru_sequence_kernel
+
+
+def gru_sequence_pallas(params: dict, h0: jax.Array, xs: jax.Array, *, cfg,
+                        return_all: bool = False):
+    """params: {w,u,b}; xs: (B,T,X) -> (h_T, optionally (B,T,H))."""
+    w, u, b = params["w"], params["u"], params["b"]
+    xp = xs @ w                                    # (B,T,3H): the decoupled GEMM
+    xp_t = jnp.moveaxis(xp, -2, 0)                 # time-major (T,B,3H)
+    hs = gru_sequence_kernel(h0, xp_t, u, b, variant=cfg.variant,
+                             interpret=on_cpu())
+    hT = hs[-1]
+    if return_all:
+        return hT, jnp.moveaxis(hs, 0, -2)
+    return hT, None

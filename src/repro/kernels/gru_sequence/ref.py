@@ -1,0 +1,16 @@
+"""Oracle for the whole-sequence kernel: step-by-step fp32 recurrence."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.gru_cell.ref import gru_step_ref
+
+
+def gru_sequence_ref(h0, x_proj, u, b, variant: str = "v1"):
+    """h0: (B,H), x_proj: (T,B,3H) -> (T,B,H)."""
+    h = jnp.asarray(h0, jnp.float32)
+    out = []
+    for t in range(x_proj.shape[0]):
+        h = gru_step_ref(h, x_proj[t], u, b, variant=variant)
+        out.append(h)
+    return jnp.stack(out, axis=0)

@@ -1,0 +1,4 @@
+from repro.kernels.rowwise_matvec import ops, ref
+from repro.kernels.rowwise_matvec.kernel import cascade_matmul, rowwise_matmul
+
+__all__ = ["ops", "ref", "rowwise_matmul", "cascade_matmul"]

@@ -1,0 +1,99 @@
+"""Row-wise (output-stationary) matvec/matmul Pallas kernel — the paper's
+core tiling idea, TPU-native.
+
+The AIE design gives each tile a set of WHOLE MATRIX ROWS; the input vector
+is broadcast once and then reused from tile-local memory ("row reuse"), so
+each tile emits FINISHED output elements with no cross-tile reduction.
+
+TPU translation: a Pallas grid over output-row blocks. The activation block's
+``index_map`` is constant in the row-block coordinate, so the Pallas pipeline
+keeps it resident in VMEM across the whole sweep (the row-reuse), while each
+grid step streams in only its own rows of W. No accumulator is ever shared
+between grid steps — output-stationary, like the paper.
+
+The ``cascade`` kernel is the baseline the paper argues against: the grid
+walks the CONTRACTION dimension and partial sums accumulate sequentially in
+the output block across grid steps (the AIE cascade-stream pipeline).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rowwise_kernel(x_ref, w_ref, o_ref):
+    # x: (bb, K) resident across row blocks; w: (K, bn) this block's rows
+    # (stored column-major as (K, N) so "rows of W^T" = columns here).
+    o_ref[...] = jax.lax.dot_general(
+        x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_n", "interpret"))
+def rowwise_matmul(x: jax.Array, w: jax.Array, *, block_b: int = 0,
+                   block_n: int = 128, interpret: bool = False) -> jax.Array:
+    """y = x @ w, output-stationary grid. x: (B, K), w: (K, N) -> (B, N)."""
+    B, K = x.shape
+    K2, N = w.shape
+    assert K == K2
+    bb = block_b or B
+    bn = min(block_n, N)
+    assert B % bb == 0 and N % bn == 0, (B, bb, N, bn)
+    return pl.pallas_call(
+        _rowwise_kernel,
+        grid=(B // bb, N // bn),
+        in_specs=[
+            # constant in j -> x stays in VMEM across the row sweep
+            pl.BlockSpec((bb, K), lambda i, j: (i, 0)),
+            pl.BlockSpec((K, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bb, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, N), x.dtype),
+        interpret=interpret,
+    )(x, w)
+
+
+def _cascade_kernel(x_ref, w_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_n", "block_k", "interpret"))
+def cascade_matmul(x: jax.Array, w: jax.Array, *, block_b: int = 0,
+                   block_n: int = 128, block_k: int = 128,
+                   interpret: bool = False) -> jax.Array:
+    """Baseline: contraction-blocked with sequential accumulation (cascade).
+
+    The output block is revisited across the k axis of the grid; partial sums
+    accumulate in place (fp32 accumulation via the output dtype upcast in
+    ops.py when x is low-precision).
+    """
+    B, K = x.shape
+    K2, N = w.shape
+    assert K == K2
+    bb = block_b or B
+    bn, bk = min(block_n, N), min(block_k, K)
+    assert B % bb == 0 and N % bn == 0 and K % bk == 0
+    return pl.pallas_call(
+        _cascade_kernel,
+        grid=(B // bb, N // bn, K // bk),
+        in_specs=[
+            pl.BlockSpec((bb, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bb, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, N), jnp.float32),
+        interpret=interpret,
+    )(x, w)

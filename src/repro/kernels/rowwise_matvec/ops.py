@@ -1,0 +1,60 @@
+"""Jit'd public wrappers for the rowwise/cascade matvec kernels.
+
+On CPU (tests/benches) the kernels run with ``interpret=True``; on TPU the
+same ``pallas_call`` lowers to Mosaic. ``auto_blocks`` picks MXU-aligned
+block shapes that keep the working set within a VMEM budget.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import on_cpu
+from repro.kernels.rowwise_matvec.kernel import cascade_matmul, rowwise_matmul
+
+
+def auto_blocks(B: int, K: int, N: int, itemsize: int = 4,
+                vmem_budget: int = 8 * 1024 * 1024) -> Tuple[int, int, int]:
+    """(block_b, block_n, block_k): MXU-aligned (multiples of 128 where the
+    dim allows), sized so x-block + w-block + out-block fit the budget."""
+    def _align(n):
+        for c in (512, 256, 128, 64, 32, 16, 8):
+            if n % c == 0 and c <= n:
+                return c
+        return n
+    bn = _align(N)
+    bk = _align(K)
+    bb = B
+    while bb > 8 and (bb * K + K * bn + bb * bn) * itemsize > vmem_budget:
+        bb //= 2
+    while bn > 128 and (bb * K + K * bn + bb * bn) * itemsize > vmem_budget:
+        bn //= 2
+    return bb, bn, bk
+
+
+def rowwise(x: jax.Array, w: jax.Array, block_n: int = 0) -> jax.Array:
+    """Output-stationary y = x @ w (the paper's row-wise scheme)."""
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[None]
+    B, K = x.shape
+    _, N = w.shape
+    bb, bn, _ = auto_blocks(B, K, N, x.dtype.itemsize)
+    y = rowwise_matmul(x, w, block_b=bb, block_n=block_n or bn,
+                       interpret=on_cpu())
+    return y[0] if squeeze else y
+
+
+def cascade(x: jax.Array, w: jax.Array, block_k: int = 0) -> jax.Array:
+    """Contraction-blocked sequential-accumulation baseline."""
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[None]
+    B, K = x.shape
+    _, N = w.shape
+    bb, bn, bk = auto_blocks(B, K, N, x.dtype.itemsize)
+    y = cascade_matmul(x, w, block_b=bb, block_n=bn, block_k=block_k or bk,
+                       interpret=on_cpu()).astype(x.dtype)
+    return y[0] if squeeze else y

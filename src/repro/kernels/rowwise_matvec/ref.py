@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the rowwise/cascade matvec kernels."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w):
+    """fp32 dense reference: y = x @ w."""
+    return jnp.asarray(x, jnp.float32) @ jnp.asarray(w, jnp.float32)

@@ -1,0 +1,211 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, record memory/cost/collective analysis.
+
+For each cell the lowered program is the REAL step the system runs:
+  train_*    -> jitted train_step (fwd+bwd+AdamW, microbatchable)
+  prefill_*  -> jitted prefill (full forward + cache build)
+  decode_* / long_* -> jitted serve_step (one token against a full cache)
+
+Inputs are ShapeDtypeStructs built from the same Spec trees the runtime
+uses — no allocation ever happens for the full-size configs. Results land
+in experiments/dryrun/<arch>__<shape>__<mesh>.json (resumable: existing
+files are skipped unless --force).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod-only|--single-pod-only]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import ALL_ARCHS, TrainConfig, get_config
+from repro.configs.shapes import GRU_SHAPES, SHAPES, shape_skip_reason
+from repro.core.params import abstract_params
+from repro.distributed.sharding import ShardCtx, param_shardings
+from repro.launch.hloparse import parse_collectives
+from repro.launch.mesh import make_production_mesh
+from repro.models import api as mapi
+from repro.train import trainer
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def _shapes_for(arch: str):
+    return GRU_SHAPES if arch == "gru-jet" else SHAPES
+
+
+def build_lowerable(arch: str, shape_name: str, ctx: ShardCtx,
+                    profile: str = "default", param_dtype: str | None = None):
+    """Returns (jitted_fn, abstract_args tuple)."""
+    cfg = get_config(arch)
+    if param_dtype:
+        cfg = cfg.replace(param_dtype=param_dtype)
+    shape = _shapes_for(arch)[shape_name]
+    A = mapi.get_api(cfg)
+    bspecs = mapi.input_specs(cfg, shape)
+    batch_abs = abstract_params(bspecs, "float32")
+    batch_sh = param_shardings(bspecs, ctx)
+
+    if shape.kind == "train":
+        tcfg = TrainConfig()
+        sspecs = trainer.state_specs(cfg, tcfg)
+        state_abs = abstract_params(sspecs, cfg.param_dtype)
+        state_sh = param_shardings(sspecs, ctx)
+        step = trainer.make_train_step(cfg, tcfg, ctx)
+        fn = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                     donate_argnums=(0,))
+        return fn, (state_abs, batch_abs), cfg, shape
+
+    pspecs = A.specs(cfg)
+    params_abs = abstract_params(pspecs, cfg.param_dtype)
+    params_sh = param_shardings(pspecs, ctx)
+
+    if shape.kind == "prefill":
+        def prefill_fn(params, batch):
+            return A.prefill(params, cfg, batch, ctx)
+        fn = jax.jit(prefill_fn, in_shardings=(params_sh, batch_sh))
+        return fn, (params_abs, batch_abs), cfg, shape
+
+    # decode: abstract cache with capacity = context length
+    cspecs = A.cache_specs(cfg, shape.global_batch, shape.seq_len)
+    cache_abs = abstract_params(cspecs, cfg.param_dtype)
+    cache_sh = param_shardings(cspecs, ctx)
+    tok_abs = jax.tree_util.tree_leaves(batch_abs)[0]
+
+    def decode_fn(params, cache, tok):
+        return A.decode_step(params, cfg, cache, tok, ctx)
+
+    tok_sh = jax.tree_util.tree_leaves(batch_sh)[0]
+    fn = jax.jit(decode_fn, in_shardings=(params_sh, cache_sh, tok_sh),
+                 donate_argnums=(1,))
+    return fn, (params_abs, cache_abs, tok_abs), cfg, shape
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             profile: str = "default", param_dtype: str | None = None) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cfg = get_config(arch)
+    shape = _shapes_for(arch)[shape_name]
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "profile": profile, "kind": shape.kind,
+           "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+           "status": "ok"}
+    skip = shape_skip_reason(cfg, shape) if arch != "gru-jet" else None
+    if skip:
+        rec["status"] = "skipped"
+        rec["skip_reason"] = skip
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ctx = ShardCtx(mesh=mesh, profile=profile)
+    t0 = time.time()
+    fn, args, cfg, shape = build_lowerable(arch, shape_name, ctx, profile,
+                                           param_dtype)
+    lowered = fn.lower(*args)
+    rec["lower_s"] = round(time.time() - t0, 1)
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t0, 1)
+
+    ma = compiled.memory_analysis()
+    if ma is not None:
+        rec["memory"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "peak_hbm_per_device": int(ma.argument_size_in_bytes
+                                       + ma.output_size_in_bytes
+                                       + ma.temp_size_in_bytes
+                                       - ma.alias_size_in_bytes),
+        }
+    ca = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+    stats = parse_collectives(txt)
+    rec["cost"] = {
+        # trip-count-weighted per-device numbers from the HLO analyzer
+        # (XLA-CPU cost_analysis counts while bodies once — see hloparse)
+        "flops": stats.flops,
+        "hbm_bytes": stats.hbm_bytes,
+        "xla_flops_unweighted": float(ca.get("flops", 0.0)),
+        "xla_bytes_unweighted": float(ca.get("bytes accessed", 0.0)),
+    }
+    rec["collectives"] = {
+        "per_device_bytes": stats.total_coll_bytes,
+        "by_kind_bytes": dict(stats.coll_bytes),
+        "counts": {k: int(v) for k, v in stats.coll_counts.items()},
+        "unknown_trip_loops": stats.unknown_trip_loops,
+    }
+    rec["hlo_chars"] = len(txt)
+    print(compiled.memory_analysis())
+    return rec
+
+
+def cell_path(arch, shape_name, multi_pod, profile="default"):
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    suffix = "" if profile == "default" else f"__{profile}"
+    return os.path.join(OUT_DIR, f"{arch}__{shape_name}__{mesh_name}{suffix}.json")
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None)
+    p.add_argument("--shape", default=None)
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--multi-pod-only", action="store_true")
+    p.add_argument("--single-pod-only", action="store_true")
+    p.add_argument("--profile", default="default")
+    p.add_argument("--param-dtype", default=None)
+    p.add_argument("--force", action="store_true")
+    args = p.parse_args()
+    os.makedirs(OUT_DIR, exist_ok=True)
+
+    meshes = [False, True]
+    if args.multi_pod_only:
+        meshes = [True]
+    if args.single_pod_only:
+        meshes = [False]
+
+    cells = []
+    archs = ALL_ARCHS if (args.all or not args.arch) else [args.arch]
+    for arch in archs:
+        shapes = [args.shape] if args.shape else list(_shapes_for(arch))
+        for s in shapes:
+            for mp in meshes:
+                cells.append((arch, s, mp))
+
+    failures = 0
+    for arch, s, mp in cells:
+        path = cell_path(arch, s, mp, args.profile)
+        if os.path.exists(path) and not args.force:
+            print(f"skip (cached) {path}")
+            continue
+        label = f"{arch} x {s} x {'2x16x16' if mp else '16x16'}"
+        print(f"=== {label} ===", flush=True)
+        try:
+            rec = run_cell(arch, s, mp, args.profile, args.param_dtype)
+        except Exception as e:
+            failures += 1
+            rec = {"arch": arch, "shape": s,
+                   "mesh": "pod2x16x16" if mp else "pod16x16",
+                   "profile": args.profile, "status": "error",
+                   "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-3000:]}
+            print(f"FAILED {label}: {e}", flush=True)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        if rec["status"] == "ok":
+            print(f"ok in {rec['compile_s']}s  flops={rec['cost']['flops']:.3g} "
+                  f"coll={rec['collectives']['per_device_bytes']:.3g}B", flush=True)
+    print(f"done, failures={failures}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

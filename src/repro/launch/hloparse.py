@@ -1,0 +1,392 @@
+"""Trip-count-weighted accounting over post-SPMD optimized HLO text.
+
+XLA-CPU's ``compiled.cost_analysis()`` counts ``while`` bodies ONCE
+(verified: a 10-iteration scanned matmul reports the flops of one), so
+scan-over-layers programs would be undercounted ~L-fold. This module
+re-derives the three roofline inputs from the HLO text itself:
+
+* ``flops``      — 2 * prod(output dims) * prod(contraction dims) for every
+  ``dot``, recursing through fusion/control-flow computations and
+  multiplying by ``known_trip_count`` on while loops.
+* ``hbm_bytes``  — operand + output bytes of every top-level instruction
+  (post-fusion boundaries = HBM traffic); fusion-internal instructions are
+  NOT counted (they live in registers/VMEM); while bodies count per trip.
+* ``collectives`` — operand bytes of all-reduce / all-gather /
+  reduce-scatter / all-to-all / collective-permute, per kind, trip-weighted.
+
+Operand shapes are resolved through a per-computation symbol table
+(instruction name -> result shape), since this dialect prints operands
+untyped (``dot(%x.1, %w.1)``).
+
+All shapes in ``compiled.as_text()`` are PER-DEVICE (the SPMD partition),
+so every number here is per-chip; the roofline layer converts to the
+assignment's global formulas.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_FREE_OPS = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+             "after-all", "partition-id", "replica-id", "iota", "copy-start",
+             "copy-done"}
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+# out-shape may be a tuple containing /*index=N*/ comments — match lazily up
+# to the first " op(" token.
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_CALLED_RE = re.compile(r"(?:to_apply|body|condition|calls)=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_COMP_DEF_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\((.*)\)\s*->")
+
+
+def _shapes_in(s: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(s):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _bytes_of(shapes) -> int:
+    total = 0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _operand_names(args_str: str) -> List[str]:
+    """Names inside op( ... ) at paren depth 0, attrs stripped."""
+    out, depth, cur = [], 0, []
+    for ch in args_str:
+        if ch == "(":
+            depth += 1
+            cur.append(ch)
+        elif ch == ")":
+            if depth == 0:
+                break
+            depth -= 1
+            cur.append(ch)
+        elif ch == "," and depth == 0:
+            out.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur).strip())
+    names = []
+    for tok in out:
+        m = re.search(r"%?([\w.\-]+)\s*$", tok)
+        if m:
+            names.append(m.group(1))
+    return names
+
+
+@dataclass
+class Account:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes: Dict[str, float] = field(default_factory=dict)
+    coll_counts: Dict[str, float] = field(default_factory=dict)
+    unknown_trip_loops: int = 0
+
+    def add(self, other: "Account", mult: float = 1.0, with_bytes: bool = True):
+        self.flops += other.flops * mult
+        if with_bytes:
+            self.hbm_bytes += other.hbm_bytes * mult
+        for k, v in other.coll_bytes.items():
+            self.coll_bytes[k] = self.coll_bytes.get(k, 0.0) + v * mult
+        for k, v in other.coll_counts.items():
+            self.coll_counts[k] = self.coll_counts.get(k, 0) + v * mult
+        self.unknown_trip_loops += other.unknown_trip_loops
+
+    @property
+    def total_coll_bytes(self) -> float:
+        return float(sum(self.coll_bytes.values()))
+
+
+@dataclass
+class _Comp:
+    symtab: Dict[str, int]                    # name -> result bytes
+    instrs: List["_Instr"] = field(default_factory=list)
+    params: Dict[int, str] = field(default_factory=dict)   # index -> name
+
+
+@dataclass
+class _Instr:
+    op: str
+    out_bytes: int
+    operands: List[str]
+    dot_flops: float
+    calls: List[Tuple[str, int, str]]         # (callee, trip, kind)
+    coll_kind: Optional[str] = None
+    is_root: bool = False
+    name: str = ""
+
+
+def _split_lines(hlo_text: str):
+    """Yield (comp_name, header_params_str, instr_lines) per computation."""
+    name, params, lines = None, "", []
+    for raw in hlo_text.splitlines():
+        mdef = _COMP_DEF_RE.match(raw)
+        if mdef and "{" in raw and "=" not in raw.split("(")[0]:
+            if name is not None:
+                yield name, params, lines
+            name, params, lines = mdef.group(1), mdef.group(2), []
+            continue
+        if name is None:
+            continue
+        if raw.strip().startswith("}"):
+            yield name, params, lines
+            name, params, lines = None, "", []
+            continue
+        lines.append(raw)
+    if name is not None:
+        yield name, params, lines
+
+
+def _parse(hlo_text: str) -> Dict[str, _Comp]:
+    blocks = list(_split_lines(hlo_text))
+    # pass 1: symbol tables (name -> shapes), per computation + global fallback
+    shapes_local: Dict[str, Dict[str, list]] = {}
+    shapes_global: Dict[str, list] = {}
+    for cname, params, lines in blocks:
+        tab: Dict[str, list] = {}
+        for pdecl in re.finditer(r"([\w.\-]+)\s*:\s*((?:\([^)]*\))|[^,()]+)",
+                                 params):
+            sh = _shapes_in(pdecl.group(2))
+            tab[pdecl.group(1)] = sh
+            shapes_global.setdefault(pdecl.group(1), sh)
+        for raw in lines:
+            m = _INSTR_RE.match(raw)
+            if not m:
+                continue
+            iname, out_shape_str = m.group(1), m.group(2)
+            sh = _shapes_in(out_shape_str)
+            tab[iname] = sh
+            shapes_global.setdefault(iname, sh)
+        shapes_local[cname] = tab
+
+    def lookup(cname: str, oname: str) -> list:
+        tab = shapes_local.get(cname, {})
+        if oname in tab:
+            return tab[oname]
+        return shapes_global.get(oname, [])
+
+    # pass 2: instruction accounting
+    comps: Dict[str, _Comp] = {}
+    for cname, params, lines in blocks:
+        comp = _Comp(symtab={k: _bytes_of(v)
+                             for k, v in shapes_local[cname].items()})
+        comps[cname] = comp
+        for raw in lines:
+            m = _INSTR_RE.match(raw)
+            if not m:
+                continue
+            name, out_shape_str, op, rest = m.groups()
+            if op.endswith("-done"):
+                continue
+            opn = op[:-6] if op.endswith("-start") else op
+            out_shapes = _shapes_in(out_shape_str)
+            out_bytes = _bytes_of(out_shapes)
+            operands = _operand_names(rest)
+            if opn == "parameter":
+                mi = re.match(r"\s*(\d+)", rest)
+                if mi:
+                    comp.params[int(mi.group(1))] = name
+
+            dot_flops = 0.0
+            if opn == "dot" and operands:
+                mc = _LHS_CONTRACT_RE.search(raw)
+                lhs_shapes = lookup(cname, operands[0])
+                if mc and lhs_shapes:
+                    lhs_dims = lhs_shapes[0][1]
+                    contract = 1
+                    for d in (int(x) for x in mc.group(1).split(",") if x):
+                        if d < len(lhs_dims):
+                            contract *= lhs_dims[d]
+                    out_elems = 1
+                    for _, dims in out_shapes:
+                        for d in dims:
+                            out_elems *= d
+                    dot_flops = 2.0 * out_elems * contract
+
+            calls: List[Tuple[str, int, str]] = []
+            trip = 1
+            mt = _TRIP_RE.search(raw)
+            if mt:
+                trip = int(mt.group(1))
+            kind = "while" if opn == "while" else ("call" if opn in (
+                "call", "conditional", "custom-call", "async-start") else "fusion")
+            for callee in _CALLED_RE.findall(raw):
+                calls.append((callee, trip if opn == "while" else 1, kind))
+            mb = _BRANCHES_RE.search(raw)
+            if mb:
+                for callee in mb.group(1).split(","):
+                    callee = callee.strip().lstrip("%")
+                    if callee:
+                        calls.append((callee, 1, "call"))
+
+            coll_kind = opn if opn in COLLECTIVES else None
+            comp.instrs.append(_Instr(opn, out_bytes, operands, dot_flops,
+                                      calls, coll_kind,
+                                      is_root=raw.lstrip().startswith("ROOT"),
+                                      name=name))
+    return comps
+
+
+# ---------------------------------------------------------------------------
+# slice-aware fusion I/O: a fusion that reads a parameter only through
+# dynamic-slice/gather touches the SLICE, not the whole operand (the stacked
+# scan-over-layers tensors would otherwise be counted L times over); a fusion
+# whose root is dynamic-update-slice writes the UPDATE, not the whole buffer.
+# ---------------------------------------------------------------------------
+
+_SLICE_READ_OPS = {"dynamic-slice", "gather", "slice"}
+
+
+def _fusion_io(comps: Dict[str, _Comp], fused_name: str,
+               operand_full_bytes: List[int]):
+    """Effective (read_bytes, write_bytes_or_None) of one fusion call."""
+    comp = comps.get(fused_name)
+    if comp is None:
+        return sum(operand_full_bytes), None
+    # alias map: index-remapping / elementwise-1:1 ops are free inside a
+    # fusion — a slice of a convert of a param touches only the slice.
+    _PASS = ("bitcast", "copy", "convert", "reshape", "transpose", "tuple",
+             "get-tuple-element")
+    alias: Dict[str, str] = {}
+
+    def root_of(nm: str) -> str:
+        seen = []
+        while nm in alias and nm not in seen:
+            seen.append(nm)
+            nm = alias[nm]
+        return nm
+
+    for ins in comp.instrs:
+        if ins.op in _PASS and ins.operands:
+            alias[ins.name] = ins.operands[0]
+
+    # per-param access: max over (alias-resolved) uses; slice-like uses
+    # count the slice, direct uses count the full tensor.
+    access: Dict[str, int] = {}
+    dus_writes = 0
+    has_dus_root = False
+    name_of_param = set(comp.params.values())
+    for ins in comp.instrs:
+        if ins.op in _PASS:
+            continue
+        for pos, o in enumerate(ins.operands):
+            o = root_of(o)
+            if o not in name_of_param:
+                continue
+            if ins.op in _SLICE_READ_OPS:
+                use = ins.out_bytes
+            elif ins.op == "dynamic-update-slice" and pos == 0:
+                # in-place update: reads/writes only the update window
+                use = comp.symtab.get(ins.operands[1], 0) if len(ins.operands) > 1 else ins.out_bytes
+            else:
+                use = comp.symtab.get(o, 0)
+            access[o] = max(access.get(o, 0), use)
+        if ins.is_root and ins.op == "dynamic-update-slice":
+            has_dus_root = True
+            dus_writes = (comp.symtab.get(ins.operands[1], 0)
+                          if len(ins.operands) > 1 else ins.out_bytes)
+    # a root that is a pass-through of a DUS still writes only the window
+    if not has_dus_root:
+        for ins in comp.instrs:
+            if ins.is_root and ins.op in _PASS and ins.operands:
+                src = root_of(ins.operands[0])
+                for ins2 in comp.instrs:
+                    if ins2.name == src and ins2.op == "dynamic-update-slice":
+                        has_dus_root = True
+                        dus_writes = (comp.symtab.get(ins2.operands[1], 0)
+                                      if len(ins2.operands) > 1 else ins2.out_bytes)
+    # read bytes: map params by index order to caller operands, capped
+    reads = 0
+    for idx, full in enumerate(operand_full_bytes):
+        pname = comp.params.get(idx)
+        if pname is None:
+            reads += full
+        else:
+            reads += min(access.get(pname, 0), full)
+    return reads, (dus_writes if has_dus_root else None)
+
+
+def analyze(hlo_text: str) -> Account:
+    comps = _parse(hlo_text)
+    memo: Dict[Tuple[str, bool], Account] = {}
+
+    def resolve(cname: str, count_bytes: bool, seen=()) -> Account:
+        key = (cname, count_bytes)
+        if key in memo:
+            return memo[key]
+        acc = Account()
+        comp = comps.get(cname)
+        if comp is None or cname in seen:
+            return acc
+        for ins in comp.instrs:
+            acc.flops += ins.dot_flops
+            operand_full = [comp.symtab.get(o, 0) for o in ins.operands]
+            operand_bytes = sum(operand_full)
+            if count_bytes and ins.op not in _FREE_OPS:
+                out_b, in_b = ins.out_bytes, operand_bytes
+                if ins.op == "fusion":
+                    fused = next((c for c, _, k in ins.calls if k == "fusion"),
+                                 None)
+                    if fused is not None:
+                        in_b, dus_w = _fusion_io(comps, fused, operand_full)
+                        if dus_w is not None:
+                            out_b = dus_w
+                elif ins.op in _SLICE_READ_OPS:
+                    in_b = ins.out_bytes          # touch the slice, not the src
+                elif ins.op == "dynamic-update-slice":
+                    upd = (comp.symtab.get(ins.operands[1], 0)
+                           if len(ins.operands) > 1 else ins.out_bytes)
+                    in_b, out_b = upd, upd
+                acc.hbm_bytes += out_b + in_b
+            if ins.coll_kind:
+                cb = operand_bytes or ins.out_bytes
+                acc.coll_bytes[ins.coll_kind] = (
+                    acc.coll_bytes.get(ins.coll_kind, 0.0) + cb)
+                acc.coll_counts[ins.coll_kind] = (
+                    acc.coll_counts.get(ins.coll_kind, 0) + 1)
+            for callee, trip, kind in ins.calls:
+                sub = resolve(callee, count_bytes and kind == "while",
+                              seen + (cname,))
+                if kind == "while" and trip == 1 and sub.flops > 0:
+                    acc.unknown_trip_loops += 1
+                acc.add(sub, mult=trip,
+                        with_bytes=(kind == "while" and count_bytes))
+        memo[key] = acc
+        return acc
+
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", hlo_text, re.MULTILINE)
+    if m and m.group(1) in comps:
+        return resolve(m.group(1), True)
+    total = Account()
+    for c in comps:
+        total.add(resolve(c, True))
+    return total
+
+
+# helper kept for dryrun.py
+def parse_collectives(hlo_text: str) -> Account:
+    return analyze(hlo_text)

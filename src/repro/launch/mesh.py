@@ -1,0 +1,30 @@
+"""Production mesh definitions (functions, not module constants — importing
+this module never touches jax device state)."""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 = 256 chips (data, model). Multi-pod: 2 pods =
+    512 chips (pod, data, model); the pod axis carries DP (+ optional PP
+    and compressed gradient exchange).
+
+    When the process exposes more devices than the mesh needs (the dry-run
+    forces 512 host devices and then builds the 256-chip single-pod mesh),
+    the first N devices are used."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    import numpy as np
+    need = int(np.prod(shape))
+    devs = jax.devices()
+    assert len(devs) >= need, (len(devs), need)
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes),
+                         devices=devs[:need])
+
+
+def make_host_mesh(shape, axes):
+    """Small host-device mesh for tests/examples (requires
+    XLA_FLAGS=--xla_force_host_platform_device_count set before jax init)."""
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))

@@ -1,0 +1,161 @@
+"""Roofline analysis over the dry-run records (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh):
+
+    compute term    = HLO_FLOPs / (chips x peak)     [per-dev flops / peak]
+    memory term     = HLO_bytes / (chips x HBM_bw)   [per-dev bytes / bw]
+    collective term = collective_bytes / (chips x link_bw)
+
+The dry-run stores PER-DEVICE numbers (post-SPMD partition shapes), so each
+term is simply per-device quantity / per-device rate; the assignment's
+global formulas are algebraically identical (global = per-device x chips).
+
+MODEL_FLOPS = 6*N_active*tokens (train) or 2*N_active*tokens (inference),
+with N_active counted from the Spec trees (MoE experts scaled by top_k/E).
+``roofline fraction`` = time the step WOULD take if it ran exactly at the
+dominant-resource roofline vs the useful-model-FLOPs time — the headline
+perf score.
+
+Usage: python -m repro.launch.roofline [--md experiments/roofline.md]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+import numpy as np
+
+from repro.configs.base import TrainConfig, get_config
+from repro.core.latency import V5E
+from repro.core.params import Spec, is_spec
+from repro.models import api as mapi
+
+import jax
+
+DRY_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def active_params(arch: str) -> float:
+    """N_active from the Spec trees (exact; MoE experts scaled k/E)."""
+    cfg = get_config(arch)
+    specs = mapi.get_api(cfg).specs(cfg)
+    flat = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=is_spec)[0]
+    total = 0.0
+    for path, spec in flat:
+        keys = "/".join(str(getattr(p, "key", "")) for p in path)
+        n = float(np.prod(spec.shape))
+        if cfg.moe is not None and ("/moe/w" in keys or keys.endswith("moe/wg")
+                                    or "/moe/" in keys and path[-1].key in ("wg", "wu", "wd")):
+            n *= cfg.moe.top_k / max(cfg.moe.num_experts, 1)
+        total += n
+    return total
+
+
+def model_flops_for(rec: dict) -> float:
+    n_act = active_params(rec["arch"])
+    B, S = rec["global_batch"], rec["seq_len"]
+    if rec["kind"] == "train":
+        return 6.0 * n_act * B * S
+    if rec["kind"] == "prefill":
+        return 2.0 * n_act * B * S
+    return 2.0 * n_act * B           # decode: one token per sequence
+
+
+def terms_for(rec: dict, hw=V5E) -> dict:
+    chips = 512 if rec["mesh"] == "pod2x16x16" else 256
+    cfg = get_config(rec["arch"])
+    peak = hw.peak_flops_bf16 if cfg.dtype == "bfloat16" else hw.peak_flops_fp32
+    f_dev = rec["cost"]["flops"]
+    b_dev = rec["cost"]["hbm_bytes"]
+    c_dev = rec["collectives"]["per_device_bytes"]
+    compute_s = f_dev / peak
+    memory_s = b_dev / hw.hbm_bw
+    coll_s = c_dev / hw.ici_bw
+    total_s = max(compute_s, memory_s, coll_s)
+    mf = model_flops_for(rec)
+    useful_s = mf / (chips * peak)
+    out = {
+        "chips": chips,
+        "compute_s": compute_s, "memory_s": memory_s, "collective_s": coll_s,
+        "bound": max(
+            (("compute", compute_s), ("memory", memory_s),
+             ("collective", coll_s)), key=lambda kv: kv[1])[0],
+        "model_flops": mf,
+        "hlo_flops_global": f_dev * chips,
+        "useful_ratio": mf / max(f_dev * chips, 1.0),
+        "roofline_fraction": useful_s / max(total_s, 1e-30),
+        "step_s": total_s,
+    }
+    return out
+
+
+_ADVICE = {
+    "compute": ("cut redundant HLO FLOPs (remat policy, fused attention, "
+                "dedup matmuls) or move to bf16 MXU-shaped dots"),
+    "memory": ("keep hot intermediates in VMEM (Pallas fusion of attention/"
+               "cell epilogues), bf16 params/optimizer, bigger fusion scopes"),
+    "collective": ("reshard to cut per-layer all-gathers (SP profile), "
+                   "overlap collectives with compute, compress cross-pod "
+                   "gradient traffic"),
+}
+
+
+def load_records():
+    recs = []
+    for p in sorted(glob.glob(os.path.join(DRY_DIR, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def make_table(recs, md_path=None):
+    lines = []
+    hdr = ("| arch | shape | mesh | chips | compute s | memory s | coll s | "
+           "bound | MODEL/HLO | roofline frac |")
+    lines.append(hdr)
+    lines.append("|" + "---|" * 10)
+    rows = []
+    for rec in recs:
+        if rec.get("status") == "skipped":
+            lines.append(f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} | "
+                         f"- | - | - | - | SKIP | - | - |")
+            continue
+        if rec.get("status") != "ok":
+            lines.append(f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} | "
+                         f"- | - | - | - | ERROR | - | - |")
+            continue
+        t = terms_for(rec)
+        rows.append((rec, t))
+        lines.append(
+            f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} | {t['chips']} "
+            f"| {t['compute_s']:.2e} | {t['memory_s']:.2e} "
+            f"| {t['collective_s']:.2e} | **{t['bound']}** "
+            f"| {t['useful_ratio']:.3f} | {t['roofline_fraction']:.3f} |")
+    table = "\n".join(lines)
+    if md_path:
+        notes = ["", "### Per-cell bottleneck advice", ""]
+        for rec, t in rows:
+            notes.append(f"- **{rec['arch']} x {rec['shape']} x {rec['mesh']}**"
+                         f" ({t['bound']}-bound): {_ADVICE[t['bound']]}")
+        with open(md_path, "w") as f:
+            f.write("# Roofline (derived from the multi-pod dry-run)\n\n"
+                    + table + "\n" + "\n".join(notes) + "\n")
+    return table, rows
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--md", default=os.path.join(DRY_DIR, "..", "roofline.md"))
+    args = p.parse_args()
+    recs = load_records()
+    table, rows = make_table(recs, args.md)
+    print(table)
+    print(f"\n{len(rows)} ok cells; table written to {args.md}")
+
+
+if __name__ == "__main__":
+    main()

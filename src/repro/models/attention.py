@@ -1,0 +1,323 @@
+"""Attention: GQA + RoPE + qk-norm + sliding window; three implementations.
+
+* ``naive``     — dense score matrix (oracle; small shapes only)
+* ``xla_flash`` — chunked online-softmax ``lax.scan`` over KV blocks with a
+  rematerialized chunk body: flash-attention memory behaviour expressed in
+  plain XLA ops (compiles for every mesh; this is the dry-run default)
+* ``pallas``    — the TPU kernel in ``repro.kernels.flash_attn``
+
+Decode-step attention runs against a ring-buffer KV cache (full or sliding
+window) and is the latency-critical matvec regime the paper targets: at
+batch*heads ~ chip count the per-step work is exactly a set of row-wise
+matvecs against cached KV rows.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.params import Spec
+from repro.distributed.sharding import ShardCtx, constrain
+from repro.models import layers
+from repro.models.layers import dense_apply, dense_specs, head_rmsnorm
+
+NEG_INF = -1e30
+
+
+def attn_specs(cfg: ModelConfig) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    s = {
+        "wq": dense_specs(d, cfg.num_heads * hd, ("embed", "heads"), cfg.qkv_bias),
+        "wk": dense_specs(d, cfg.num_kv_heads * hd, ("embed", "kv_heads"), cfg.qkv_bias),
+        "wv": dense_specs(d, cfg.num_kv_heads * hd, ("embed", "kv_heads"), cfg.qkv_bias),
+        "wo": dense_specs(cfg.num_heads * hd, d, ("heads", "embed"), cfg.out_bias),
+    }
+    if cfg.qk_norm:
+        s["q_norm"] = Spec((hd,), ("head_dim",), init="ones")
+        s["k_norm"] = Spec((hd,), ("head_dim",), init="ones")
+    return s
+
+
+def _project_qkv(p: dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
+                 rope: bool = True) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x: (B,S,D) -> q (B,S,Hq,Dh), k/v (B,S,Hkv,Dh)."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = dense_apply(p["wq"], x).reshape(B, S, cfg.num_heads, hd)
+    k = dense_apply(p["wk"], x).reshape(B, S, cfg.num_kv_heads, hd)
+    v = dense_apply(p["wv"], x).reshape(B, S, cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        q = head_rmsnorm(p["q_norm"], q)
+        k = head_rmsnorm(p["k_norm"], k)
+    if rope and cfg.rope:
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
+        k = layers.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# full-sequence attention (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _naive_attention(q, k, v, causal: bool, window: int) -> jax.Array:
+    """(B,S,Hq,Dh) layout in, dense scores (oracle path)."""
+    from repro.kernels.flash_attn.ref import attention_ref
+    qt, kt, vt = (jnp.moveaxis(a, 2, 1) for a in (q, k, v))
+    o = attention_ref(qt, kt, vt, causal=causal, window=window)
+    return jnp.moveaxis(o, 1, 2).astype(q.dtype)
+
+
+def _xla_flash(q, k, v, causal: bool, window: int, chunk: int) -> jax.Array:
+    """Chunked online softmax over KV; (B,S,H,D) layout; fp32 running stats."""
+    B, Sq, Hq, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    ck = min(chunk, Sk)
+    nk = -(-Sk // ck)
+    pad = nk * ck - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, nk, ck, Hkv, D)
+    vc = v.reshape(B, nk, ck, Hkv, D)
+    qf = q.reshape(B, Sq, Hkv, G, D)
+    scale = 1.0 / (D ** 0.5)
+    q_pos = jnp.arange(Sq)
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def body(carry, blk):
+        m, l, acc = carry
+        kb, vb, j = blk
+        k_pos = j * ck + jnp.arange(ck)
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", qf.astype(jnp.float32) * scale,
+                       kb.astype(jnp.float32))
+        mask = (k_pos[None, :] < Sk)
+        if causal:
+            mask = mask & (q_pos[:, None] >= k_pos[None, :])
+        if window > 0:
+            mask = mask & (q_pos[:, None] - k_pos[None, :] < window)
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(mask[None, :, None, None, :], p, 0.0)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(-1)
+        # probabilities materialize in the model's compute dtype (fp32 running
+        # stats keep the numerics); halves the dominant HBM boundary traffic
+        # for bf16 models — §Perf
+        pdt = q.dtype if q.dtype != jnp.float32 else jnp.float32
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bqhgk,bkhd->bqhgd", p.astype(pdt),
+            vb.astype(pdt)).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, Hkv, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, Hkv, G), jnp.float32)
+    a0 = jnp.zeros((B, Sq, Hkv, G, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), jnp.arange(nk)))
+    o = acc / jnp.maximum(l[..., None], 1e-30)
+    return o.reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+def _banded_attention(q, k, v, window: int) -> jax.Array:
+    """Exact sliding-window attention in O(S * 2W) (§Perf H1-iter2).
+
+    q blocks of width W attend only kv blocks (i-1, i): every in-window
+    key lands in that 2W band, everything else is masked by the window
+    anyway. Replaces the O(S^2) chunk sweep for SWA layers."""
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    W = window
+    nb = S // W
+    scale = 1.0 / (D ** 0.5)
+    qb = q.reshape(B, nb, W, Hkv, G, D)
+    kb = k.reshape(B, nb, W, Hkv, D)
+    vb = v.reshape(B, nb, W, Hkv, D)
+    z = jnp.zeros_like(kb[:, :1])
+    k2 = jnp.concatenate([jnp.concatenate([z, kb[:, :-1]], 1), kb], 2)  # (B,nb,2W,Hkv,D)
+    v2 = jnp.concatenate([jnp.concatenate([z, vb[:, :-1]], 1), vb], 2)
+    s = jnp.einsum("bnqhgd,bnkhd->bnhgqk", qb.astype(jnp.float32) * scale,
+                   k2.astype(jnp.float32))                # (B,nb,Hkv,G,W,2W)
+    q_pos = jnp.arange(W)[:, None] + W                    # within-band coords
+    k_pos = jnp.arange(2 * W)[None, :]
+    band = (q_pos >= k_pos) & (q_pos - k_pos < W)
+    blk = jnp.arange(nb)
+    first = (blk == 0)[:, None, None] & (k_pos[None] < W)  # block 0 has no left
+    mask = band[None] & ~first                             # (nb, W, 2W)
+    s = jnp.where(mask[None, :, None, None], s, NEG_INF)
+    pdt = q.dtype if q.dtype != jnp.float32 else jnp.float32
+    p = jax.nn.softmax(s, axis=-1).astype(pdt)             # compute-dtype boundary
+    o = jnp.einsum("bnhgqk,bnkhd->bnqhgd", p, v2.astype(pdt))
+    return o.reshape(B, S, Hq, D).astype(q.dtype)
+
+
+def _pallas_attention(q, k, v, causal: bool, window: int, chunk: int) -> jax.Array:
+    from repro.kernels.flash_attn import ops as fa_ops
+    qt, kt, vt = (jnp.moveaxis(a, 2, 1) for a in (q, k, v))
+    o = fa_ops.attention(qt, kt, vt, causal=causal, window=window,
+                         block_q=min(chunk, q.shape[1]),
+                         block_k=min(chunk, k.shape[1]))
+    return jnp.moveaxis(o, 1, 2)
+
+
+def attention(p: dict, cfg: ModelConfig, x: jax.Array, *, ctx: ShardCtx,
+              window: int = 0, causal: bool = True,
+              positions: Optional[jax.Array] = None,
+              kv: Optional[Tuple[jax.Array, jax.Array]] = None):
+    """Full-sequence attention. Returns (out (B,S,D), (k, v) for caching).
+
+    ``kv`` overrides the self-attention K/V (cross-attention path)."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q, k, v = _project_qkv(p, cfg, x, positions, rope=kv is None)
+    if kv is not None:
+        k, v = kv
+    # TP placement: shard heads when they divide the model axis; otherwise
+    # fall back to sequence-parallel attention (q rows sharded, kv gathered)
+    # instead of full replication.
+    m = ctx.axis_size("model")
+    seq_ax = "act_seq" if cfg.num_heads % max(m, 1) == 0 else "act_seq_tp"
+    q = constrain(q, ("batch", seq_ax, "act_heads", None), ctx)
+    k = constrain(k, ("batch", "act_seq", "act_kv_heads", None), ctx)
+    impl = cfg.attn_impl
+    if impl == "naive":
+        o = _naive_attention(q, k, v, causal, window)
+    elif impl == "pallas":
+        o = _pallas_attention(q, k, v, causal, window, cfg.attn_chunk)
+    elif (window > 0 and causal and kv is None and S % window == 0
+          and S >= 2 * window):
+        o = _banded_attention(q, k, v, window)             # O(S*2W) exact SWA
+    else:
+        o = _xla_flash(q, k, v, causal, window, cfg.attn_chunk)
+    o = o.reshape(B, S, -1)
+    return dense_apply(p["wo"], o), (k, v)
+
+
+# ---------------------------------------------------------------------------
+# decode-step attention vs a ring-buffer cache
+# ---------------------------------------------------------------------------
+
+def init_cache_specs(cfg: ModelConfig, batch: int, capacity: int,
+                     layers_axis: int = 0) -> dict:
+    """KV ring buffer spec for ONE layer group. slot_pos tracks the absolute
+    position written into each slot (-1 = empty), shared across batch."""
+    hd = cfg.resolved_head_dim
+    shape_kv = (batch, cfg.num_kv_heads, capacity, hd)
+    axes_kv = ("batch", "kv_heads", "act_kv_seq", None)
+    if layers_axis:
+        shape_kv = (layers_axis,) + shape_kv
+        axes_kv = ("layers",) + axes_kv
+        slot = Spec((layers_axis, capacity), ("layers", None), init="zeros", dtype="int32")
+    else:
+        slot = Spec((capacity,), (None,), init="zeros", dtype="int32")
+    return {
+        "k": Spec(shape_kv, axes_kv, init="zeros", dtype=cfg.dtype),
+        "v": Spec(shape_kv, axes_kv, init="zeros", dtype=cfg.dtype),
+        "slot_pos": slot,  # initialized to -1 by init_cache()
+    }
+
+
+def decode_update_stacked(cache_layers: dict, layer: int, k_new: jax.Array,
+                          v_new: jax.Array, pos: jax.Array) -> dict:
+    """Write ONE token's K/V into the (L,B,Hkv,C,hd) stacked cache in place
+    (§Perf H3): the update is (1,B,Hkv,1,hd) — with donated buffers this is
+    a true in-place ring write, no restacking/copies.
+
+    k_new/v_new: (B,1,Hkv,hd) from the projection."""
+    C = cache_layers["k"].shape[3]
+    slot = (pos % C).astype(jnp.int32)
+    upd_k = jnp.moveaxis(k_new, 1, 2)[None].astype(cache_layers["k"].dtype)
+    upd_v = jnp.moveaxis(v_new, 1, 2)[None].astype(cache_layers["v"].dtype)
+    k = jax.lax.dynamic_update_slice(cache_layers["k"], upd_k,
+                                     (layer, 0, 0, slot, 0))
+    v = jax.lax.dynamic_update_slice(cache_layers["v"], upd_v,
+                                     (layer, 0, 0, slot, 0))
+    sp = jax.lax.dynamic_update_slice(cache_layers["slot_pos"],
+                                      pos[None, None].astype(jnp.int32),
+                                      (layer, slot))
+    return {"k": k, "v": v, "slot_pos": sp}
+
+
+def decode_attend(p: dict, cfg: ModelConfig, q: jax.Array, k_cache, v_cache,
+                  slot_pos, pos: jax.Array, *, window: int = 0) -> jax.Array:
+    """Attend one query token against a (B,Hkv,C,hd) cache slice.
+
+    ``attn_impl="pallas"`` routes through the flash-decode kernel
+    (scores/probs stay in VMEM across the cache sweep — §Perf H3 endgame);
+    default is the XLA einsum path (compiles for every dry-run mesh)."""
+    B = q.shape[0]
+    hd = cfg.resolved_head_dim
+    G = cfg.num_heads // cfg.num_kv_heads
+    qg = q.reshape(B, cfg.num_kv_heads, G, hd)
+    if cfg.attn_impl == "pallas":
+        from repro.kernels.decode_attn import ops as da_ops
+        o = da_ops.decode_attend_pallas(qg.astype(k_cache.dtype), k_cache,
+                                        v_cache, slot_pos, pos, window)
+        o = o.reshape(B, 1, cfg.num_heads * hd).astype(q.dtype)
+        return dense_apply(p["wo"], o)
+    valid = slot_pos >= 0
+    if window > 0:
+        valid = valid & (slot_pos > pos - window)
+    valid = valid & (slot_pos <= pos)
+    s = jnp.einsum("bhgd,bhcd->bhgc", qg.astype(k_cache.dtype), k_cache,
+                   preferred_element_type=jnp.float32) / (hd ** 0.5)
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgc,bhcd->bhgd", w.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(B, 1, cfg.num_heads * hd).astype(q.dtype)
+    return dense_apply(p["wo"], o)
+
+
+def decode_attention(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
+                     pos: jax.Array, *, ctx: ShardCtx, window: int = 0,
+                     cross: bool = False):
+    """One-token attention. x: (B,1,D); cache {k,v: (B,Hkv,C,Dh), slot_pos:(C,)}.
+
+    Returns (out (B,1,D), updated cache). ``cross=True`` reads the cache
+    without writing (encoder KV precomputed at prefill — the paper's
+    decoupled-projection idea applied to cross-attention)."""
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim
+    positions = jnp.broadcast_to(pos[None, None] if pos.ndim == 0 else pos[:, None], (B, 1))
+    q, k_new, v_new = _project_qkv(p, cfg, x, positions, rope=not cross and cfg.rope)
+    k_cache, v_cache, slot_pos = cache["k"], cache["v"], cache["slot_pos"]
+    C = k_cache.shape[2]
+    if not cross:
+        slot = (pos % C).astype(jnp.int32)
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, jnp.moveaxis(k_new, 1, 2).astype(k_cache.dtype),
+            (0, 0, slot, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, jnp.moveaxis(v_new, 1, 2).astype(v_cache.dtype),
+            (0, 0, slot, 0))
+        slot_pos = jax.lax.dynamic_update_slice(slot_pos, pos[None].astype(jnp.int32), (slot,))
+    # mask: written slots, not older than the window; cross-attention reads
+    # the whole (precomputed) cache regardless of decode position
+    valid = slot_pos >= 0
+    if not cross:
+        if window > 0:
+            valid = valid & (slot_pos > pos - window)
+        valid = valid & (slot_pos <= pos)
+
+    G = cfg.num_heads // cfg.num_kv_heads
+    qg = q.reshape(B, cfg.num_kv_heads, G, hd)
+    # cache stays in its storage dtype on the wire; fp32 only in the MXU
+    # accumulator (§Perf H3: no full-cache upcast copies)
+    s = jnp.einsum("bhgd,bhcd->bhgc", qg.astype(k_cache.dtype), k_cache,
+                   preferred_element_type=jnp.float32) / (hd ** 0.5)
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgc,bhcd->bhgd", w.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(B, 1, cfg.num_heads * hd).astype(x.dtype)
+    out = dense_apply(p["wo"], o)
+    return out, {"k": k_cache, "v": v_cache, "slot_pos": slot_pos}

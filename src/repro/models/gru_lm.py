@@ -1,0 +1,72 @@
+"""The paper's own model (``gru-jet``) behind the framework model API.
+
+Forward/loss = the jet-tagging sequence classifier (GRU + linear head,
+H=20, X=5, 5 classes in the paper's validated configuration). Serving =
+single-step recurrent decode, the paper's latency-measurement path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import gru as gru_core
+from repro.core.params import Spec, init_params
+from repro.distributed.sharding import ShardCtx, constrain
+
+
+def lm_specs(cfg: ModelConfig) -> dict:
+    return gru_core.gru_classifier_specs(cfg.gru)
+
+
+def forward(params: dict, cfg: ModelConfig, batch: dict, *,
+            ctx: ShardCtx = ShardCtx()) -> jax.Array:
+    """batch: {features (B,T,X)} -> class logits (B,C)."""
+    return gru_core.gru_classify(params, batch["features"], cfg=cfg.gru)
+
+
+def loss_fn(params: dict, cfg: ModelConfig, batch: dict, *,
+            ctx: ShardCtx = ShardCtx()):
+    """batch: {features (B,T,X), labels (B,)} -> softmax CE."""
+    logits = forward(params, cfg, batch, ctx=ctx).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, batch["labels"][:, None], axis=-1)[:, 0]
+    loss = (lse - ll).mean()
+    acc = (logits.argmax(-1) == batch["labels"]).mean()
+    return loss, {"ce": loss, "acc": acc, "aux": jnp.zeros((), jnp.float32)}
+
+
+# --- serving: the paper's latency path ---------------------------------------
+
+def cache_specs(cfg: ModelConfig, batch: int, capacity: int = 0) -> dict:
+    return {
+        "h": Spec((batch, cfg.gru.hidden_dim), ("batch", "act_gates"),
+                  init="zeros", dtype="float32"),
+        "pos": Spec((), (), init="zeros", dtype="int32"),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int = 0) -> dict:
+    return init_params(cache_specs(cfg, batch), jax.random.key(0))
+
+
+def decode_step(params: dict, cfg: ModelConfig, cache: dict, x: jax.Array, *,
+                ctx: ShardCtx = ShardCtx()):
+    """One recurrent step: x (B,X) features -> (class logits so far, cache)."""
+    h = gru_core.gru_step(params["cell"], cache["h"], x=x, cfg=cfg.gru)
+    h = constrain(h, ("batch", "act_gates"), ctx)
+    logits = h @ params["head"]["w"] + params["head"]["b"]
+    return logits.astype(jnp.float32), {"h": h, "pos": cache["pos"] + 1}
+
+
+def prefill(params: dict, cfg: ModelConfig, batch: dict, *,
+            ctx: ShardCtx = ShardCtx()):
+    """Run the full sequence, return (logits, final recurrent state)."""
+    xs = batch["features"]
+    B = xs.shape[0]
+    h0 = jnp.zeros((B, cfg.gru.hidden_dim), xs.dtype)
+    hT, _ = gru_core.gru_sequence(params["cell"], h0, xs, cfg=cfg.gru)
+    logits = (hT @ params["head"]["w"] + params["head"]["b"]).astype(jnp.float32)
+    cache = {"h": hT.astype(jnp.float32),
+             "pos": jnp.array(xs.shape[1] - 1, jnp.int32)}
+    return logits, cache

@@ -1,0 +1,241 @@
+"""Hymba: hybrid-head blocks — attention and Mamba SSM heads in PARALLEL
+within every layer (arXiv:2411.13676), most layers sliding-window, three
+global-attention layers (first / middle / last).
+
+Simplifications recorded in DESIGN.md §Arch-applicability: meta-tokens are
+omitted; the two paths are fused as the mean of per-path RMS-normed outputs.
+
+Layer layout: [g0][swa x14][g15][swa x15][g31]. SWA groups are scanned
+(stacked params); global layers are unrolled — this keeps ragged KV-cache
+capacities honest (global layers carry full-context caches; SWA layers a
+ring buffer of the window) while the HLO stays one-block-sized per group.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.params import Spec, init_params, stack_specs
+from repro.distributed.sharding import ShardCtx, constrain
+from repro.models import attention as attn_mod
+from repro.models import layers, ssm as ssm_mod
+from repro.models.layers import cdtype, dense_apply
+from repro.models.transformer import chunked_ce
+
+_GROUPS = ("g0", "swa_a", "g1", "swa_b", "g2")
+
+
+def _group_sizes(cfg: ModelConfig) -> dict:
+    L = cfg.num_layers
+    mid = L // 2 - 1                        # 15 for 32 layers
+    return {"g0": 1, "swa_a": mid - 1, "g1": 1, "swa_b": L - mid - 2, "g2": 1}
+
+
+def block_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    return {
+        "ln1": layers.norm_specs(d, cfg.norm),
+        "attn": attn_mod.attn_specs(cfg),
+        "ssm": ssm_mod.ssm_specs(cfg),
+        "norm_a": layers.norm_specs(d, "rmsnorm"),
+        "norm_s": layers.norm_specs(d, "rmsnorm"),
+        "ln2": layers.norm_specs(d, cfg.norm),
+        "mlp": layers.mlp_specs(d, cfg.d_ff, cfg.mlp),
+    }
+
+
+def lm_specs(cfg: ModelConfig) -> dict:
+    sizes = _group_sizes(cfg)
+    blocks = {}
+    for g in _GROUPS:
+        b = block_specs(cfg)
+        blocks[g] = stack_specs(b, sizes[g]) if g.startswith("swa") else b
+    return {
+        "embed": layers.embed_specs(cfg.vocab_size, cfg.d_model),
+        "blocks": blocks,
+        "final_norm": layers.norm_specs(cfg.d_model, cfg.norm),
+        "lm_head": Spec((cfg.d_model, cfg.vocab_size), ("embed", "vocab"),
+                        init="fan_in"),
+    }
+
+
+def block_apply(p: dict, cfg: ModelConfig, x: jax.Array, positions, *,
+                ctx: ShardCtx, window: int, collect_cache: bool = False):
+    h = layers.norm_apply(p["ln1"], x, cfg.norm)
+    a, kv = attn_mod.attention(p["attn"], cfg, h, ctx=ctx, window=window,
+                               positions=positions)
+    if collect_cache:
+        s, ssm_state = ssm_mod.ssm_apply(p["ssm"], cfg, h, return_state=True)
+    else:
+        s = ssm_mod.ssm_apply(p["ssm"], cfg, h)
+    fused = 0.5 * (layers.norm_apply(p["norm_a"], a, "rmsnorm")
+                   + layers.norm_apply(p["norm_s"], s, "rmsnorm"))
+    x = x + fused
+    x = x + layers.mlp_apply(p["mlp"], layers.norm_apply(p["ln2"], x, cfg.norm),
+                             cfg.mlp)
+    x = constrain(x, ("batch", "act_seq", "act_embed"), ctx)
+    if not collect_cache:
+        return x
+    # build this layer's decode cache: KV ring (last `cap` positions) + SSM
+    k, v = kv                                              # (B,S,Hkv,hd)
+    S = k.shape[1]
+    cap = min(window, S) if window else S
+    kc = jnp.moveaxis(k[:, S - cap:], 1, 2)                # (B,Hkv,cap,hd)
+    vc = jnp.moveaxis(v[:, S - cap:], 1, 2)
+    slot = jnp.arange(S - cap, S, dtype=jnp.int32)
+    if window:
+        # ring-buffer layout: absolute position p lives in slot p % cap
+        order = jnp.argsort(slot % cap)
+        kc, vc, slot = kc[:, :, order], vc[:, :, order], slot[order]
+    else:
+        # global layer: headroom so decode never wraps onto the prompt
+        hr = 64
+        kc = jnp.pad(kc, ((0, 0), (0, 0), (0, hr), (0, 0)))
+        vc = jnp.pad(vc, ((0, 0), (0, 0), (0, hr), (0, 0)))
+        slot = jnp.concatenate([slot, jnp.full((hr,), -1, jnp.int32)])
+    return x, {"attn": {"k": kc, "v": vc, "slot_pos": slot},
+               "ssm": ssm_state}
+
+
+def hidden_states(params: dict, cfg: ModelConfig, tokens: jax.Array, *,
+                  ctx: ShardCtx):
+    B, S = tokens.shape
+    x = layers.embed_apply(params["embed"], tokens, cdtype(cfg))
+    x = constrain(x, ("batch", "act_seq", "act_embed"), ctx)
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+    def one(p, x, window):
+        fn = functools.partial(block_apply, cfg=cfg, ctx=ctx, window=window,
+                               positions=positions)
+        if cfg.remat:
+            return jax.checkpoint(fn, prevent_cse=False)(p, x=x)
+        return fn(p, x=x)
+
+    for g in _GROUPS:
+        p_g = params["blocks"][g]
+        if g.startswith("swa"):
+            def body(x, p_layer):
+                return one(p_layer, x, cfg.sliding_window), None
+            x, _ = jax.lax.scan(body, x, p_g)
+        else:
+            x = one(p_g, x, 0)                             # global attention
+    return layers.norm_apply(params["final_norm"], x, cfg.norm)
+
+
+def forward(params, cfg, tokens, *, ctx: ShardCtx = ShardCtx()):
+    h = hidden_states(params, cfg, tokens, ctx=ctx)
+    return layers.unembed_apply(params["lm_head"], h, tied=False)
+
+
+def loss_fn(params, cfg, batch, *, ctx: ShardCtx = ShardCtx()):
+    h = hidden_states(params, cfg, batch["tokens"], ctx=ctx)
+    ce = chunked_ce(h, params["lm_head"], batch["targets"], batch.get("mask"),
+                    tied=False)
+    return ce, {"ce": ce, "aux": jnp.zeros((), jnp.float32)}
+
+
+# --- serving ------------------------------------------------------------------
+
+def cache_specs(cfg: ModelConfig, batch: int, capacity: int) -> dict:
+    """Global layers: full-capacity KV; SWA layers: window ring buffer.
+    Every layer additionally carries SSM conv+state (O(1) in context)."""
+    sizes = _group_sizes(cfg)
+    win_cap = min(cfg.sliding_window, capacity)
+    out = {}
+    for g in _GROUPS:
+        n = sizes[g]
+        cap = capacity if not g.startswith("swa") else win_cap
+        lead = 0 if not g.startswith("swa") else n
+        out[g] = {
+            "attn": attn_mod.init_cache_specs(cfg, batch, cap, layers_axis=lead),
+            "ssm": ssm_mod.ssm_cache_specs(cfg, batch, layers_axis=lead),
+        }
+    out["pos"] = Spec((), (), init="zeros", dtype="int32")
+    return out
+
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int) -> dict:
+    c = init_params(cache_specs(cfg, batch, capacity), jax.random.key(0))
+    for g in _GROUPS:
+        c[g]["attn"]["slot_pos"] = c[g]["attn"]["slot_pos"] - 1
+    return c
+
+
+def _block_decode(p, cfg, x, cache_b, pos, *, ctx, window):
+    h = layers.norm_apply(p["ln1"], x, cfg.norm)
+    a, attn_cache = attn_mod.decode_attention(p["attn"], cfg, h, cache_b["attn"],
+                                              pos, ctx=ctx, window=window)
+    s, ssm_cache = ssm_mod.ssm_decode_step(p["ssm"], cfg, h, cache_b["ssm"])
+    fused = 0.5 * (layers.norm_apply(p["norm_a"], a, "rmsnorm")
+                   + layers.norm_apply(p["norm_s"], s, "rmsnorm"))
+    x = x + fused
+    x = x + layers.mlp_apply(p["mlp"], layers.norm_apply(p["ln2"], x, cfg.norm),
+                             cfg.mlp)
+    return x, {"attn": attn_cache, "ssm": ssm_cache}
+
+
+def decode_step(params: dict, cfg: ModelConfig, cache: dict, tokens: jax.Array,
+                *, ctx: ShardCtx = ShardCtx()):
+    pos = cache["pos"] + 1
+    x = layers.embed_apply(params["embed"], tokens[:, None], cdtype(cfg))
+    new_cache = {"pos": pos}
+    for g in _GROUPS:
+        p_g = params["blocks"][g]
+        if g.startswith("swa"):
+            def body(x, inp):
+                p_layer, cache_l = inp
+                return _block_decode(p_layer, cfg, x, cache_l, pos, ctx=ctx,
+                                     window=cfg.sliding_window)
+            x, new_cache[g] = jax.lax.scan(body, x, (p_g, cache[g]))
+        else:
+            x, new_cache[g] = _block_decode(p_g, cfg, x, cache[g], pos,
+                                            ctx=ctx, window=0)
+    x = layers.norm_apply(params["final_norm"], x, cfg.norm)
+    logits = layers.unembed_apply(params["lm_head"], x[:, 0], tied=False)
+    return logits, new_cache
+
+
+def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array, *,
+            ctx: ShardCtx = ShardCtx()):
+    """PARALLEL prefill (§Perf H1): one full forward collects the KV ring
+    buffers (last-window slices, ring-ordered) and SSM states per layer;
+    weights stream once, not once per token. Sequential baseline kept as
+    ``prefill_sequential``."""
+    B, S = tokens.shape
+    x = layers.embed_apply(params["embed"], tokens, cdtype(cfg))
+    x = constrain(x, ("batch", "act_seq", "act_embed"), ctx)
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    new_cache = {"pos": jnp.array(S - 1, jnp.int32)}
+    for g in _GROUPS:
+        p_g = params["blocks"][g]
+        win = cfg.sliding_window if g.startswith("swa") else 0
+        if g.startswith("swa"):
+            def body(x, p_layer):
+                return block_apply(p_layer, cfg, x, positions, ctx=ctx,
+                                   window=win, collect_cache=True)
+            x, new_cache[g] = jax.lax.scan(body, x, p_g)
+        else:
+            x, new_cache[g] = block_apply(p_g, cfg, x, positions, ctx=ctx,
+                                          window=0, collect_cache=True)
+    x = layers.norm_apply(params["final_norm"], x, cfg.norm)
+    logits = layers.unembed_apply(params["lm_head"], x[:, -1], tied=False)
+    return logits, new_cache
+
+
+def prefill_sequential(params: dict, cfg: ModelConfig, tokens: jax.Array, *,
+                       ctx: ShardCtx = ShardCtx()):
+    """Baseline per-token prefill (§Perf before/after)."""
+    B, S = tokens.shape
+    cache = init_cache(cfg, B, S)
+    cache["pos"] = jnp.array(-1, jnp.int32)
+
+    def body(cache, t):
+        logits, cache = decode_step(params, cfg, cache, t, ctx=ctx)
+        return cache, None
+
+    cache, _ = jax.lax.scan(body, cache, jnp.moveaxis(tokens[:, :-1], 1, 0))
+    return decode_step(params, cfg, cache, tokens[:, -1], ctx=ctx)

@@ -1,0 +1,141 @@
+"""Shared building blocks: norms, dense, RoPE, MLPs, embeddings.
+
+Everything is functional: ``*_specs`` returns a Spec tree (single source of
+truth for init/abstract/sharding); ``*_apply`` consumes the matching params.
+Compute dtype discipline: params may be fp32 masters; activations run in
+``cfg.dtype``; norms/softmax accumulate fp32.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.params import Spec
+
+
+def cdtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# --- norms -----------------------------------------------------------------
+
+def norm_specs(d: int, kind: str = "rmsnorm") -> dict:
+    s = {"scale": Spec((d,), ("embed",), init="ones")}
+    if kind == "layernorm":
+        s["bias"] = Spec((d,), ("embed",), init="zeros")
+    return s
+
+
+def norm_apply(p: dict, x: jax.Array, kind: str = "rmsnorm",
+               eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        xf = xf - mu
+    var = (xf * xf).mean(-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32)
+    if kind == "layernorm":
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def head_rmsnorm(scale: jax.Array, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Per-head qk-norm (qwen3): x (..., D_head), scale (D_head,)."""
+    xf = x.astype(jnp.float32)
+    var = (xf * xf).mean(-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# --- dense -----------------------------------------------------------------
+
+def dense_specs(d_in: int, d_out: int, axes: Tuple[Optional[str], Optional[str]],
+                bias: bool = False, init: str = "fan_in", scale: float = 1.0) -> dict:
+    s = {"w": Spec((d_in, d_out), axes, init=init, scale=scale)}
+    if bias:
+        s["b"] = Spec((d_out,), (axes[1],), init="zeros")
+    return s
+
+
+def dense_apply(p: dict, x: jax.Array) -> jax.Array:
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+# --- rotary embeddings ------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D) or (..., S, D); positions: (..., S) int32."""
+    D = x.shape[-1]
+    freqs = rope_freqs(D, theta)                           # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    if x.ndim == ang.ndim + 1:                              # head axis present
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --- MLP --------------------------------------------------------------------
+
+def mlp_specs(d_model: int, d_ff: int, kind: str = "swiglu",
+              bias: bool = False) -> dict:
+    if kind == "swiglu":
+        return {
+            "wg": dense_specs(d_model, d_ff, ("embed", "mlp"), bias),
+            "wu": dense_specs(d_model, d_ff, ("embed", "mlp"), bias),
+            "wd": dense_specs(d_ff, d_model, ("mlp", "embed"), bias),
+        }
+    return {
+        "w1": dense_specs(d_model, d_ff, ("embed", "mlp"), bias),
+        "w2": dense_specs(d_ff, d_model, ("mlp", "embed"), bias),
+    }
+
+
+def mlp_apply(p: dict, x: jax.Array, kind: str = "swiglu") -> jax.Array:
+    if kind == "swiglu":
+        h = jax.nn.silu(dense_apply(p["wg"], x)) * dense_apply(p["wu"], x)
+        return dense_apply(p["wd"], h)
+    return dense_apply(p["w2"], jax.nn.gelu(dense_apply(p["w1"], x)))
+
+
+# --- embedding / unembedding -------------------------------------------------
+
+def embed_specs(vocab: int, d_model: int) -> Spec:
+    return Spec((vocab, d_model), ("vocab", "embed"), init="embed", scale=0.02)
+
+
+def embed_apply(table: jax.Array, tokens: jax.Array, dtype) -> jax.Array:
+    return jnp.take(table, tokens, axis=0).astype(dtype)
+
+
+def unembed_apply(table_or_w: jax.Array, x: jax.Array, tied: bool) -> jax.Array:
+    """logits in fp32 (loss numerics)."""
+    w = table_or_w.astype(x.dtype)
+    if tied:
+        return (x @ w.T).astype(jnp.float32)
+    return (x @ w).astype(jnp.float32)
+
+
+# --- losses ------------------------------------------------------------------
+
+def softmax_xent(logits: jax.Array, targets: jax.Array,
+                 mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean next-token CE. logits (..., V) fp32, targets (...) int32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        m = mask.astype(jnp.float32)
+        return (nll * m).sum() / jnp.maximum(m.sum(), 1.0)
+    return nll.mean()

@@ -1,0 +1,75 @@
+"""LLaVA-NeXT-style VLM: mistral-7b backbone + 2-layer GELU projector.
+
+The vision tower / anyres tiling is a STUB per the assignment:
+``input_specs()`` provides precomputed patch embeddings (B, P, vis_dim).
+Projected patches occupy the FIRST P positions of the sequence (loss-masked),
+so every (arch x shape) cell keeps its exact assigned seq_len.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ShardCtx
+from repro.models import layers, transformer
+from repro.models.layers import cdtype, dense_apply, dense_specs
+from repro.models.transformer import chunked_ce
+
+
+def lm_specs(cfg: ModelConfig) -> dict:
+    s = transformer.lm_specs(cfg)
+    v = cfg.vision
+    s["projector"] = {
+        "w1": dense_specs(v.embed_dim, cfg.d_model, ("vis_embed", "embed"), bias=True),
+        "w2": dense_specs(cfg.d_model, cfg.d_model, ("embed", "embed"), bias=True),
+    }
+    return s
+
+
+def _merged_embeds(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                   patches: jax.Array) -> jax.Array:
+    """tokens (B,S) + patches (B,P,vis) -> (B,S,D): patches replace the
+    first P token positions."""
+    B, S = tokens.shape
+    P = patches.shape[1]
+    tok = layers.embed_apply(params["embed"], tokens, cdtype(cfg))
+    proj = dense_apply(params["projector"]["w2"],
+                       jax.nn.gelu(dense_apply(params["projector"]["w1"],
+                                               patches.astype(cdtype(cfg)))))
+    return jnp.concatenate([proj, tok[:, P:]], axis=1)
+
+
+def forward(params, cfg, batch, *, ctx: ShardCtx = ShardCtx()):
+    x = _merged_embeds(params, cfg, batch["tokens"], batch["patches"])
+    h, _, _ = transformer.hidden_states(params, cfg, batch["tokens"], ctx=ctx,
+                                        inputs_embeds=x)
+    table, tied = transformer._unembed_table(params, cfg)
+    return layers.unembed_apply(table, h, tied)
+
+
+def loss_fn(params, cfg, batch, *, ctx: ShardCtx = ShardCtx()):
+    x = _merged_embeds(params, cfg, batch["tokens"], batch["patches"])
+    h, aux, _ = transformer.hidden_states(params, cfg, batch["tokens"], ctx=ctx,
+                                          inputs_embeds=x)
+    P = batch["patches"].shape[1]
+    B, S = batch["tokens"].shape
+    mask = batch.get("mask")
+    text_mask = jnp.broadcast_to((jnp.arange(S) >= P)[None, :],
+                                 (B, S)).astype(jnp.float32)
+    mask = text_mask if mask is None else mask * text_mask
+    table, tied = transformer._unembed_table(params, cfg)
+    ce = chunked_ce(h, table, batch["targets"], mask, tied)
+    loss = ce + aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+cache_specs = transformer.cache_specs
+init_cache = transformer.init_cache
+decode_step = transformer.decode_step     # images only matter at prefill
+
+
+def prefill(params, cfg, batch, *, ctx: ShardCtx = ShardCtx()):
+    x = _merged_embeds(params, cfg, batch["tokens"], batch["patches"])
+    return transformer.prefill(params, cfg, batch["tokens"], ctx=ctx,
+                               inputs_embeds=x)

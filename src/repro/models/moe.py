@@ -1,0 +1,249 @@
+"""Mixture-of-Experts: sort-based capacity dispatch + expert parallelism.
+
+Dispatch is the production EP pattern: tokens are sorted by expert id,
+scattered into a static ``(E, C, D)`` capacity buffer (overflow drops),
+exchanged across the EP mesh axis with ``all_to_all``, run through the local
+experts' SwiGLU (TP over ``model`` on the expert hidden dim, closed by a
+``psum``), exchanged back and combined with the router weights.
+
+At decode this is exactly the paper's latency regime: per-expert matvecs at
+tiny token counts — the row-wise (output-stationary) sharding study applies
+to the expert FFN projections verbatim.
+
+The pure-jnp oracle ``moe_ref`` routes without capacity so tests can pin the
+EP path against it (with a capacity factor high enough to avoid drops).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.core.params import Spec
+from repro.distributed.sharding import ShardCtx, resolve_pspec
+from repro.models import layers
+
+NEG_INF = -1e30
+
+
+def padded_experts(m: MoEConfig, multiple: int = 16) -> int:
+    """Pad expert count so it divides any EP axis up to ``multiple``."""
+    return -(-m.num_experts // multiple) * multiple
+
+
+def moe_specs(cfg: ModelConfig) -> dict:
+    m = cfg.moe
+    d = cfg.d_model
+    E = padded_experts(m)
+    s = {
+        "router": Spec((d, E), ("embed", "experts"), init="fan_in", scale=0.1),
+        "wg": Spec((E, d, m.d_expert), ("experts", "embed", "expert_mlp")),
+        "wu": Spec((E, d, m.d_expert), ("experts", "embed", "expert_mlp")),
+        "wd": Spec((E, m.d_expert, d), ("experts", "expert_mlp", "embed")),
+    }
+    if m.shared_d_ff:
+        s["shared"] = layers.mlp_specs(d, m.shared_d_ff, "swiglu")
+        s["shared_gate"] = Spec((d, 1), ("embed", None), init="fan_in")
+    return s
+
+
+def _capacity(tokens_local: int, top_k: int, E: int, factor: float) -> int:
+    return max(1, math.ceil(tokens_local * top_k / E * factor))
+
+
+def _dispatch_compute_combine(x, probs, eidx, wg, wu, wd, *, E: int, C: int,
+                              ep_axis: Optional[str], tp_axis: Optional[str],
+                              ep_size: int, compute_dtype,
+                              tp_mode: str = "psum", tp_size: int = 1) -> jax.Array:
+    """Local-shard MoE: x (T,D) -> (T,D). Runs inside shard_map (or plain).
+
+    tp_mode:
+      "psum"   — baseline Megatron-style: every model shard processes ALL
+                 tokens against its F-slice of the experts; partial outputs
+                 close with a psum of the full token buffer (collective-
+                 heavy: the §Perf H2 baseline).
+      "gather" — weight-gathered EP (§Perf H2): tokens are SLICED across the
+                 model axis, each shard all-gathers the (small) F-slices of
+                 its experts' weights once per layer, computes its token
+                 slice against FULL experts with no partial sums, and the
+                 outputs are all-gathered. Same FLOPs/device, ~10x fewer
+                 collective bytes (weights << token buffers at LM batch).
+    """
+    if tp_mode == "gather_sp" and tp_axis is not None and tp_size > 1:
+        # tokens ALREADY sharded over the model axis by the sp profile —
+        # only the expert weight F-slices are gathered; no token-buffer
+        # collective ever happens on the model axis (§Perf H2 iter 2).
+        wg = jax.lax.all_gather(wg, tp_axis, axis=2, tiled=True)
+        wu = jax.lax.all_gather(wu, tp_axis, axis=2, tiled=True)
+        wd = jax.lax.all_gather(wd, tp_axis, axis=1, tiled=True)
+        return _dispatch_compute_combine(
+            x, probs, eidx, wg, wu, wd, E=E, C=C, ep_axis=ep_axis,
+            tp_axis=None, ep_size=ep_size, compute_dtype=compute_dtype,
+            tp_size=1)
+
+    if (tp_mode == "gather" and tp_axis is not None and tp_size > 1
+            and x.shape[0] % tp_size == 0):
+        n = tp_size
+        i = jax.lax.axis_index(tp_axis)
+        Tm = x.shape[0] // n
+        x = jax.lax.dynamic_slice_in_dim(x, i * Tm, Tm, 0)
+        probs = jax.lax.dynamic_slice_in_dim(probs, i * Tm, Tm, 0)
+        eidx = jax.lax.dynamic_slice_in_dim(eidx, i * Tm, Tm, 0)
+        wg = jax.lax.all_gather(wg, tp_axis, axis=2, tiled=True)
+        wu = jax.lax.all_gather(wu, tp_axis, axis=2, tiled=True)
+        wd = jax.lax.all_gather(wd, tp_axis, axis=1, tiled=True)
+        out = _dispatch_compute_combine(
+            x, probs, eidx, wg, wu, wd, E=E, C=max(1, C // n),
+            ep_axis=ep_axis, tp_axis=None, ep_size=ep_size,
+            compute_dtype=compute_dtype, tp_size=1)
+        return jax.lax.all_gather(out, tp_axis, axis=0, tiled=True)
+
+    T, D = x.shape
+    k = eidx.shape[-1]
+    N = T * k
+    flat_e = eidx.reshape(N)
+    flat_t = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    flat_p = probs.reshape(N)
+
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sp = flat_e[order], flat_t[order], flat_p[order]
+    seg_start = jnp.searchsorted(se, jnp.arange(E, dtype=se.dtype))
+    pos = jnp.arange(N, dtype=jnp.int32) - seg_start[se].astype(jnp.int32)
+    slot = se.astype(jnp.int32) * C + pos
+    slot = jnp.where(pos < C, slot, E * C)                # OOB -> dropped
+
+    buf = jnp.zeros((E * C, D), compute_dtype).at[slot].set(
+        x[st].astype(compute_dtype), mode="drop")
+    buf = buf.reshape(E, C, D)
+
+    if ep_axis is not None and ep_size > 1:
+        # EP exchange: every shard keeps its E/ep experts, receives all
+        # shards' capacity slices for them.
+        buf = jax.lax.all_to_all(buf, ep_axis, split_axis=0, concat_axis=1,
+                                 tiled=True)              # (E/ep, C*ep, D)
+
+    g = jnp.einsum("ecd,edf->ecf", buf, wg.astype(compute_dtype))
+    u = jnp.einsum("ecd,edf->ecf", buf, wu.astype(compute_dtype))
+    h = jax.nn.silu(g) * u
+    y = jnp.einsum("ecf,efd->ecd", h, wd.astype(compute_dtype))
+    if tp_axis is not None:
+        y = jax.lax.psum(y, tp_axis)                      # close TP contraction
+
+    if ep_axis is not None and ep_size > 1:
+        y = jax.lax.all_to_all(y, ep_axis, split_axis=1, concat_axis=0,
+                               tiled=True)                # (E, C, D)
+
+    y_flat = y.reshape(E * C, D)
+    gathered = jnp.take(y_flat, slot, axis=0, mode="fill", fill_value=0.0)
+    out = jnp.zeros((T, D), compute_dtype).at[st].add(
+        gathered * sp[:, None].astype(compute_dtype))
+    return out
+
+
+def moe_apply(p: dict, cfg: ModelConfig, x: jax.Array, *,
+              ctx: ShardCtx) -> Tuple[jax.Array, jax.Array]:
+    """x: (B,S,D) -> (out (B,S,D), aux load-balance loss scalar)."""
+    m = cfg.moe
+    B, S, D = x.shape
+    E = padded_experts(m)
+    xf = x.reshape(B * S, D)
+
+    logits = (xf.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    if E > m.num_experts:                                  # mask padding experts
+        pad_mask = jnp.arange(E) < m.num_experts
+        logits = jnp.where(pad_mask[None, :], logits, NEG_INF)
+    probs_full = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs_full, m.top_k)
+    if m.norm_topk_prob:
+        top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux (Switch): E * sum_e f_e * P_e
+    occupancy = jnp.zeros((E,), jnp.float32).at[top_i.reshape(-1)].add(1.0)
+    f_e = occupancy / (B * S * m.top_k)
+    P_e = probs_full.mean(0)
+    aux = m.num_experts * jnp.sum(f_e * P_e) * m.router_aux_coef
+
+    ep_size = ctx.axis_size("data")
+    tp_size = ctx.axis_size("model")
+    T_local = (B * S) // (ctx.axis_size("pod") * max(ep_size, 1))
+    # sp profile: the sequence axis is model-sharded end to end, so the MoE
+    # sees pre-sliced tokens and never exchanges token buffers on "model".
+    sp_tokens = (ctx.profile == "sp" and m.tp_mode == "gather" and tp_size > 1
+                 and T_local % tp_size == 0)
+    if sp_tokens:
+        T_local //= tp_size
+    C = _capacity(T_local, m.top_k, E, m.capacity_factor)
+    compute = layers.cdtype(cfg)
+
+    if ctx.mesh is None:
+        out = _dispatch_compute_combine(
+            xf, top_p, top_i, p["wg"], p["wu"], p["wd"], E=E, C=C,
+            ep_axis=None, tp_axis=None, ep_size=1, compute_dtype=compute)
+    else:
+        tok_spec = resolve_pspec(("batch", None), (B * S, D), ctx)
+        tok_axes = tok_spec[0] if len(tok_spec) else None
+        if sp_tokens:
+            prev = (tok_axes if isinstance(tok_axes, tuple)
+                    else (tok_axes,) if tok_axes else ())
+            tok_axes = (*prev, "model")
+            tok_spec = P(tok_axes, *tok_spec[1:])
+        sel_spec = P(tok_axes)
+        wgt_spec = resolve_pspec(("experts", "embed", "expert_mlp"),
+                                 p["wg"].shape, ctx)
+        wd_spec = resolve_pspec(("experts", "expert_mlp", "embed"),
+                                p["wd"].shape, ctx)
+        fn = functools.partial(
+            _dispatch_compute_combine, E=E, C=C,
+            ep_axis="data" if ep_size > 1 else None,
+            tp_axis="model" if tp_size > 1 else None,
+            ep_size=ep_size, compute_dtype=compute,
+            tp_mode=("gather_sp" if sp_tokens else m.tp_mode),
+            tp_size=tp_size)
+        out = jax.shard_map(
+            fn, mesh=ctx.mesh,
+            in_specs=(tok_spec, sel_spec, sel_spec, wgt_spec, wgt_spec, wd_spec),
+            out_specs=tok_spec,
+            check_vma=False,
+        )(xf, top_p, top_i, p["wg"], p["wu"], p["wd"])
+
+    out = out.astype(x.dtype)
+    if m.shared_d_ff:
+        gate = jax.nn.sigmoid(xf.astype(jnp.float32) @ p["shared_gate"].astype(jnp.float32))
+        shared = layers.mlp_apply(p["shared"], x, "swiglu")
+        out = out + (shared.reshape(B * S, D) * gate.astype(x.dtype))
+    return out.reshape(B, S, D), aux
+
+
+# --- oracle ------------------------------------------------------------------
+
+def moe_ref(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """No-capacity fp32 reference: loop over experts, mask-select tokens."""
+    m = cfg.moe
+    B, S, D = x.shape
+    E = padded_experts(m)
+    xf = x.reshape(-1, D).astype(jnp.float32)
+    logits = xf @ p["router"].astype(jnp.float32)
+    if E > m.num_experts:
+        logits = jnp.where(jnp.arange(E)[None, :] < m.num_experts, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, -1)
+    top_p, top_i = jax.lax.top_k(probs, m.top_k)
+    if m.norm_topk_prob:
+        top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    out = jnp.zeros_like(xf)
+    for e in range(m.num_experts):
+        w = jnp.where(top_i == e, top_p, 0.0).sum(-1)      # (T,)
+        g = jax.nn.silu(xf @ p["wg"][e].astype(jnp.float32))
+        u = xf @ p["wu"][e].astype(jnp.float32)
+        y = (g * u) @ p["wd"][e].astype(jnp.float32)
+        out = out + y * w[:, None]
+    if m.shared_d_ff:
+        gate = jax.nn.sigmoid(xf @ p["shared_gate"].astype(jnp.float32))
+        shared = layers.mlp_apply(p["shared"], x.astype(jnp.float32), "swiglu")
+        out = out + shared.reshape(-1, D) * gate
+    return out.reshape(B, S, D).astype(x.dtype)

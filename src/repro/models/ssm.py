@@ -1,0 +1,148 @@
+"""Selective SSM (Mamba-style) mixer — hymba's parallel-head SSM path.
+
+The decode step ``h' = A_bar * h + B_bar * x`` is the same latency-critical
+recurrent matvec regime as the paper's GRU: the input-dependent projections
+(delta, B, C — the analogue of the decoupled ``W.x``) are computed off the
+recurrent path, and the state update is an elementwise + small-matvec
+recurrence that row-shards over the inner dimension.
+
+Training uses a sequential ``lax.scan`` over time (state-sized memory);
+a chunked associative scan is a recorded hillclimb option (EXPERIMENTS §Perf).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.params import Spec
+from repro.models.layers import dense_apply, dense_specs
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    dt_rank = s.dt_rank or -(-cfg.d_model // 16)
+    return d_inner, dt_rank, s.state_dim
+
+
+def ssm_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di, dtr, n = _dims(cfg)
+    w = cfg.ssm.conv_width
+    return {
+        "in_proj": dense_specs(d, 2 * di, ("embed", "gates")),     # x and z
+        "conv": Spec((w, di), ("conv", "gates"), init="fan_in"),
+        "conv_b": Spec((di,), ("gates",), init="zeros"),
+        "x_proj": dense_specs(di, dtr + 2 * n, ("gates", "dt")),
+        "dt_proj": dense_specs(dtr, di, ("dt", "gates"), init="fan_in"),
+        "dt_bias": Spec((di,), ("gates",), init="zeros"),
+        "a_log": Spec((di, n), ("gates", "state"), init="zeros"),  # A = -exp(a_log)-1
+        "d_skip": Spec((di,), ("gates",), init="ones"),
+        "out_proj": dense_specs(di, d, ("gates", "embed")),
+    }
+
+
+def _causal_conv(x: jax.Array, kernel: jax.Array, bias: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (B,S,Di), kernel: (W,Di) -> (B,S,Di)."""
+    W = kernel.shape[0]
+    kernel = kernel.astype(x.dtype)
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for w in range(W):
+        out = out + xp[:, w:w + x.shape[1], :] * kernel[w][None, None, :]
+    return out + bias.astype(x.dtype)[None, None, :]
+
+
+def _ssm_params(p: dict, xc: jax.Array, cfg: ModelConfig):
+    """Input-dependent (decoupled) projections. xc: (...,Di)."""
+    di, dtr, n = _dims(cfg)
+    proj = dense_apply(p["x_proj"], xc)
+    dt_in, B, C = jnp.split(proj, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(dense_apply(p["dt_proj"], dt_in) + p["dt_bias"])
+    A = -jnp.exp(p["a_log"].astype(jnp.float32)) - 1.0     # (Di,N), stable
+    return dt, A, B, C
+
+
+def ssm_apply(p: dict, cfg: ModelConfig, x: jax.Array,
+              return_state: bool = False):
+    """Full-sequence mixer: x (B,S,D) -> (B,S,D).
+
+    ``return_state=True`` additionally returns the decode cache after the
+    last position ({conv_buf, state}) — the parallel-prefill path (all
+    input-dependent projections run as sequence-level GEMMs; only the tiny
+    state recurrence is sequential)."""
+    B_, S, _ = x.shape
+    di, dtr, n = _dims(cfg)
+    xz = dense_apply(p["in_proj"], x)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(_causal_conv(xi, p["conv"], p["conv_b"]))
+    dt, A, Bm, Cm = _ssm_params(p, xc, cfg)                # dt (B,S,Di), B/C (B,S,N)
+
+    def step(h, t):
+        xct, dtt, Bt, Ct = t                               # (B,Di),(B,Di),(B,N),(B,N)
+        dA = jnp.exp(dtt[..., None].astype(jnp.float32) * A[None])      # (B,Di,N)
+        dBx = (dtt * xct)[..., None].astype(jnp.float32) * Bt[:, None, :]
+        h = dA * h + dBx                                   # (B,Di,N)
+        y = jnp.einsum("bdn,bn->bd", h, Ct.astype(jnp.float32))
+        return h, y
+
+    h0 = jnp.zeros((B_, di, n), jnp.float32)
+    hT, ys = jax.lax.scan(step, h0, (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(dt, 1, 0),
+                                     jnp.moveaxis(Bm, 1, 0), jnp.moveaxis(Cm, 1, 0)))
+    y = (jnp.moveaxis(ys, 0, 1).astype(x.dtype)
+         + xc * p["d_skip"].astype(x.dtype)[None, None, :])
+    y = y * jax.nn.silu(z)
+    out = dense_apply(p["out_proj"], y)
+    if not return_state:
+        return out
+    w = cfg.ssm.conv_width
+    pad = max(w - 1 - S, 0)
+    tail = xi[:, S - (w - 1 - pad):, :].astype(cdtype_of(x))
+    if pad:
+        tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+    return out, {"conv_buf": tail, "state": hT}
+
+
+def cdtype_of(x):
+    return x.dtype
+
+
+# --- decode -----------------------------------------------------------------
+
+def ssm_cache_specs(cfg: ModelConfig, batch: int, layers_axis: int = 0) -> dict:
+    di, _, n = _dims(cfg)
+    w = cfg.ssm.conv_width
+    lead = (layers_axis,) if layers_axis else ()
+    lax_ = ("layers",) if layers_axis else ()
+    return {
+        "conv_buf": Spec(lead + (batch, w - 1, di), lax_ + ("batch", None, "gates"),
+                         init="zeros", dtype=cfg.dtype),
+        "state": Spec(lead + (batch, di, n), lax_ + ("batch", "gates", "state"),
+                      init="zeros", dtype="float32"),
+    }
+
+
+def ssm_decode_step(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict):
+    """One token: x (B,1,D) -> (y (B,1,D), new cache). The recurrent state
+    update is the paper's latency regime (row-parallel over Di)."""
+    di, dtr, n = _dims(cfg)
+    xz = dense_apply(p["in_proj"], x[:, 0])                # (B,2Di)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    # conv over ring buffer of the last W-1 inputs
+    buf = cache["conv_buf"]                                # (B,W-1,Di)
+    window = jnp.concatenate([buf, xi[:, None, :].astype(buf.dtype)], axis=1)
+    conv = ((window * p["conv"].astype(buf.dtype)[None]).sum(1)
+            + p["conv_b"].astype(buf.dtype))
+    xc = jax.nn.silu(conv)
+    dt, A, Bm, Cm = _ssm_params(p, xc, cfg)                # (B,Di),(Di,N),(B,N),(B,N)
+    dA = jnp.exp(dt[..., None].astype(jnp.float32) * A[None])
+    dBx = (dt * xc)[..., None].astype(jnp.float32) * Bm[:, None, :]
+    h = dA * cache["state"] + dBx
+    y = jnp.einsum("bdn,bn->bd", h, Cm.astype(jnp.float32)).astype(x.dtype)
+    y = y + xc * p["d_skip"].astype(x.dtype)[None, :]
+    y = y * jax.nn.silu(z)
+    out = dense_apply(p["out_proj"], y)[:, None, :]
+    return out, {"conv_buf": window[:, 1:], "state": h}

@@ -1,0 +1,334 @@
+"""Decoder-only transformer LM: dense and MoE blocks, GQA attention.
+
+Compile-time discipline for the 40-cell dry-run: layers are stacked and
+scanned (``lax.scan`` over a (L, ...) param tree) with per-block remat, so
+the HLO is one block body regardless of depth. The loss fuses unembedding
+with a chunked, rematerialized cross-entropy so full (B,S,V) logits are
+never materialized (vocab 256k x 1M tokens would otherwise dominate HBM).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.params import Spec, stack_specs
+from repro.distributed.sharding import ShardCtx, constrain
+from repro.models import attention as attn_mod
+from repro.models import layers, moe as moe_mod
+from repro.models.layers import cdtype
+
+
+# ---------------------------------------------------------------------------
+# specs
+# ---------------------------------------------------------------------------
+
+def block_specs(cfg: ModelConfig) -> dict:
+    s = {
+        "ln1": layers.norm_specs(cfg.d_model, cfg.norm),
+        "attn": attn_mod.attn_specs(cfg),
+    }
+    if not cfg.parallel_block:
+        s["ln2"] = layers.norm_specs(cfg.d_model, cfg.norm)
+    if cfg.moe is not None:
+        s["moe"] = moe_mod.moe_specs(cfg)
+    else:
+        s["mlp"] = layers.mlp_specs(cfg.d_model, cfg.d_ff, cfg.mlp, cfg.mlp_bias)
+    return s
+
+
+def lm_specs(cfg: ModelConfig) -> dict:
+    s = {
+        "embed": layers.embed_specs(cfg.vocab_size, cfg.d_model),
+        "blocks": stack_specs(block_specs(cfg), cfg.num_layers),
+        "final_norm": layers.norm_specs(cfg.d_model, cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        s["lm_head"] = Spec((cfg.d_model, cfg.vocab_size), ("embed", "vocab"),
+                            init="fan_in")
+    return s
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def block_apply(p: dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
+                *, ctx: ShardCtx, collect_kv: bool = False):
+    """One transformer block. Returns (x, aux, kv-or-None)."""
+    h = layers.norm_apply(p["ln1"], x, cfg.norm)
+    a, kv = attn_mod.attention(p["attn"], cfg, h, ctx=ctx,
+                               window=cfg.sliding_window, positions=positions)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.parallel_block:
+        if cfg.moe is not None:
+            m, aux = moe_mod.moe_apply(p["moe"], cfg, h, ctx=ctx)
+        else:
+            m = layers.mlp_apply(p["mlp"], h, cfg.mlp)
+        x = x + a + m
+    else:
+        x = x + a
+        h2 = layers.norm_apply(p["ln2"], x, cfg.norm)
+        if cfg.moe is not None:
+            m, aux = moe_mod.moe_apply(p["moe"], cfg, h2, ctx=ctx)
+        else:
+            m = layers.mlp_apply(p["mlp"], h2, cfg.mlp)
+        x = x + m
+    x = constrain(x, ("batch", "act_seq", "act_embed"), ctx)
+    return x, aux, (kv if collect_kv else None)
+
+
+def hidden_states(params: dict, cfg: ModelConfig, tokens: jax.Array, *,
+                  ctx: ShardCtx, collect_kv: bool = False,
+                  inputs_embeds: Optional[jax.Array] = None):
+    """tokens (B,S) -> (h (B,S,D), aux, stacked kv or None)."""
+    B, S = tokens.shape
+    x = (inputs_embeds if inputs_embeds is not None
+         else layers.embed_apply(params["embed"], tokens, cdtype(cfg)))
+    x = constrain(x, ("batch", "act_seq", "act_embed"), ctx)
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+    def body(carry, p_layer):
+        x = carry
+        fn = block_apply
+        if cfg.remat:
+            fn = jax.checkpoint(
+                functools.partial(block_apply, cfg=cfg, ctx=ctx,
+                                  collect_kv=collect_kv),
+                prevent_cse=False, static_argnums=())
+            x2, aux, kv = fn(p_layer, x=x, positions=positions)
+        else:
+            x2, aux, kv = fn(p_layer, cfg, x, positions, ctx=ctx,
+                             collect_kv=collect_kv)
+        return x2, (aux, kv)
+
+    if cfg.scan_layers:
+        x, (auxes, kvs) = jax.lax.scan(body, x, params["blocks"])
+        aux = auxes.sum()
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        kv_list = []
+        L = cfg.num_layers
+        for i in range(L):
+            p_layer = jax.tree_util.tree_map(lambda a: a[i], params["blocks"])
+            x, (a, kv) = body(x, p_layer)
+            aux = aux + a
+            kv_list.append(kv)
+        kvs = (jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *kv_list)
+               if collect_kv else None)
+    x = layers.norm_apply(params["final_norm"], x, cfg.norm)
+    return x, aux, kvs
+
+
+def _unembed_table(params: dict, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return params["embed"], True
+    return params["lm_head"], False
+
+
+def forward(params: dict, cfg: ModelConfig, tokens: jax.Array, *,
+            ctx: ShardCtx = ShardCtx()) -> jax.Array:
+    """Full logits (B,S,V) — smoke tests / small vocabs only."""
+    h, _, _ = hidden_states(params, cfg, tokens, ctx=ctx)
+    table, tied = _unembed_table(params, cfg)
+    return layers.unembed_apply(table, h, tied)
+
+
+# ---------------------------------------------------------------------------
+# loss (fused chunked CE — never materializes (B,S,V))
+# ---------------------------------------------------------------------------
+
+def _pick_chunk(S: int, target: int = 512) -> int:
+    c = min(target, S)
+    while S % c:
+        c -= 1
+    return c
+
+
+def chunked_ce(h: jax.Array, table: jax.Array, targets: jax.Array,
+               mask: Optional[jax.Array], tied: bool, chunk: int = 512):
+    """Mean CE from final hidden states; logits per seq-chunk, rematerialized."""
+    B, S, D = h.shape
+    c = _pick_chunk(S, chunk)
+    n = S // c
+    hc = h.reshape(B, n, c, D)
+    tc = targets.reshape(B, n, c)
+    mc = (mask.reshape(B, n, c).astype(jnp.float32) if mask is not None
+          else jnp.ones((B, n, c), jnp.float32))
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def body(carry, blk):
+        nll_sum, m_sum = carry
+        hb, tb, mb = blk                                   # (B,c,D),(B,c),(B,c)
+        w = table.astype(hb.dtype)
+        logits = (hb @ w.T if tied else hb @ w).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, tb[..., None], axis=-1)[..., 0]
+        nll = (lse - ll) * mb
+        return (nll_sum + nll.sum(), m_sum + mb.sum()), None
+
+    (nll_sum, m_sum), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (jnp.moveaxis(hc, 1, 0), jnp.moveaxis(tc, 1, 0), jnp.moveaxis(mc, 1, 0)))
+    return nll_sum / jnp.maximum(m_sum, 1.0)
+
+
+def loss_fn(params: dict, cfg: ModelConfig, batch: dict, *,
+            ctx: ShardCtx = ShardCtx()):
+    """batch: {tokens (B,S), targets (B,S), mask optional} -> (loss, metrics)."""
+    h, aux, _ = hidden_states(params, cfg, batch["tokens"], ctx=ctx)
+    table, tied = _unembed_table(params, cfg)
+    ce = chunked_ce(h, table, batch["targets"], batch.get("mask"), tied)
+    loss = ce + aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def cache_specs(cfg: ModelConfig, batch: int, capacity: int) -> dict:
+    return {
+        "layers": attn_mod.init_cache_specs(cfg, batch, capacity,
+                                            layers_axis=cfg.num_layers),
+        "pos": Spec((), (), init="zeros", dtype="int32"),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int) -> dict:
+    from repro.core.params import init_params
+    c = init_params(cache_specs(cfg, batch, capacity), jax.random.key(0))
+    # empty slots are marked -1; pos=-1 so the first decode writes position 0
+    c["layers"]["slot_pos"] = c["layers"]["slot_pos"] - 1
+    c["pos"] = c["pos"] - 1
+    return c
+
+
+def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array, *,
+            ctx: ShardCtx = ShardCtx(), inputs_embeds: Optional[jax.Array] = None,
+            headroom: int = 64):
+    """tokens (B,S) -> (last-token logits (B,V), filled cache).
+
+    ``headroom`` empty slots are appended so decode steps never wrap onto
+    the prompt (full-attention semantics)."""
+    B, S = tokens.shape
+    h, _, kvs = hidden_states(params, cfg, tokens, ctx=ctx, collect_kv=True,
+                              inputs_embeds=inputs_embeds)
+    table, tied = _unembed_table(params, cfg)
+    logits = layers.unembed_apply(table, h[:, -1], tied)
+    k, v = kvs                                             # (L,B,S,Hkv,hd)
+    pad = ((0, 0), (0, 0), (0, 0), (0, headroom), (0, 0))
+    slot = jnp.concatenate([jnp.arange(S, dtype=jnp.int32),
+                            jnp.full((headroom,), -1, jnp.int32)])
+    cache = {
+        "layers": {
+            "k": jnp.pad(jnp.moveaxis(k, 2, 3), pad),      # (L,B,Hkv,S+hr,hd)
+            "v": jnp.pad(jnp.moveaxis(v, 2, 3), pad),
+            "slot_pos": jnp.broadcast_to(slot[None], (cfg.num_layers, S + headroom)),
+        },
+        "pos": jnp.array(S - 1, jnp.int32),
+    }
+    return logits, cache
+
+
+def decode_step(params: dict, cfg: ModelConfig, cache: dict,
+                tokens: jax.Array, *, ctx: ShardCtx = ShardCtx()):
+    """One decode step. tokens (B,) -> (logits (B,V), updated cache).
+
+    Layers are UNROLLED up to 48 deep (§Perf H3): scanning layers at decode
+    makes XLA materialize the stacked cache ``ys`` with a full-buffer copy
+    per layer (copy-insertion on the in-loop DUS), ~L x the intrinsic cache
+    traffic. Unrolled, each layer's ring-buffer update aliases in place and
+    the step reads params+cache exactly once. Beyond 48 layers (94-layer
+    MoE) compile time of the unrolled graph outweighs the win and the scan
+    path is kept (trade-off recorded in EXPERIMENTS §Perf H3)."""
+    B = tokens.shape[0]
+    pos = cache["pos"] + 1
+    x = layers.embed_apply(params["embed"], tokens[:, None], cdtype(cfg))
+    if cfg.num_layers > 48:
+        return _decode_step_scanned(params, cfg, cache, x, pos, ctx)
+
+    layer_cache = dict(cache["layers"])
+    positions = jnp.broadcast_to(pos[None, None], (B, 1))
+    C = layer_cache["k"].shape[3]
+    slot = (pos % C).astype(jnp.int32)
+    for i in range(cfg.num_layers):
+        p_layer = jax.tree_util.tree_map(lambda a: a[i], params["blocks"])
+        h = layers.norm_apply(p_layer["ln1"], x, cfg.norm)
+        q, k_new, v_new = attn_mod._project_qkv(p_layer["attn"], cfg, h,
+                                                positions)
+        # slice this layer's slab, ring-write the token, write the slab back
+        # at a STATIC layer index (keeps SPMD from replicating the cache)
+        k_l = jax.lax.dynamic_index_in_dim(layer_cache["k"], i, 0, False)
+        v_l = jax.lax.dynamic_index_in_dim(layer_cache["v"], i, 0, False)
+        sp_l = jax.lax.dynamic_index_in_dim(layer_cache["slot_pos"], i, 0, False)
+        k_l = jax.lax.dynamic_update_slice(
+            k_l, jnp.moveaxis(k_new, 1, 2).astype(k_l.dtype), (0, 0, slot, 0))
+        v_l = jax.lax.dynamic_update_slice(
+            v_l, jnp.moveaxis(v_new, 1, 2).astype(v_l.dtype), (0, 0, slot, 0))
+        sp_l = jax.lax.dynamic_update_slice(
+            sp_l, pos[None].astype(jnp.int32), (slot,))
+        layer_cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+            layer_cache["k"], k_l[None], i, 0)
+        layer_cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+            layer_cache["v"], v_l[None], i, 0)
+        layer_cache["slot_pos"] = jax.lax.dynamic_update_slice_in_dim(
+            layer_cache["slot_pos"], sp_l[None], i, 0)
+        a = attn_mod.decode_attend(p_layer["attn"], cfg, q[:, 0], k_l, v_l,
+                                   sp_l, pos, window=cfg.sliding_window)
+        if cfg.parallel_block:
+            if cfg.moe is not None:
+                m, _ = moe_mod.moe_apply(p_layer["moe"], cfg, h, ctx=ctx)
+            else:
+                m = layers.mlp_apply(p_layer["mlp"], h, cfg.mlp)
+            x = x + a + m
+        else:
+            x = x + a
+            h2 = layers.norm_apply(p_layer["ln2"], x, cfg.norm)
+            if cfg.moe is not None:
+                m, _ = moe_mod.moe_apply(p_layer["moe"], cfg, h2, ctx=ctx)
+            else:
+                m = layers.mlp_apply(p_layer["mlp"], h2, cfg.mlp)
+            x = x + m
+    new_layer_cache = layer_cache
+    x = layers.norm_apply(params["final_norm"], x, cfg.norm)
+    table, tied = _unembed_table(params, cfg)
+    logits = layers.unembed_apply(table, x[:, 0], tied)
+    return logits, {"layers": new_layer_cache, "pos": pos}
+
+
+def _decode_step_scanned(params, cfg, cache, x, pos, ctx):
+    """Scan-over-layers decode (deep stacks where unrolling is too costly
+    to compile; pays the per-layer cache copy — see §Perf H3)."""
+    def body(carry, inp):
+        x = carry
+        p_layer, cache_l = inp
+        h = layers.norm_apply(p_layer["ln1"], x, cfg.norm)
+        a, new_cache = attn_mod.decode_attention(
+            p_layer["attn"], cfg, h, cache_l, pos, ctx=ctx,
+            window=cfg.sliding_window)
+        if cfg.parallel_block:
+            if cfg.moe is not None:
+                m, _ = moe_mod.moe_apply(p_layer["moe"], cfg, h, ctx=ctx)
+            else:
+                m = layers.mlp_apply(p_layer["mlp"], h, cfg.mlp)
+            x = x + a + m
+        else:
+            x = x + a
+            h2 = layers.norm_apply(p_layer["ln2"], x, cfg.norm)
+            if cfg.moe is not None:
+                m, _ = moe_mod.moe_apply(p_layer["moe"], cfg, h2, ctx=ctx)
+            else:
+                m = layers.mlp_apply(p_layer["mlp"], h2, cfg.mlp)
+            x = x + m
+        return x, new_cache
+
+    x, new_layer_cache = jax.lax.scan(body, x,
+                                      (params["blocks"], cache["layers"]))
+    x = layers.norm_apply(params["final_norm"], x, cfg.norm)
+    table, tied = _unembed_table(params, cfg)
+    logits = layers.unembed_apply(table, x[:, 0], tied)
+    return logits, {"layers": new_layer_cache, "pos": pos}

@@ -1,0 +1,241 @@
+"""Whisper-style encoder-decoder (audio family). The conv frontend is a STUB
+per the assignment: ``input_specs()`` provides precomputed frame embeddings
+(B, F, D) — everything after the convs is implemented.
+
+Paper-technique mapping: the encoder KV for cross-attention is projected
+ONCE at prefill and reused every decode step — the enc-dec analogue of the
+paper's decoupled ``W.x`` prefetch (input-dependent work hoisted off the
+sequential decode path).
+
+Positions: sinusoidal for both stacks (whisper uses learned decoder
+positions; sinusoidal avoids coupling a table size to the 32k decode cell —
+recorded in DESIGN.md).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.params import Spec, init_params, stack_specs
+from repro.distributed.sharding import ShardCtx, constrain
+from repro.models import attention as attn_mod
+from repro.models import layers
+from repro.models.layers import cdtype, dense_apply
+from repro.models.transformer import chunked_ce
+
+
+def sinusoid(positions: jax.Array, d: int) -> jax.Array:
+    """(..., S) int -> (..., S, D) float32 sinusoidal embedding."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / max(half - 1, 1))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def enc_block_specs(cfg: ModelConfig) -> dict:
+    return {
+        "ln1": layers.norm_specs(cfg.d_model, cfg.norm),
+        "attn": attn_mod.attn_specs(cfg),
+        "ln2": layers.norm_specs(cfg.d_model, cfg.norm),
+        "mlp": layers.mlp_specs(cfg.d_model, cfg.d_ff, cfg.mlp),
+    }
+
+
+def dec_block_specs(cfg: ModelConfig) -> dict:
+    return {
+        "ln1": layers.norm_specs(cfg.d_model, cfg.norm),
+        "self_attn": attn_mod.attn_specs(cfg),
+        "ln_c": layers.norm_specs(cfg.d_model, cfg.norm),
+        "cross_attn": attn_mod.attn_specs(cfg),
+        "ln2": layers.norm_specs(cfg.d_model, cfg.norm),
+        "mlp": layers.mlp_specs(cfg.d_model, cfg.d_ff, cfg.mlp),
+    }
+
+
+def lm_specs(cfg: ModelConfig) -> dict:
+    enc_layers = cfg.encoder.num_layers
+    return {
+        "embed": layers.embed_specs(cfg.vocab_size, cfg.d_model),  # tied unembed
+        "enc_blocks": stack_specs(enc_block_specs(cfg), enc_layers),
+        "enc_norm": layers.norm_specs(cfg.d_model, cfg.norm),
+        "dec_blocks": stack_specs(dec_block_specs(cfg), cfg.num_layers),
+        "final_norm": layers.norm_specs(cfg.d_model, cfg.norm),
+    }
+
+
+def encode(params: dict, cfg: ModelConfig, frames: jax.Array, *,
+           ctx: ShardCtx) -> jax.Array:
+    """frames: (B,F,D) precomputed post-conv embeddings -> (B,F,D)."""
+    B, F, _ = frames.shape
+    x = (frames.astype(cdtype(cfg))
+         + sinusoid(jnp.arange(F), cfg.d_model)[None].astype(cdtype(cfg)))
+    x = constrain(x, ("batch", "act_seq", "act_embed"), ctx)
+    positions = jnp.broadcast_to(jnp.arange(F)[None, :], (B, F))
+
+    def blockfn(p, x):
+        h = layers.norm_apply(p["ln1"], x, cfg.norm)
+        a, _ = attn_mod.attention(p["attn"], cfg, h, ctx=ctx, causal=False,
+                                  positions=positions)
+        x = x + a
+        h2 = layers.norm_apply(p["ln2"], x, cfg.norm)
+        x = x + layers.mlp_apply(p["mlp"], h2, cfg.mlp)
+        return constrain(x, ("batch", "act_seq", "act_embed"), ctx)
+
+    def body(x, p):
+        if cfg.remat:
+            return jax.checkpoint(blockfn, prevent_cse=False)(p, x), None
+        return blockfn(p, x), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return layers.norm_apply(params["enc_norm"], x, cfg.norm)
+
+
+def _cross_kv(p_attn: dict, cfg: ModelConfig, enc_out: jax.Array):
+    """Project encoder output to cross K/V once (the decoupled path)."""
+    B, F, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+    k = dense_apply(p_attn["wk"], enc_out).reshape(B, F, cfg.num_kv_heads, hd)
+    v = dense_apply(p_attn["wv"], enc_out).reshape(B, F, cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        k = layers.head_rmsnorm(p_attn["k_norm"], k)
+    return k, v
+
+
+def dec_block_apply(p: dict, cfg: ModelConfig, x: jax.Array, enc_out, positions,
+                    *, ctx: ShardCtx, collect_kv: bool = False):
+    h = layers.norm_apply(p["ln1"], x, cfg.norm)
+    a, kv = attn_mod.attention(p["self_attn"], cfg, h, ctx=ctx, causal=True,
+                               positions=positions)
+    x = x + a
+    hc = layers.norm_apply(p["ln_c"], x, cfg.norm)
+    ckv = _cross_kv(p["cross_attn"], cfg, enc_out)
+    c, _ = attn_mod.attention(p["cross_attn"], cfg, hc, ctx=ctx, causal=False,
+                              positions=positions, kv=ckv)
+    x = x + c
+    h2 = layers.norm_apply(p["ln2"], x, cfg.norm)
+    x = x + layers.mlp_apply(p["mlp"], h2, cfg.mlp)
+    x = constrain(x, ("batch", "act_seq", "act_embed"), ctx)
+    return x, (kv if collect_kv else None), (ckv if collect_kv else None)
+
+
+def decode_hidden(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                  enc_out: jax.Array, *, ctx: ShardCtx, collect_kv=False):
+    B, S = tokens.shape
+    x = layers.embed_apply(params["embed"], tokens, cdtype(cfg))
+    x = x + sinusoid(jnp.arange(S), cfg.d_model)[None].astype(x.dtype)
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+    def body(x, p):
+        fn = functools.partial(dec_block_apply, cfg=cfg, enc_out=enc_out,
+                               positions=positions, ctx=ctx,
+                               collect_kv=collect_kv)
+        if cfg.remat and not collect_kv:
+            x2, kv, ckv = jax.checkpoint(fn, prevent_cse=False)(p, x=x)
+        else:
+            x2, kv, ckv = fn(p, x=x)
+        return x2, (kv, ckv)
+
+    x, (kvs, ckvs) = jax.lax.scan(body, x, params["dec_blocks"])
+    return layers.norm_apply(params["final_norm"], x, cfg.norm), kvs, ckvs
+
+
+def forward(params, cfg, batch, *, ctx: ShardCtx = ShardCtx()):
+    enc_out = encode(params, cfg, batch["frames"], ctx=ctx)
+    h, _, _ = decode_hidden(params, cfg, batch["tokens"], enc_out, ctx=ctx)
+    return layers.unembed_apply(params["embed"], h, tied=True)
+
+
+def loss_fn(params, cfg, batch, *, ctx: ShardCtx = ShardCtx()):
+    enc_out = encode(params, cfg, batch["frames"], ctx=ctx)
+    h, _, _ = decode_hidden(params, cfg, batch["tokens"], enc_out, ctx=ctx)
+    ce = chunked_ce(h, params["embed"], batch["targets"], batch.get("mask"),
+                    tied=True)
+    return ce, {"ce": ce, "aux": jnp.zeros((), jnp.float32)}
+
+
+# --- serving ------------------------------------------------------------------
+
+def cache_specs(cfg: ModelConfig, batch: int, capacity: int) -> dict:
+    F = cfg.encoder.num_frames
+    hd = cfg.resolved_head_dim
+    L = cfg.num_layers
+    return {
+        "self": attn_mod.init_cache_specs(cfg, batch, capacity, layers_axis=L),
+        "cross": {
+            "k": Spec((L, batch, cfg.num_kv_heads, F, hd),
+                      ("layers", "batch", "kv_heads", None, None),
+                      init="zeros", dtype=cfg.dtype),
+            "v": Spec((L, batch, cfg.num_kv_heads, F, hd),
+                      ("layers", "batch", "kv_heads", None, None),
+                      init="zeros", dtype=cfg.dtype),
+            "slot_pos": Spec((L, F), ("layers", None), init="zeros", dtype="int32"),
+        },
+        "pos": Spec((), (), init="zeros", dtype="int32"),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int) -> dict:
+    c = init_params(cache_specs(cfg, batch, capacity), jax.random.key(0))
+    c["self"]["slot_pos"] = c["self"]["slot_pos"] - 1
+    c["cross"]["slot_pos"] = (c["cross"]["slot_pos"] * 0
+                              + jnp.arange(cfg.encoder.num_frames)[None])
+    return c
+
+
+def prefill(params: dict, cfg: ModelConfig, batch: dict, *,
+            ctx: ShardCtx = ShardCtx()):
+    """batch: {frames (B,F,D), tokens (B,S)} -> (last logits, cache)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    enc_out = encode(params, cfg, batch["frames"], ctx=ctx)
+    h, kvs, ckvs = decode_hidden(params, cfg, tokens, enc_out, ctx=ctx,
+                                 collect_kv=True)
+    logits = layers.unembed_apply(params["embed"], h[:, -1], tied=True)
+    (k, v), (ck, cv) = kvs, ckvs
+    L = cfg.num_layers
+    cache = {
+        "self": {
+            "k": jnp.moveaxis(k, 2, 3), "v": jnp.moveaxis(v, 2, 3),
+            "slot_pos": jnp.broadcast_to(
+                jnp.arange(S, dtype=jnp.int32)[None], (L, S)),
+        },
+        "cross": {
+            "k": jnp.moveaxis(ck, 2, 3), "v": jnp.moveaxis(cv, 2, 3),
+            "slot_pos": jnp.broadcast_to(
+                jnp.arange(cfg.encoder.num_frames, dtype=jnp.int32)[None],
+                (L, cfg.encoder.num_frames)),
+        },
+        "pos": jnp.array(S - 1, jnp.int32),
+    }
+    return logits, cache
+
+
+def decode_step(params: dict, cfg: ModelConfig, cache: dict, tokens: jax.Array,
+                *, ctx: ShardCtx = ShardCtx()):
+    pos = cache["pos"] + 1
+    x = layers.embed_apply(params["embed"], tokens[:, None], cdtype(cfg))
+    x = x + sinusoid(pos[None, None], cfg.d_model).astype(x.dtype)
+
+    def body(x, inp):
+        p, self_c, cross_c = inp
+        h = layers.norm_apply(p["ln1"], x, cfg.norm)
+        a, new_self = attn_mod.decode_attention(p["self_attn"], cfg, h, self_c,
+                                                pos, ctx=ctx)
+        x = x + a
+        hc = layers.norm_apply(p["ln_c"], x, cfg.norm)
+        c, _ = attn_mod.decode_attention(p["cross_attn"], cfg, hc, cross_c,
+                                         pos, ctx=ctx, cross=True)
+        x = x + c
+        h2 = layers.norm_apply(p["ln2"], x, cfg.norm)
+        x = x + layers.mlp_apply(p["mlp"], h2, cfg.mlp)
+        return x, new_self
+
+    x, new_self = jax.lax.scan(body, x,
+                               (params["dec_blocks"], cache["self"], cache["cross"]))
+    x = layers.norm_apply(params["final_norm"], x, cfg.norm)
+    logits = layers.unembed_apply(params["embed"], x[:, 0], tied=True)
+    return logits, {"self": new_self, "cross": cache["cross"], "pos": pos}

@@ -1,0 +1,451 @@
+"""xLSTM LM: alternating mLSTM (matrix-memory) and sLSTM (scalar-memory)
+blocks, per arXiv:2405.04517, adapted to this framework.
+
+Paper-technique mapping (DESIGN.md §4):
+
+* sLSTM is a gated recurrence isomorphic to the paper's GRU: per step,
+  gate pre-activations are ``x W + h R + b``. The ``x W`` term is hoisted
+  out of the recurrence as one sequence-level GEMM (decoupled W.x), and the
+  recurrent ``h R`` matvec row-shards over the ``gates`` logical axis — the
+  paper's row-wise scheme, with the per-step all-gather of h as the
+  aggregation path.
+* mLSTM trains chunkwise-parallel (quadratic within a chunk, recurrent
+  across chunks, exp-gating stabilized); its DECODE step is the same
+  state-update matvec regime the paper targets.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.params import Spec, stack_specs
+from repro.distributed.sharding import ShardCtx, constrain
+from repro.models import layers
+from repro.models.layers import cdtype, dense_apply, dense_specs
+from repro.models.ssm import _causal_conv
+from repro.models.transformer import _unembed_table, chunked_ce
+
+
+def _mdims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    d = cfg.d_model
+    di = int(cfg.xlstm.proj_factor * d)
+    nh = cfg.num_heads
+    return di, nh, di // nh
+
+
+def _sdims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    d = cfg.d_model
+    nh = cfg.num_heads
+    return d, nh, d // nh
+
+
+# ---------------------------------------------------------------------------
+# mLSTM cell
+# ---------------------------------------------------------------------------
+
+def mlstm_recurrent_step(q, k, v, i_gate, f_gate, state):
+    """Single-step stabilized mLSTM. q/k/v: (B,NH,DH); i/f: (B,NH);
+    state = (C (B,NH,DH,DH), n (B,NH,DH), m (B,NH))."""
+    C, n, m = state
+    DH = q.shape[-1]
+    k = k * (DH ** -0.5)
+    logf = jax.nn.log_sigmoid(f_gate.astype(jnp.float32))
+    logi = i_gate.astype(jnp.float32)
+    m_new = jnp.maximum(logf + m, logi)
+    fs = jnp.exp(logf + m - m_new)[..., None]
+    is_ = jnp.exp(logi - m_new)[..., None]
+    kf, vf, qf = (a.astype(jnp.float32) for a in (k, v, q))
+    C_new = fs[..., None] * C + is_[..., None] * (kf[..., :, None] * vf[..., None, :])
+    n_new = fs * n + is_ * kf
+    num = jnp.einsum("bhd,bhde->bhe", qf, C_new)
+    den = jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n_new))
+    den = jnp.maximum(den, jnp.exp(-m_new))[..., None]
+    return num / den, (C_new, n_new, m_new)
+
+
+def mlstm_chunkwise(q, k, v, i_gate, f_gate, state, chunk: int = 64):
+    """q/k/v: (B,NH,S,DH); i/f: (B,NH,S). Returns (h (B,NH,S,DH), state')."""
+    B, NH, S, DH = q.shape
+    L = min(chunk, S)
+    while S % L:
+        L -= 1
+    NC = S // L
+    k = k * (DH ** -0.5)
+    logf = jax.nn.log_sigmoid(f_gate.astype(jnp.float32)).reshape(B, NH, NC, L)
+    logi = i_gate.astype(jnp.float32).reshape(B, NH, NC, L)
+    qc = q.reshape(B, NH, NC, L, DH).astype(jnp.float32)
+    kc = k.reshape(B, NH, NC, L, DH).astype(jnp.float32)
+    vc = v.reshape(B, NH, NC, L, DH).astype(jnp.float32)
+
+    def chunk_step(carry, blk):
+        C, n, m = carry
+        qb, kb, vb, lf, li = blk                    # (B,NH,L,DH)... (B,NH,L)
+        b = jnp.cumsum(lf, axis=-1)                 # within-chunk log-decay
+        BL = b[..., -1:]
+        g = jax.lax.cummax(li - b, axis=li.ndim - 1)  # max_j<=t (logi_j - b_j)
+        m_intra = b + g
+        m_inter = b + m[..., None]
+        m_t = jnp.maximum(m_inter, m_intra)         # (B,NH,L)
+        # intra-chunk quadratic part
+        dmat = (b[..., :, None] - b[..., None, :] + li[..., None, :]
+                - m_t[..., :, None])                # (B,NH,L,L)
+        tri = jnp.tril(jnp.ones((L, L), bool))
+        dmat = jnp.where(tri[None, None], dmat, -jnp.inf)
+        scores = jnp.einsum("bhld,bhmd->bhlm", qb, kb) * jnp.exp(dmat)
+        num = jnp.einsum("bhlm,bhmd->bhld", scores, vb)
+        den = scores.sum(-1)
+        # inter-chunk (previous state) part
+        sc_inter = jnp.exp(b + m[..., None] - m_t)  # (B,NH,L)
+        num = num + jnp.einsum("bhld,bhde->bhle", qb, C) * sc_inter[..., None]
+        den = den + jnp.einsum("bhld,bhd->bhl", qb, n) * sc_inter
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        # state update to end of chunk
+        m_new = jnp.maximum((BL + m[..., None])[..., 0], (BL + g[..., -1:])[..., 0])
+        w = jnp.exp(BL - b + li - m_new[..., None])  # (B,NH,L)
+        C_new = (jnp.exp(BL[..., 0] + m - m_new)[..., None, None] * C
+                 + jnp.einsum("bhl,bhld,bhle->bhde", w, kb, vb))
+        n_new = (jnp.exp(BL[..., 0] + m - m_new)[..., None] * n
+                 + jnp.einsum("bhl,bhld->bhd", w, kb))
+        return (C_new, n_new, m_new), h
+
+    blks = tuple(jnp.moveaxis(a, 2, 0) for a in (qc, kc, vc, logf, logi))
+    state, hs = jax.lax.scan(chunk_step, state, blks)
+    h = jnp.moveaxis(hs, 0, 2).reshape(B, NH, S, DH)
+    return h, state
+
+
+def mlstm_init_state(batch: int, nh: int, dh: int):
+    return (jnp.zeros((batch, nh, dh, dh), jnp.float32),
+            jnp.zeros((batch, nh, dh), jnp.float32),
+            jnp.full((batch, nh), -1e30, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block
+# ---------------------------------------------------------------------------
+
+def mlstm_block_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di, nh, dh = _mdims(cfg)
+    w = cfg.xlstm.conv_width
+    return {
+        "ln": layers.norm_specs(d, cfg.norm),
+        "w_up": dense_specs(d, 2 * di, ("embed", "gates")),
+        "conv": Spec((w, di), ("conv", "gates"), init="fan_in"),
+        "conv_b": Spec((di,), ("gates",), init="zeros"),
+        "wq": dense_specs(di, di, ("gates", "heads")),
+        "wk": dense_specs(di, di, ("gates", "heads")),
+        "wv": dense_specs(di, di, ("gates", "heads")),
+        "w_i": dense_specs(di, nh, ("gates", None), bias=True),
+        "w_f": dense_specs(di, nh, ("gates", None), bias=True),
+        "out_norm": Spec((nh, dh), (None, "head_dim"), init="ones"),
+        "w_down": dense_specs(di, d, ("gates", "embed")),
+        "skip": Spec((di,), ("gates",), init="ones"),
+    }
+
+
+def _heads(x, nh):
+    B, S, D = x.shape
+    return jnp.moveaxis(x.reshape(B, S, nh, D // nh), 1, 2)  # (B,NH,S,DH)
+
+
+def _headnorm(scale, h, eps=1e-6):
+    """Per-head RMS norm. h: (B,NH,S,DH) or (B,NH,DH)."""
+    hf = h.astype(jnp.float32)
+    var = (hf * hf).mean(-1, keepdims=True)
+    s = scale.astype(jnp.float32)
+    if h.ndim == 4:
+        s = s[None, :, None, :]
+    else:
+        s = s[None, :, :]
+    return hf * jax.lax.rsqrt(var + eps) * s
+
+
+def mlstm_block_apply(p: dict, cfg: ModelConfig, x: jax.Array, *,
+                      ctx: ShardCtx, chunk: int = 64,
+                      return_state: bool = False):
+    di, nh, dh = _mdims(cfg)
+    B, S, _ = x.shape
+    hln = layers.norm_apply(p["ln"], x, cfg.norm)
+    up = dense_apply(p["w_up"], hln)
+    xi, z = jnp.split(up, 2, axis=-1)
+    xc = jax.nn.silu(_causal_conv(xi, p["conv"], p["conv_b"]))
+    q = _heads(dense_apply(p["wq"], xc), nh)
+    k = _heads(dense_apply(p["wk"], xc), nh)
+    v = _heads(dense_apply(p["wv"], xi), nh)
+    ig = jnp.moveaxis(dense_apply(p["w_i"], xc), -1, 1)    # (B,NH,S)
+    fg = jnp.moveaxis(dense_apply(p["w_f"], xc), -1, 1)
+    h, (C, n, m) = mlstm_chunkwise(q, k, v, ig, fg,
+                                   mlstm_init_state(B, nh, dh), chunk)
+    h = _headnorm(p["out_norm"], h)                        # (B,NH,S,DH)
+    h = jnp.moveaxis(h, 1, 2).reshape(B, S, di).astype(x.dtype)
+    h = (h + xc * p["skip"].astype(x.dtype)[None, None, :]) * jax.nn.silu(z)
+    out = x + dense_apply(p["w_down"], h)
+    if not return_state:
+        return out
+    w = cfg.xlstm.conv_width
+    tail = xi[:, S - (w - 1):, :]
+    return out, {"conv_buf": tail, "C": C, "n": n, "mm": m}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block
+# ---------------------------------------------------------------------------
+
+def slstm_block_specs(cfg: ModelConfig) -> dict:
+    d, nh, dh = _sdims(cfg)
+    w = cfg.xlstm.conv_width
+    ff = -(-int(d * 4 / 3) // 64) * 64
+    return {
+        "ln": layers.norm_specs(d, cfg.norm),
+        "conv": Spec((w, d), ("conv", "embed"), init="fan_in"),
+        "conv_b": Spec((d,), ("embed",), init="zeros"),
+        # decoupled input projection: one GEMM for all 4 gates, whole sequence
+        "w": dense_specs(d, 4 * d, ("embed", "gates")),
+        # recurrent block-diagonal matrix: the paper's row-wise target
+        "r": Spec((nh, dh, 4 * dh), (None, "hidden", "gates"), init="recurrent"),
+        "b": Spec((4 * d,), ("gates",), init="zeros"),
+        "out_norm": Spec((nh, dh), (None, "head_dim"), init="ones"),
+        "up": dense_specs(d, 2 * ff, ("embed", "mlp")),
+        "down": dense_specs(ff, d, ("mlp", "embed")),
+    }
+
+
+def slstm_step(p: dict, cfg: ModelConfig, state, xw_t: jax.Array):
+    """One sLSTM step. xw_t: (B,4D) precomputed x W (decoupled);
+    state = (c,n,m,h) each (B,D). Returns (state', h_out (B,D))."""
+    d, nh, dh = _sdims(cfg)
+    c, n, m, h = state
+    B = h.shape[0]
+    hh = h.reshape(B, nh, dh)
+    rg = jnp.einsum("bhd,hde->bhe", hh.astype(jnp.float32),
+                    p["r"].astype(jnp.float32)).reshape(B, 4 * d)
+    g = xw_t.astype(jnp.float32) + rg + p["b"].astype(jnp.float32)
+    zt, it, ft, ot = jnp.split(g, 4, axis=-1)
+    logf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(logf + m, it)
+    i_ = jnp.exp(it - m_new)
+    f_ = jnp.exp(logf + m - m_new)
+    c_new = f_ * c + i_ * jnp.tanh(zt)
+    n_new = f_ * n + i_
+    h_new = jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, m_new, h_new), h_new
+
+
+def slstm_init_state(batch: int, d: int):
+    z = jnp.zeros((batch, d), jnp.float32)
+    return (z, z, jnp.full((batch, d), -1e30, jnp.float32), z)
+
+
+def slstm_block_apply(p: dict, cfg: ModelConfig, x: jax.Array, *,
+                      ctx: ShardCtx, return_state: bool = False):
+    d, nh, dh = _sdims(cfg)
+    B, S, _ = x.shape
+    hln = layers.norm_apply(p["ln"], x, cfg.norm)
+    xc = jax.nn.silu(_causal_conv(hln, p["conv"], p["conv_b"]))
+    xw = dense_apply(p["w"], xc)                           # (B,S,4D) one GEMM
+
+    def body(state, xw_t):
+        return slstm_step(p, cfg, state, xw_t)
+
+    (c, n, m, hT), hs = jax.lax.scan(body, slstm_init_state(B, d),
+                                     jnp.moveaxis(xw, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1)                             # (B,S,D)
+    h = _headnorm(p["out_norm"], jnp.moveaxis(h.reshape(B, S, nh, dh), 1, 2))
+    h = jnp.moveaxis(h, 1, 2).reshape(B, S, d).astype(x.dtype)
+    x = x + h
+    u, zg = jnp.split(dense_apply(p["up"], x), 2, axis=-1)
+    out = x + dense_apply(p["down"], jax.nn.gelu(u) * zg)
+    if not return_state:
+        return out
+    w = cfg.xlstm.conv_width
+    tail = hln[:, S - (w - 1):, :]
+    return out, {"conv_buf": tail, "c": c, "n": n, "sm": m, "h": hT}
+
+
+# ---------------------------------------------------------------------------
+# full LM (family "ssm": xlstm-125m)
+# ---------------------------------------------------------------------------
+
+def lm_specs(cfg: ModelConfig) -> dict:
+    pairs = cfg.num_layers // 2
+    return {
+        "embed": layers.embed_specs(cfg.vocab_size, cfg.d_model),
+        "pairs": stack_specs({"m": mlstm_block_specs(cfg),
+                              "s": slstm_block_specs(cfg)}, pairs),
+        "final_norm": layers.norm_specs(cfg.d_model, cfg.norm),
+        "lm_head": Spec((cfg.d_model, cfg.vocab_size), ("embed", "vocab"),
+                        init="fan_in"),
+    }
+
+
+def hidden_states(params: dict, cfg: ModelConfig, tokens: jax.Array, *,
+                  ctx: ShardCtx):
+    x = layers.embed_apply(params["embed"], tokens, cdtype(cfg))
+    x = constrain(x, ("batch", "act_seq", "act_embed"), ctx)
+
+    def body(x, p_pair):
+        def blockfn(p_pair, x):
+            x = mlstm_block_apply(p_pair["m"], cfg, x, ctx=ctx)
+            x = slstm_block_apply(p_pair["s"], cfg, x, ctx=ctx)
+            return constrain(x, ("batch", "act_seq", "act_embed"), ctx)
+        if cfg.remat:
+            x = jax.checkpoint(blockfn, prevent_cse=False)(p_pair, x)
+        else:
+            x = blockfn(p_pair, x)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["pairs"])
+    return layers.norm_apply(params["final_norm"], x, cfg.norm)
+
+
+def forward(params, cfg, tokens, *, ctx: ShardCtx = ShardCtx()):
+    h = hidden_states(params, cfg, tokens, ctx=ctx)
+    return layers.unembed_apply(params["lm_head"], h, tied=False)
+
+
+def loss_fn(params, cfg, batch, *, ctx: ShardCtx = ShardCtx()):
+    h = hidden_states(params, cfg, batch["tokens"], ctx=ctx)
+    ce = chunked_ce(h, params["lm_head"], batch["targets"], batch.get("mask"),
+                    tied=False)
+    return ce, {"ce": ce, "aux": jnp.zeros((), jnp.float32)}
+
+
+# --- serving ------------------------------------------------------------------
+
+def cache_specs(cfg: ModelConfig, batch: int, capacity: int = 0) -> dict:
+    """Recurrent state only — O(1) in context length (long_500k runs here)."""
+    pairs = cfg.num_layers // 2
+    d = cfg.d_model
+    di, nh, dh = _mdims(cfg)
+    w = cfg.xlstm.conv_width
+    f32 = "float32"
+    return {
+        "m": {
+            "conv_buf": Spec((pairs, batch, w - 1, di), ("layers", "batch", None, "gates"), init="zeros", dtype=cfg.dtype),
+            "C": Spec((pairs, batch, nh, dh, dh), ("layers", "batch", None, "head_dim", None), init="zeros", dtype=f32),
+            "n": Spec((pairs, batch, nh, dh), ("layers", "batch", None, "head_dim"), init="zeros", dtype=f32),
+            "mm": Spec((pairs, batch, nh), ("layers", "batch", None), init="zeros", dtype=f32),
+        },
+        "s": {
+            "conv_buf": Spec((pairs, batch, w - 1, d), ("layers", "batch", None, "embed"), init="zeros", dtype=cfg.dtype),
+            "c": Spec((pairs, batch, d), ("layers", "batch", None), init="zeros", dtype=f32),
+            "n": Spec((pairs, batch, d), ("layers", "batch", None), init="zeros", dtype=f32),
+            "sm": Spec((pairs, batch, d), ("layers", "batch", None), init="zeros", dtype=f32),
+            "h": Spec((pairs, batch, d), ("layers", "batch", None), init="zeros", dtype=f32),
+        },
+        "pos": Spec((), (), init="zeros", dtype="int32"),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int = 0) -> dict:
+    from repro.core.params import init_params
+    c = init_params(cache_specs(cfg, batch), jax.random.key(0))
+    c["m"]["mm"] = c["m"]["mm"] - 1e30
+    c["s"]["sm"] = c["s"]["sm"] - 1e30
+    return c
+
+
+def _mlstm_decode(p, cfg, x, cache_m):
+    di, nh, dh = _mdims(cfg)
+    B = x.shape[0]
+    hln = layers.norm_apply(p["ln"], x, cfg.norm)[:, 0]    # (B,D)
+    up = dense_apply(p["w_up"], hln)
+    xi, z = jnp.split(up, 2, axis=-1)
+    window = jnp.concatenate([cache_m["conv_buf"],
+                              xi[:, None, :].astype(cache_m["conv_buf"].dtype)], 1)
+    xc = jax.nn.silu((window * p["conv"].astype(window.dtype)[None]).sum(1)
+                     + p["conv_b"].astype(window.dtype))
+    q = dense_apply(p["wq"], xc).reshape(B, nh, dh)
+    k = dense_apply(p["wk"], xc).reshape(B, nh, dh)
+    v = dense_apply(p["wv"], xi).reshape(B, nh, dh)
+    ig = dense_apply(p["w_i"], xc)                         # (B,NH)
+    fg = dense_apply(p["w_f"], xc)
+    h, (C, n, m) = mlstm_recurrent_step(q, k, v, ig, fg,
+                                        (cache_m["C"], cache_m["n"], cache_m["mm"]))
+    h = _headnorm(p["out_norm"], h).reshape(B, di).astype(x.dtype)
+    h = (h + xc * p["skip"].astype(x.dtype)[None, :]) * jax.nn.silu(z)
+    out = x + dense_apply(p["w_down"], h)[:, None, :]
+    return out, {"conv_buf": window[:, 1:], "C": C, "n": n, "mm": m}
+
+
+def _slstm_decode(p, cfg, x, cache_s):
+    d, nh, dh = _sdims(cfg)
+    hln = layers.norm_apply(p["ln"], x, cfg.norm)[:, 0]
+    window = jnp.concatenate([cache_s["conv_buf"],
+                              hln[:, None, :].astype(cache_s["conv_buf"].dtype)], 1)
+    xc = jax.nn.silu((window * p["conv"].astype(window.dtype)[None]).sum(1)
+                     + p["conv_b"].astype(window.dtype))
+    xw = dense_apply(p["w"], xc)
+    state = (cache_s["c"], cache_s["n"], cache_s["sm"], cache_s["h"])
+    (c, n, m, h), h_out = slstm_step(p, cfg, state, xw)
+    B = x.shape[0]
+    hn = _headnorm(p["out_norm"],
+                   h_out.reshape(B, nh, dh)).reshape(B, d).astype(x.dtype)
+    x = x + hn[:, None, :]
+    u, zg = jnp.split(dense_apply(p["up"], x), 2, axis=-1)
+    x = x + dense_apply(p["down"], jax.nn.gelu(u) * zg)
+    return x, {"conv_buf": window[:, 1:], "c": c, "n": n, "sm": m, "h": h}
+
+
+def decode_step(params: dict, cfg: ModelConfig, cache: dict, tokens: jax.Array,
+                *, ctx: ShardCtx = ShardCtx()):
+    x = layers.embed_apply(params["embed"], tokens[:, None], cdtype(cfg))
+
+    def body(x, inp):
+        p_pair, cm, cs = inp
+        x, cm2 = _mlstm_decode(p_pair["m"], cfg, x, cm)
+        x, cs2 = _slstm_decode(p_pair["s"], cfg, x, cs)
+        return x, (cm2, cs2)
+
+    x, (new_m, new_s) = jax.lax.scan(body, x, (params["pairs"], cache["m"], cache["s"]))
+    x = layers.norm_apply(params["final_norm"], x, cfg.norm)
+    logits = layers.unembed_apply(params["lm_head"], x[:, 0], tied=False)
+    return logits, {"m": new_m, "s": new_s, "pos": cache["pos"] + 1}
+
+
+def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array, *,
+            ctx: ShardCtx = ShardCtx()):
+    """CHUNKWISE-PARALLEL prefill (§Perf H1): the full sequence runs through
+    the parallel forward (mLSTM chunkwise, sLSTM with the decoupled xW GEMM)
+    and the decode cache is the per-block final state. Weights stream from
+    HBM once per block instead of once per token — the paper's row-reuse
+    insight applied at the serving layer. (The naive per-token prefill is
+    ``prefill_sequential``, kept as the recorded baseline.)"""
+    B, S = tokens.shape
+    x = layers.embed_apply(params["embed"], tokens, cdtype(cfg))
+    x = constrain(x, ("batch", "act_seq", "act_embed"), ctx)
+
+    def body(x, p_pair):
+        x, m_state = mlstm_block_apply(p_pair["m"], cfg, x, ctx=ctx,
+                                       return_state=True)
+        x, s_state = slstm_block_apply(p_pair["s"], cfg, x, ctx=ctx,
+                                       return_state=True)
+        return x, (m_state, s_state)
+
+    x, (m_states, s_states) = jax.lax.scan(body, x, params["pairs"])
+    x = layers.norm_apply(params["final_norm"], x, cfg.norm)
+    logits = layers.unembed_apply(params["lm_head"], x[:, -1], tied=False)
+    cache = {"m": m_states, "s": s_states,
+             "pos": jnp.array(S - 1, jnp.int32)}
+    return logits, cache
+
+
+def prefill_sequential(params: dict, cfg: ModelConfig, tokens: jax.Array, *,
+                       ctx: ShardCtx = ShardCtx()):
+    """Baseline: per-token prefill through decode steps (re-reads every
+    weight each step — kept for the §Perf before/after)."""
+    B, S = tokens.shape
+    cache = init_cache(cfg, B)
+
+    def body(cache, t):
+        logits, cache = decode_step(params, cfg, cache, t, ctx=ctx)
+        return cache, None
+
+    cache, _ = jax.lax.scan(body, cache, jnp.moveaxis(tokens[:, :-1], 1, 0))
+    logits, cache = decode_step(params, cfg, cache, tokens[:, -1], ctx=ctx)
+    return logits, cache

@@ -1,0 +1,181 @@
+"""Training loop core: jitted train_step with microbatch accumulation,
+AdamW, and an explicit cross-pod DP mode with compressed gradient exchange.
+
+Two step builders:
+
+* ``make_train_step`` — pure-GSPMD: batch sharded over (pod, data); XLA
+  derives every collective. This is the dry-run / production default.
+* ``make_pod_train_step`` — the multi-pod distributed-optimization path:
+  ``jax.shard_map(axis_names={"pod"})`` makes the pod axis MANUAL (data/model
+  stay auto inside), each pod computes local gradients, and the cross-pod
+  exchange goes through ``repro.distributed.compression`` (int8+error
+  feedback / bf16) — the slow-link-aware design for 1000+ node meshes.
+
+State is a plain dict so checkpointing/resharding is tree surgery:
+{"params", "opt": {"mu","nu"}, "step", optional "ef"}.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.core.params import Spec, abstract_params, init_params, is_spec
+from repro.distributed import compression
+from repro.distributed.sharding import ShardCtx, param_shardings, resolve_pspec
+from repro.models import api as mapi
+from repro.optim import adamw
+
+
+def state_specs(model_cfg: ModelConfig, train_cfg: TrainConfig,
+                with_ef: bool = False, n_pods: int = 1) -> dict:
+    A = mapi.get_api(model_cfg)
+    pspecs = A.specs(model_cfg)
+    s = {
+        "params": pspecs,
+        "opt": adamw.opt_specs(pspecs, train_cfg.opt_dtype),
+        "step": Spec((), (), init="zeros", dtype="int32"),
+    }
+    if with_ef:
+        def f(sp: Spec) -> Spec:
+            return Spec((n_pods,) + tuple(sp.shape), ("podwise",) + tuple(sp.axes),
+                        init="zeros", dtype="float32")
+        s["ef"] = jax.tree_util.tree_map(f, pspecs, is_leaf=is_spec)
+    return s
+
+
+def init_state(model_cfg: ModelConfig, train_cfg: TrainConfig, seed: int = 0,
+               with_ef: bool = False, n_pods: int = 1) -> dict:
+    specs = state_specs(model_cfg, train_cfg, with_ef, n_pods)
+    return init_params(specs, jax.random.key(seed), model_cfg.param_dtype)
+
+
+def _micro_grads(loss_fn, params, batch, micro: int):
+    """Gradient accumulation over ``micro`` microbatches via lax.scan."""
+    if micro <= 1:
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        return grads, loss, metrics
+
+    def split(x):
+        return x.reshape((micro, x.shape[0] // micro) + x.shape[1:])
+    mb = jax.tree_util.tree_map(split, batch)
+
+    def body(acc, one):
+        (loss, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, one)
+        acc = jax.tree_util.tree_map(jnp.add, acc, g)
+        return acc, (loss, metrics)
+
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    grads, (losses, metricses) = jax.lax.scan(body, zeros, mb, length=micro)
+    grads = jax.tree_util.tree_map(lambda g: (g / micro).astype(jnp.float32), grads)
+    metrics = jax.tree_util.tree_map(lambda m: m.mean(), metricses)
+    return grads, losses.mean(), metrics
+
+
+def make_train_step(model_cfg: ModelConfig, train_cfg: TrainConfig,
+                    ctx: ShardCtx):
+    """Pure-GSPMD step: (state, batch) -> (state, metrics)."""
+    A = mapi.get_api(model_cfg)
+
+    def loss_fn(params, batch):
+        return A.loss_fn(params, model_cfg, batch, ctx)
+
+    def step_fn(state, batch):
+        grads, loss, metrics = _micro_grads(loss_fn, state["params"], batch,
+                                            train_cfg.microbatches)
+        params2, opt2, om = adamw.adamw_update(
+            state["params"], grads, state["opt"], state["step"], train_cfg)
+        new_state = {"params": params2, "opt": opt2, "step": state["step"] + 1}
+        metrics = dict(metrics, loss=loss, **om)
+        return new_state, metrics
+
+    return step_fn
+
+
+def make_pod_train_step(model_cfg: ModelConfig, train_cfg: TrainConfig,
+                        ctx: ShardCtx):
+    """Explicit-DP over the pod axis with compressed gradient all-reduce.
+
+    Requires a mesh with a "pod" axis. Gradients are computed per pod
+    (auto-sharded over data/model inside), exchanged with
+    ``train_cfg.grad_compression``, then the (replicated) optimizer update
+    runs inside the same shard_map.
+    """
+    mesh = ctx.mesh
+    assert mesh is not None and "pod" in mesh.axis_names
+    A = mapi.get_api(model_cfg)
+    method = train_cfg.grad_compression
+    use_ef = method == "int8_ef"
+    # inside the pod-manual region, constraints may only touch auto axes
+    inner_ctx = ShardCtx(mesh=mesh, profile=ctx.profile,
+                         manual=ctx.manual + ("pod",))
+
+    def loss_fn(params, batch):
+        return A.loss_fn(params, model_cfg, batch, inner_ctx)
+
+    def local_fn(state, batch, reduce: bool = True):
+        ef = None
+        if use_ef:
+            ef = jax.tree_util.tree_map(lambda e: e[0], state["ef"])
+        grads, loss, metrics = _micro_grads(loss_fn, state["params"], batch,
+                                            train_cfg.microbatches)
+        if reduce:
+            grads, ef2 = compression.pod_allreduce_mean(grads, method, "pod", ef)
+            loss = jax.lax.pmean(loss, "pod")
+            metrics = jax.tree_util.tree_map(
+                lambda m: jax.lax.pmean(m, "pod"), metrics)
+        else:                       # structure probe (outside shard_map)
+            ef2 = ef
+        params2, opt2, om = adamw.adamw_update(
+            state["params"], grads, state["opt"], state["step"], train_cfg)
+        new_state = {"params": params2, "opt": opt2, "step": state["step"] + 1}
+        if use_ef:
+            new_state["ef"] = jax.tree_util.tree_map(lambda e: e[None], ef2)
+        return new_state, dict(metrics, loss=loss, **om)
+
+    # state replicated over pod except EF (pod-local); batch sharded over pod
+    def _state_spec(s):
+        if not use_ef:
+            return jax.tree_util.tree_map(lambda _: P(), s)
+        out = {k: jax.tree_util.tree_map(lambda _: P(), v)
+               for k, v in s.items() if k != "ef"}
+        out["ef"] = jax.tree_util.tree_map(lambda _: P("pod"), s["ef"])
+        return out
+
+    def step_fn(state, batch):
+        batch_specs = jax.tree_util.tree_map(lambda _: P("pod"), batch)
+        st_specs = _state_spec(state)
+        # metrics dict structure is data-dependent; derive out_specs from a
+        # collective-free probe (psum can't trace outside the shard_map)
+        met_shape = jax.eval_shape(
+            lambda s, b: local_fn(s, b, reduce=False)[1], state, batch)
+        met_specs = jax.tree_util.tree_map(lambda _: P(), met_shape)
+        return jax.shard_map(
+            local_fn, mesh=mesh, axis_names={"pod"},
+            in_specs=(st_specs, batch_specs),
+            out_specs=(st_specs, met_specs),
+            check_vma=False,
+        )(state, batch)
+
+    return step_fn
+
+
+def jit_train_step(step_fn, model_cfg: ModelConfig, train_cfg: TrainConfig,
+                   ctx: ShardCtx, batch_specs_tree, with_ef=False, n_pods=1):
+    """jit with in/out shardings derived from the spec trees."""
+    if ctx.mesh is None:
+        return jax.jit(step_fn, donate_argnums=(0,))
+    sspecs = state_specs(model_cfg, train_cfg, with_ef, n_pods)
+    state_sh = param_shardings(sspecs, ctx)
+    batch_sh = jax.tree_util.tree_map(
+        lambda s: NamedSharding(ctx.mesh, resolve_pspec(s.axes, s.shape, ctx)),
+        batch_specs_tree, is_leaf=is_spec)
+    return jax.jit(step_fn, in_shardings=(state_sh, batch_sh),
+                   donate_argnums=(0,))

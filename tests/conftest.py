@@ -1,0 +1,31 @@
+"""Shared test fixtures. NOTE: no XLA_FLAGS here — single-process tests see
+1 device; multi-device tests run their bodies in a subprocess (see
+``run_multidev``)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_multidev(body: str, n_devices: int = 4, timeout: int = 420) -> str:
+    """Run ``body`` in a fresh python with n host devices; returns stdout.
+    The body must print 'PASS' on success."""
+    script = ("import os\n"
+              f"os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count={n_devices}'\n"
+              + textwrap.dedent(body))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                          text=True, timeout=timeout, env=env)
+    assert proc.returncode == 0, f"stderr:\n{proc.stderr[-4000:]}"
+    assert "PASS" in proc.stdout, f"stdout:\n{proc.stdout[-2000:]}\nstderr:\n{proc.stderr[-2000:]}"
+    return proc.stdout
+
+
+@pytest.fixture(scope="session")
+def multidev():
+    return run_multidev

@@ -1,0 +1,51 @@
+"""Miniature dry-run on an 8-device host mesh: proves the lowering pipeline
+(abstract state -> jit -> lower -> compile -> analyses) end to end without
+the 512-device cost. The full production sweep is exercised by
+``python -m repro.launch.dryrun --all`` (see EXPERIMENTS.md §Dry-run)."""
+import pytest
+
+
+def test_mini_dryrun_train_and_decode(multidev):
+    multidev("""
+import jax, jax.numpy as jnp
+from jax.sharding import AxisType
+from repro.configs.base import get_smoke_config, TrainConfig, ShapeConfig
+from repro.core.params import abstract_params
+from repro.distributed.sharding import ShardCtx, param_shardings
+from repro.models import api as mapi
+from repro.train import trainer
+from repro.launch.hloparse import analyze
+
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                     axis_types=(AxisType.Auto,)*3)
+ctx = ShardCtx(mesh=mesh)
+
+for arch in ["qwen3-0.6b", "qwen2-moe-a2.7b", "xlstm-125m", "hymba-1.5b"]:
+    cfg = get_smoke_config(arch)
+    A = mapi.get_api(cfg)
+    tcfg = TrainConfig()
+    shape = ShapeConfig("t", 32, 8, "train")
+    bspecs = mapi.input_specs(cfg, shape)
+    sspecs = trainer.state_specs(cfg, tcfg)
+    fn = jax.jit(trainer.make_train_step(cfg, tcfg, ctx),
+                 in_shardings=(param_shardings(sspecs, ctx),
+                               param_shardings(bspecs, ctx)))
+    lowered = fn.lower(abstract_params(sspecs, cfg.param_dtype),
+                       abstract_params(bspecs, "float32"))
+    compiled = lowered.compile()
+    assert compiled.memory_analysis() is not None
+    a = analyze(compiled.as_text())
+    assert a.flops > 0, arch
+    # decode path
+    pspecs = A.specs(cfg)
+    cspecs = A.cache_specs(cfg, 8, 64)
+    tok = jax.ShapeDtypeStruct((8,), jnp.int32)
+    dfn = jax.jit(lambda p, c, t: A.decode_step(p, cfg, c, t, ctx),
+                  in_shardings=(param_shardings(pspecs, ctx),
+                                param_shardings(cspecs, ctx), None))
+    dcomp = dfn.lower(abstract_params(pspecs, cfg.param_dtype),
+                      abstract_params(cspecs, cfg.param_dtype), tok).compile()
+    assert dcomp.memory_analysis() is not None
+    print("ok", arch)
+print("PASS")
+""", n_devices=8, timeout=560)
