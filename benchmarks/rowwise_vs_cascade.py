@@ -1,6 +1,6 @@
 """E4 — row-wise vs cascade parallelization of the recurrent matvec.
 
-Three views:
+Four views:
   (a) single-host wall-clock of the two STRUCTURAL modes (lax.map grid vs
       sequential-accumulation scan) at paper sizes and LM sizes,
   (b) the analytic v5e model across row_shards (the AIE-tiles -> TPU-chips
@@ -8,12 +8,17 @@ Three views:
   (c) collective bytes/ops parsed from the compiled shard_map programs on a
       4-device host mesh (subprocess; all-gather-only vs psum — Fig. 1b's
       aggregation study), including the beyond-paper v3 single-aggregation
-      variant.
+      variant,
+  (d) DEPTH SWEEP (``--num-layers 1 2 4``): per-step decode latency of a
+      deep GRU stack per structural mode, written to BENCH_gru_depth.json —
+      the paper's figure of merit extended to multi-layer stacks.
 
 CSV: name,us_per_call,derived
 """
 from __future__ import annotations
 
+import argparse
+import json
 import os
 import subprocess
 import sys
@@ -63,6 +68,42 @@ def _measure_seq(cfg: GRUConfig, H: int, X: int, T: int = 32,
     return (time.perf_counter() - t0) / iters * 1e6
 
 
+def _measure_stack_decode(cfg: GRUConfig, iters: int = 200) -> float:
+    """Per-step decode latency (us) of one jitted pass through the stack."""
+    params = init_params(gru.gru_stack_specs(cfg), jax.random.key(0))
+    hs = gru.stack_h0(cfg, 1)
+    x = jnp.ones((1, cfg.input_dim))
+    f = jax.jit(lambda p, h, xv: gru.gru_stack_decode_step(p, h, xv, cfg=cfg))
+    out = f(params, hs, x)
+    out[-1].block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = f(params, out, x)
+    out[-1].block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run_depth_sweep(layers=(1, 2, 4), H: int = 32, X: int = 5,
+                    json_path: str = "BENCH_gru_depth.json", csv=True):
+    """Decode-latency depth sweep; emits the BENCH_gru_depth.json artifact."""
+    results = []
+    for L in layers:
+        for mode in ("rowwise", "cascade", "dense"):
+            cfg = GRUConfig(input_dim=X, hidden_dim=H, num_layers=L,
+                            matvec_mode=mode)
+            us = _measure_stack_decode(cfg)
+            results.append({"num_layers": L, "mode": mode, "hidden_dim": H,
+                            "input_dim": X, "decode_step_us": round(us, 2)})
+            if csv:
+                print(f"e4_depth_L{L}_{mode},{us:.2f},stack_decode_step")
+    with open(json_path, "w") as f:
+        json.dump({"bench": "gru_depth_decode_latency", "rows": results}, f,
+                  indent=2)
+    if csv:
+        print(f"e4_depth_artifact,0.00,{json_path}")
+    return results
+
+
 def run(csv=True):
     rows = []
     for H, X in ((32, 5), (256, 64)):
@@ -99,4 +140,13 @@ def run(csv=True):
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--num-layers", type=int, nargs="+", default=None,
+                    help="run ONLY the depth sweep at these stack depths")
+    ap.add_argument("--depth-json", default="BENCH_gru_depth.json")
+    args = ap.parse_args()
+    if args.num_layers:
+        run_depth_sweep(tuple(args.num_layers), json_path=args.depth_json)
+    else:
+        run()
+        run_depth_sweep(json_path=args.depth_json)

@@ -58,6 +58,10 @@ class CheckpointManager:
 
     def save(self, state, step: int):
         host_state = jax.tree_util.tree_map(lambda x: np.asarray(x), state)
+        # serialize with any in-flight async write: both would share the
+        # per-pid tmp dir when saving the same step (e.g. a final save right
+        # after the loop's save_async) and race the rename
+        self.wait()
         self._write(host_state, step)
 
     def save_async(self, state, step: int):

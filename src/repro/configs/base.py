@@ -58,7 +58,16 @@ class VisionStubConfig:
 
 @dataclass(frozen=True)
 class GRUConfig:
-    """The paper's own model family (core contribution)."""
+    """The paper's own model family (core contribution).
+
+    Depth: the paper validates one layer (H=20), but the row-wise scheme is
+    per-matvec and composes across layers. ``num_layers``/``layer_dims``
+    describe a stack: layer 0 consumes ``input_dim``; layer ``l`` consumes
+    the previous layer's hidden size. ``layer_matvec_modes`` optionally
+    overrides ``matvec_mode`` per layer (the paper's hybrid AIE-PL split,
+    generalized: row-wise and cascade layers can be mixed in one stack).
+    All depth-1 defaults reproduce the original single-cell behavior.
+    """
     input_dim: int = 5
     hidden_dim: int = 20
     num_classes: int = 5
@@ -70,6 +79,33 @@ class GRUConfig:
     backend: str = "xla"             # "xla" | "pallas"
     row_block: int = 0               # rows per block (0 = auto)
     unroll: int = 1                  # scan unroll for short-seq latency mode
+    # --- deep stacks ---
+    num_layers: int = 1              # stack depth (ignored if layer_dims set)
+    layer_dims: Tuple[int, ...] = ()     # per-layer hidden sizes; () -> uniform
+    layer_matvec_modes: Tuple[str, ...] = ()  # per-layer matvec_mode overrides
+
+    @property
+    def resolved_num_layers(self) -> int:
+        return len(self.layer_dims) if self.layer_dims else self.num_layers
+
+    @property
+    def resolved_layer_dims(self) -> Tuple[int, ...]:
+        """Hidden size of every layer, layer 0 first."""
+        if self.layer_dims:
+            return tuple(self.layer_dims)
+        return (self.hidden_dim,) * self.num_layers
+
+    def layer_input_dim(self, layer: int) -> int:
+        """Input width of ``layer``: raw features for layer 0, previous
+        hidden size above it."""
+        if layer == 0:
+            return self.input_dim
+        return self.resolved_layer_dims[layer - 1]
+
+    def layer_matvec_mode(self, layer: int) -> str:
+        if self.layer_matvec_modes:
+            return self.layer_matvec_modes[layer]
+        return self.matvec_mode
 
 
 @dataclass(frozen=True)
@@ -194,6 +230,7 @@ class TrainConfig:
 
 _REGISTRY = {
     "gru-jet": "gru_jet",
+    "gru-jet-deep": "gru_jet_deep",
     "xlstm-125m": "xlstm_125m",
     "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
     "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
@@ -206,7 +243,7 @@ _REGISTRY = {
     "llava-next-mistral-7b": "llava_next_mistral_7b",
 }
 
-ASSIGNED_ARCHS = [a for a in _REGISTRY if a != "gru-jet"]
+ASSIGNED_ARCHS = [a for a in _REGISTRY if not a.startswith("gru-jet")]
 ALL_ARCHS = list(_REGISTRY)
 
 

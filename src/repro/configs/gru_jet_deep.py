@@ -1,0 +1,31 @@
+"""Deep jet-tagging stack (``gru-jet-deep``): beyond-paper depth scaling.
+
+Three GRU layers of H=32 over the paper's 5-feature input, with a MIXED
+per-layer parallelization — the paper's hybrid AIE-PL split generalized to
+whole layers: the input-adjacent layers run the row-wise scheme (gather
+aggregation), the middle layer the cascade baseline (psum). Serves as the
+registered example for ``GRUConfig.num_layers``/``layer_matvec_modes`` and
+as the depth-sweep anchor in ``benchmarks/rowwise_vs_cascade.py``.
+"""
+from repro.configs.base import GRUConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="gru-jet-deep",
+    family="gru",
+    num_layers=3,
+    d_model=32,
+    num_heads=1,
+    num_kv_heads=1,
+    d_ff=0,
+    vocab_size=5,
+    gru=GRUConfig(input_dim=5, hidden_dim=32, num_classes=5, seq_len=20,
+                  num_layers=3,
+                  layer_matvec_modes=("rowwise", "cascade", "rowwise"),
+                  fused_gates=True, decoupled_wx=True),
+    dtype="float32",          # fp32 end-to-end, like the paper's AIE path
+    param_dtype="float32",
+    scan_layers=False,
+    remat=False,
+)
+
+SMOKE = CONFIG  # already CPU-sized

@@ -33,11 +33,23 @@ recurrent path.
 ``variant="v3"`` is a *beyond-paper* option (cuDNN-style gate math,
 ``h~ = tanh(Wh x + r*(Uh h + bh))``) that makes all three U matvecs
 fusable into ONE matmul per step, shortening the recurrent critical path.
+
+Deep stacks (beyond the paper's single validated layer): ``gru_stack_*``
+run ``cfg.resolved_num_layers`` cells, layer ``l`` consuming layer
+``l-1``'s hidden sequence. Layer 0 keeps the decoupled ``W.x`` hoisting;
+deeper layers hoist their own input GEMM over the full lower-layer
+sequence (layer-by-layer execution), so every layer's recurrent path stays
+matvec-only. Per-layer ``matvec_mode`` overrides
+(``cfg.layer_matvec_modes``) let row-wise and cascade layers mix in one
+stack — the paper's hybrid AIE-PL split, generalized per layer. With
+``backend="pallas"`` and uniform hidden sizes the whole stack lowers to
+ONE fused pallas_call (see ``repro.kernels.gru_sequence``).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Optional
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -59,15 +71,52 @@ def gru_cell_specs(input_dim: int, hidden_dim: int) -> dict:
     }
 
 
+def gru_stack_specs(cfg: GRUConfig) -> tuple:
+    """Per-layer cell specs for a depth-L stack, layer 0 first."""
+    return tuple(
+        gru_cell_specs(cfg.layer_input_dim(l), h)
+        for l, h in enumerate(cfg.resolved_layer_dims)
+    )
+
+
+def layer_config(cfg: GRUConfig, layer: int) -> GRUConfig:
+    """Specialize a stack config to one layer (depth-1 view)."""
+    return dataclasses.replace(
+        cfg,
+        input_dim=cfg.layer_input_dim(layer),
+        hidden_dim=cfg.resolved_layer_dims[layer],
+        matvec_mode=cfg.layer_matvec_mode(layer),
+        num_layers=1, layer_dims=(), layer_matvec_modes=())
+
+
+def stack_cell_params(params, cfg: Optional[GRUConfig] = None) -> tuple:
+    """Normalize any accepted param layout to a tuple of per-layer cells.
+
+    Accepts {"cells": (...)} (deep model), {"cell": {...}} (seed depth-1
+    layout, kept for compatibility), a bare cell dict, or a sequence."""
+    if isinstance(params, dict):
+        if "cells" in params:
+            return tuple(params["cells"])
+        if "cell" in params:
+            return (params["cell"],)
+        return (params,)                      # bare {w,u,b}
+    return tuple(params)
+
+
 def gru_classifier_specs(cfg: GRUConfig) -> dict:
-    """The paper's jet-tagging model: GRU layer + linear classifier head."""
-    return {
-        "cell": gru_cell_specs(cfg.input_dim, cfg.hidden_dim),
-        "head": {
-            "w": Spec((cfg.hidden_dim, cfg.num_classes), ("hidden", None)),
-            "b": Spec((cfg.num_classes,), (None,), init="zeros"),
-        },
+    """The paper's jet-tagging model: GRU stack + linear classifier head.
+
+    Depth 1 keeps the seed's ``{"cell": ...}`` layout (checkpoint/example
+    compatibility); deeper stacks use ``{"cells": (layer0, layer1, ...)}``.
+    """
+    head_in = cfg.resolved_layer_dims[-1]
+    head = {
+        "w": Spec((head_in, cfg.num_classes), ("hidden", None)),
+        "b": Spec((cfg.num_classes,), (None,), init="zeros"),
     }
+    if cfg.resolved_num_layers == 1:
+        return {"cell": gru_cell_specs(cfg.input_dim, head_in), "head": head}
+    return {"cells": gru_stack_specs(cfg), "head": head}
 
 
 # ---------------------------------------------------------------------------
@@ -201,12 +250,96 @@ def gru_sequence(params: dict, h0: jax.Array, xs: jax.Array, *, cfg: GRUConfig,
     return hT, None
 
 
+# ---------------------------------------------------------------------------
+# deep stacks
+# ---------------------------------------------------------------------------
+
+def stack_h0(cfg: GRUConfig, batch: int, dtype=jnp.float32) -> tuple:
+    """Zero initial hidden state per layer."""
+    return tuple(jnp.zeros((batch, h), dtype) for h in cfg.resolved_layer_dims)
+
+
+def _uniform_stack_dims(cfg: GRUConfig) -> bool:
+    dims = cfg.resolved_layer_dims
+    return all(d == dims[0] for d in dims)
+
+
+def gru_stack_sequence(params: Sequence[dict], h0s: Sequence[jax.Array],
+                       xs: jax.Array, *, cfg: GRUConfig,
+                       return_all: bool = False):
+    """Run a depth-L stack over ``xs`` (..., T, X), time axis = -2.
+
+    ``params``/``h0s`` are per-layer sequences (layer 0 first). Returns
+    ``(finals, all_states)`` where ``finals`` is the tuple of per-layer
+    final hidden states and ``all_states`` is the LAST layer's full
+    hidden sequence (or None). Execution is layer-by-layer: every layer
+    hoists its input GEMM over the lower layer's full sequence (layer 0:
+    the paper's decoupled ``W.x``), so the recurrent path of each layer is
+    matvec-only. Depth 1 is exactly ``gru_sequence``.
+
+    ``backend="pallas"`` with uniform hidden sizes fuses the whole stack
+    into one pallas_call; otherwise each layer runs its own kernel.
+    """
+    params = stack_cell_params(params, cfg)
+    L = len(params)
+    if cfg.backend == "pallas" and L > 1 and _uniform_stack_dims(cfg):
+        from repro.kernels.gru_sequence import ops as seq_ops
+        return seq_ops.gru_stack_sequence_pallas(params, tuple(h0s), xs,
+                                                 cfg=cfg,
+                                                 return_all=return_all)
+    finals = []
+    cur = xs
+    for l in range(L):
+        lcfg = layer_config(cfg, l)
+        last = l == L - 1
+        hT, hs = gru_sequence(params[l], h0s[l], cur, cfg=lcfg,
+                              return_all=(not last) or return_all)
+        finals.append(hT)
+        if not last:
+            cur = hs
+    return tuple(finals), (hs if return_all else None)
+
+
+def gru_stack_decode_step(params: Sequence[dict], hs: Sequence[jax.Array],
+                          x: jax.Array, *, cfg: GRUConfig) -> tuple:
+    """One serve step through the whole stack: layer ``l`` consumes layer
+    ``l-1``'s NEW hidden state (same-timestep threading as the sequence
+    path). Returns the tuple of per-layer new hidden states."""
+    params = stack_cell_params(params, cfg)
+    new_hs = []
+    cur = x
+    for l in range(len(params)):
+        h2 = gru_step(params[l], hs[l], x=cur, cfg=layer_config(cfg, l))
+        new_hs.append(h2)
+        cur = h2
+    return tuple(new_hs)
+
+
+def gru_stack_reference(params: Sequence[dict], h0s: Sequence[jax.Array],
+                        xs: jax.Array, return_all: bool = False):
+    """Dense fp32 layer-by-layer oracle for the stack (depth-1 ==
+    ``gru_reference``). Returns (per-layer finals, last-layer states|None)."""
+    params = stack_cell_params(params)
+    finals = []
+    cur = xs
+    hs = None
+    for l, p in enumerate(params):
+        last = l == len(params) - 1
+        hT, hs = gru_reference(p, h0s[l], cur,
+                               return_all=(not last) or return_all)
+        finals.append(hT)
+        if not last:
+            cur = hs
+    return tuple(finals), (hs if return_all else None)
+
+
 def gru_classify(params: dict, xs: jax.Array, *, cfg: GRUConfig) -> jax.Array:
     """Paper's jet-tagging forward pass: xs (B, T, X) -> logits (B, C)."""
     B = xs.shape[0]
-    h0 = jnp.zeros((B, cfg.hidden_dim), xs.dtype)
-    hT, _ = gru_sequence(params["cell"], h0, xs, cfg=cfg)
-    return hT @ params["head"]["w"] + params["head"]["b"]
+    cells = stack_cell_params(params, cfg)
+    h0s = stack_h0(cfg, B, xs.dtype)
+    finals, _ = gru_stack_sequence(cells, h0s, xs, cfg=cfg)
+    return finals[-1] @ params["head"]["w"] + params["head"]["b"]
 
 
 def gru_decode_step(params: dict, h: jax.Array, x: jax.Array, *, cfg: GRUConfig) -> jax.Array:

@@ -17,6 +17,18 @@ needs the full ``r * h`` vector, so the row-wise step takes TWO
 aggregations per step (after z,r and after h'). The beyond-paper ``v3``
 gate variant fuses all U matvecs and needs ONE — this halves the
 per-step collective latency and is one of the §Perf hillclimbs.
+
+Deep stacks (``gru_stack_sequence_sharded``): every layer's U output rows
+shard on the SAME mesh axis, and the step's TRAILING all-gather does
+double duty — the gathered full ``h'`` that closes layer ``l``'s step is
+exactly the replicated input the next layer's (row-sharded) input GEMM
+needs. So stacking layers adds ZERO extra broadcast collectives on the
+row-wise path: per step it is still one (v3) or two (v1) gathers per
+layer, and the layer boundary is collective-free. Cascade layers keep
+their hidden state sharded through the whole sequence and pay ONE
+all-gather per layer (amortized over all T steps) to republish their
+output sequence for the layer above. The two modes compose freely
+per layer (``cfg.layer_matvec_modes``).
 """
 from __future__ import annotations
 
@@ -28,7 +40,9 @@ import jax.numpy as jnp
 
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.configs.base import GRUConfig
+from repro.core.gru import stack_cell_params
 
 
 # ---------------------------------------------------------------------------
@@ -42,7 +56,7 @@ def rowparallel_matmul(x: jax.Array, w: jax.Array, mesh: Mesh,
         y_shard = x_full @ w_shard
         return jax.lax.all_gather(y_shard, axis, axis=y_shard.ndim - 1,
                                   tiled=True)
-    return jax.shard_map(f, mesh=mesh, in_specs=(P(), P(None, axis)),
+    return shard_map(f, mesh=mesh, in_specs=(P(), P(None, axis)),
                      out_specs=P(), check_vma=False)(x, w)
 
 
@@ -51,7 +65,7 @@ def colparallel_matmul(x: jax.Array, w: jax.Array, mesh: Mesh,
     """y = x @ w with the CONTRACTION dim sharded; psum of partial sums."""
     def f(x_shard, w_shard):
         return jax.lax.psum(x_shard @ w_shard, axis)
-    return jax.shard_map(f, mesh=mesh, in_specs=(P(None, axis), P(axis, None)),
+    return shard_map(f, mesh=mesh, in_specs=(P(None, axis), P(axis, None)),
                      out_specs=P(), check_vma=False)(x, w)
 
 
@@ -153,7 +167,7 @@ def gru_sequence_sharded(params: dict, h0: jax.Array, xs: jax.Array, *,
                                  jnp.moveaxis(xp, 1, 0))
             return hT
 
-        return jax.shard_map(
+        return shard_map(
             f, mesh=mesh,
             in_specs=(P(), P(), P(None, None, axis), P(None, None, axis),
                       P(None, axis)),
@@ -174,8 +188,103 @@ def gru_sequence_sharded(params: dict, h0: jax.Array, xs: jax.Array, *,
         hT_l, _ = jax.lax.scan(body, h_shard, jnp.moveaxis(xp, 1, 0))
         return jax.lax.all_gather(hT_l, axis, axis=1, tiled=True)
 
-    return jax.shard_map(
+    return shard_map(
         f, mesh=mesh,
         in_specs=(P(), P(), P(axis, None), P()),
         out_specs=P(), check_vma=False,
     )(xs, h0, u.reshape(H, 3 * H), b)
+
+
+# ---------------------------------------------------------------------------
+# deep stacks: per-layer row sharding with collective reuse
+# ---------------------------------------------------------------------------
+
+def gru_stack_sequence_sharded(params, h0s, xs, *, mesh: Mesh, cfg: GRUConfig,
+                               axis: str = "model"):
+    """Depth-L stack with every layer's U output rows (rowwise) or
+    contraction dim (cascade) sharded on the SAME mesh axis, inside ONE
+    shard_map. Returns the tuple of per-layer final h, replicated.
+
+    The latency play (rowwise layers): the trailing all-gather that closes
+    each step already replicates the full ``h'``, which is precisely the
+    broadcast the next layer's row-sharded input GEMM needs — one
+    collective does double duty, so layer boundaries cost no extra
+    communication. Cascade layers run the whole sequence with sharded
+    hidden state and republish their output sequence with a single
+    all-gather amortized over all T steps. Modes mix freely per layer
+    (``cfg.layer_matvec_modes``); requires ``H_l % axis_size == 0``.
+    """
+    n = mesh.shape[axis]
+    B, T, X = xs.shape
+    cells = stack_cell_params(params, cfg)
+    L = len(cells)
+    modes = [cfg.layer_matvec_mode(l) for l in range(L)]
+    dims = [c["u"].shape[0] for c in cells]
+    for H in dims:
+        assert H % n == 0 and 3 * H % n == 0, (H, n)
+
+    layer_args, layer_specs = [], []
+    for c, mode in zip(cells, modes):
+        Xl = c["w"].shape[0]
+        H = c["u"].shape[0]
+        if mode == "rowwise":
+            # gate-major views: each shard owns rows of ALL THREE gates
+            layer_args.append({"w3": c["w"].reshape(Xl, 3, H),
+                               "u3": c["u"].reshape(H, 3, H),
+                               "b3": c["b"].reshape(3, H)})
+            layer_specs.append({"w3": P(None, None, axis),
+                                "u3": P(None, None, axis),
+                                "b3": P(None, axis)})
+        else:  # cascade: contraction sharded, everything else replicated
+            layer_args.append({"w": c["w"], "u": c["u"], "b": c["b"]})
+            layer_specs.append({"w": P(), "u": P(axis, None), "b": P()})
+
+    def f(xs_full, h0s_full, largs):
+        idx = jax.lax.axis_index(axis)
+        cur = xs_full.astype(jnp.float32)          # (B,T,·) replicated
+        finals = []
+        for l in range(L):
+            H, a = dims[l], largs[l]
+            last = l == L - 1     # last layer only needs its final state
+            if modes[l] == "rowwise":
+                xp = jnp.einsum("btx,xgh->btgh", cur, a["w3"]).reshape(B, T, -1)
+                u_flat = a["u3"].reshape(H, -1)
+                b_flat = a["b3"].reshape(-1)
+                step = functools.partial(_rowwise_step, axis=axis, n=n,
+                                         variant=cfg.variant)
+
+                def body(h, xp_t, step=step, u=u_flat, b=b_flat, last=last):
+                    h2 = step(h, xp_t, u, b, idx)
+                    return h2, (None if last else h2)  # carry == full h
+                hT, hs = jax.lax.scan(body, h0s_full[l].astype(jnp.float32),
+                                      jnp.moveaxis(xp, 1, 0))
+                if not last:
+                    cur = jnp.moveaxis(hs, 0, 1)   # already replicated: reuse
+            else:
+                xp = jnp.einsum("btx,xh->bth", cur, a["w"].astype(jnp.float32))
+                Hl = H // n
+                h_shard = jax.lax.dynamic_slice_in_dim(
+                    h0s_full[l].astype(jnp.float32), idx * Hl, Hl, 1)
+                step = functools.partial(_cascade_step, axis=axis,
+                                         variant=cfg.variant)
+
+                def body(h_l, xp_t, step=step, u=a["u"], b=a["b"], last=last):
+                    h2 = step(h_l, xp_t, u, b)
+                    return h2, (None if last else h2)
+                hT_l, hs_l = jax.lax.scan(body, h_shard,
+                                          jnp.moveaxis(xp, 1, 0))
+                if last:
+                    hT = jax.lax.all_gather(hT_l, axis, axis=1, tiled=True)
+                else:
+                    # ONE gather republishes the whole output sequence
+                    hs = jax.lax.all_gather(hs_l, axis, axis=2, tiled=True)
+                    cur = jnp.moveaxis(hs, 0, 1)
+                    hT = cur[:, -1]
+            finals.append(hT)
+        return tuple(finals)
+
+    return shard_map(
+        f, mesh=mesh,
+        in_specs=(P(), tuple(P() for _ in range(L)), tuple(layer_specs)),
+        out_specs=tuple(P() for _ in range(L)), check_vma=False,
+    )(xs, tuple(h0s), tuple(layer_args))

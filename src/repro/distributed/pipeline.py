@@ -15,6 +15,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
+
 
 def pipeline_apply(stage_fn: Callable, stage_params, xs: jax.Array, *,
                    mesh: Mesh, axis: str = "pod") -> jax.Array:
@@ -62,7 +64,7 @@ def pipeline_apply(stage_fn: Callable, stage_params, xs: jax.Array, *,
         return outs
 
     pspecs = jax.tree_util.tree_map(lambda _: P(axis), stage_params)
-    smapped = jax.shard_map(f, mesh=mesh, axis_names={axis},
+    smapped = shard_map(f, mesh=mesh, axis_names={axis},
                             in_specs=(pspecs, P()), out_specs=P(),
                             check_vma=False)
     # partial-manual shard_map (auto axes remaining) requires a jit context

@@ -1,4 +1,5 @@
 from repro.kernels.gru_sequence import ops, ref
-from repro.kernels.gru_sequence.kernel import gru_sequence_kernel
+from repro.kernels.gru_sequence.kernel import (gru_sequence_kernel,
+                                               gru_stack_sequence_kernel)
 
-__all__ = ["ops", "ref", "gru_sequence_kernel"]
+__all__ = ["ops", "ref", "gru_sequence_kernel", "gru_stack_sequence_kernel"]

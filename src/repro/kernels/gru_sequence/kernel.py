@@ -1,4 +1,4 @@
-"""Whole-sequence GRU Pallas kernel: grid = time, U pinned in VMEM.
+"""Whole-sequence GRU Pallas kernels: grid = time, U pinned in VMEM.
 
 The paper's "row reuse": after the first pass, the vector (and here the
 recurrent matrix U) lives in tile-local memory, so subsequent steps are
@@ -9,6 +9,15 @@ exactly once; the hidden state is carried in a VMEM scratch buffer across
 grid steps (TPU grids iterate sequentially). Per step, only the
 (1, B, 3H) slice of the precomputed input projection streams in — the
 decoupled ``W.x`` path feeding the free-running recurrence.
+
+``gru_stack_sequence_kernel`` extends this to a depth-L stack in ONE
+``pallas_call``: ALL layers' U matrices (and the deep layers' input
+projections W) are pinned in VMEM via constant index_maps, and the L
+per-layer hidden states live in one (L, B, H) scratch buffer. Each grid
+step runs the whole depth — layer l consumes layer l-1's same-timestep
+output directly from registers/VMEM, so an L-layer stack costs one kernel
+launch and one weight fetch total, instead of L sequential pallas_calls
+with L hidden-state round-trips through HBM.
 """
 from __future__ import annotations
 
@@ -25,18 +34,9 @@ def _dot(a, b):
                                preferred_element_type=jnp.float32)
 
 
-def _seq_kernel(h0_ref, xp_ref, u_ref, b_ref, o_ref, h_s, *, variant: str):
-    t = pl.program_id(0)
-    H = h0_ref.shape[-1]
-
-    @pl.when(t == 0)
-    def _init():
-        h_s[...] = h0_ref[...].astype(jnp.float32)
-
-    h = h_s[...]
-    u = u_ref[...]
-    b = b_ref[...].astype(jnp.float32)                    # (1, 3H)
-    xp = xp_ref[...][0].astype(jnp.float32)               # (B, 3H) this step
+def _gate_math(h, xp, u, b, variant: str):
+    """One cell update in fp32. h/xp: (B,H)/(B,3H), u: (H,3H), b: (1,3H)."""
+    H = h.shape[-1]
     xz, xr, xh = xp[:, :H], xp[:, H:2 * H], xp[:, 2 * H:]
     if variant == "v3":
         ua = _dot(h.astype(u.dtype), u) + b
@@ -47,8 +47,21 @@ def _seq_kernel(h0_ref, xp_ref, u_ref, b_ref, o_ref, h_s, *, variant: str):
         zr = _dot(h.astype(u.dtype), u[:, :2 * H]) + b[:, :2 * H]
         z = jax.nn.sigmoid(xz + zr[:, :H])
         r = jax.nn.sigmoid(xr + zr[:, H:])
-        ht = jnp.tanh(xh + _dot((r * h).astype(u.dtype), u[:, 2 * H:]) + b[:, 2 * H:])
-    h_new = (1.0 - z) * h + z * ht
+        ht = jnp.tanh(xh + _dot((r * h).astype(u.dtype), u[:, 2 * H:])
+                      + b[:, 2 * H:])
+    return (1.0 - z) * h + z * ht
+
+
+def _seq_kernel(h0_ref, xp_ref, u_ref, b_ref, o_ref, h_s, *, variant: str):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        h_s[...] = h0_ref[...].astype(jnp.float32)
+
+    xp = xp_ref[...][0].astype(jnp.float32)               # (B, 3H) this step
+    h_new = _gate_math(h_s[...], xp, u_ref[...],
+                       b_ref[...].astype(jnp.float32), variant)
     h_s[...] = h_new
     o_ref[...] = h_new[None].astype(o_ref.dtype)
 
@@ -75,3 +88,65 @@ def gru_sequence_kernel(h0: jax.Array, x_proj: jax.Array, u: jax.Array,
         scratch_shapes=[pltpu.VMEM((B, H), jnp.float32)],  # carried hidden state
         interpret=interpret,
     )(h0, x_proj, u, b[None, :])
+
+
+# ---------------------------------------------------------------------------
+# fused multi-layer stack
+# ---------------------------------------------------------------------------
+
+def _stack_kernel(h0_ref, xp_ref, u_ref, wd_ref, b_ref, o_ref, hT_ref, h_s, *,
+                  variant: str, num_layers: int):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        h_s[...] = h0_ref[...].astype(jnp.float32)
+
+    b = b_ref[...].astype(jnp.float32)                    # (L, 3H)
+    xp = xp_ref[...][0].astype(jnp.float32)               # (B, 3H): layer 0 Wx
+    for l in range(num_layers):                           # static unroll
+        h_new = _gate_math(h_s[l], xp, u_ref[l], b[l:l + 1], variant)
+        h_s[l] = h_new
+        if l + 1 < num_layers:
+            # next layer's input projection, same timestep, never leaves VMEM
+            xp = _dot(h_new.astype(wd_ref.dtype), wd_ref[l]).astype(jnp.float32)
+    o_ref[...] = h_new[None].astype(o_ref.dtype)
+    hT_ref[...] = h_s[...].astype(hT_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("variant", "interpret"))
+def gru_stack_sequence_kernel(h0: jax.Array, x_proj: jax.Array, u: jax.Array,
+                              w_deep: jax.Array, b: jax.Array, *,
+                              variant: str = "v1", interpret: bool = False):
+    """Depth-L fused stack (uniform hidden size H across layers).
+
+    h0: (L,B,H) per-layer initial states; x_proj: (T,B,3H) time-major
+    precomputed layer-0 Wx; u: (L,H,3H) recurrent matrices; w_deep:
+    (L-1,H,3H) input projections of layers 1..L-1 (pass (1,1,3H) zeros for
+    L=1, unused); b: (L,3H). Returns (last-layer states (T,B,H),
+    per-layer final states (L,B,H)).
+    """
+    T, B, H3 = x_proj.shape
+    H = H3 // 3
+    L = h0.shape[0]
+    Ld = max(L - 1, 1)
+    hs, hT = pl.pallas_call(
+        functools.partial(_stack_kernel, variant=variant, num_layers=L),
+        grid=(T,),
+        in_specs=[
+            pl.BlockSpec((L, B, H), lambda t: (0, 0, 0)),      # h0: resident
+            pl.BlockSpec((1, B, 3 * H), lambda t: (t, 0, 0)),  # stream step t
+            pl.BlockSpec((L, H, 3 * H), lambda t: (0, 0, 0)),  # all U: ONCE
+            pl.BlockSpec((Ld,) + w_deep.shape[1:], lambda t: (0, 0, 0)),
+            pl.BlockSpec((L, 3 * H), lambda t: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, B, H), lambda t: (t, 0, 0)),
+            pl.BlockSpec((L, B, H), lambda t: (0, 0, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((T, B, H), h0.dtype),
+                   jax.ShapeDtypeStruct((L, B, H), h0.dtype)],
+        scratch_shapes=[pltpu.VMEM((L, B, H), jnp.float32)],  # per-layer h
+        interpret=interpret,
+    )(h0, x_proj, u, w_deep, b)
+    return hs, hT

@@ -1,8 +1,10 @@
-"""Public wrapper: run a GRU over a sequence with the Pallas backend.
+"""Public wrappers: run a GRU (or a whole GRU stack) with the Pallas backend.
 
-Interface matches ``repro.core.gru.gru_sequence`` (called from there when
-``cfg.backend == "pallas"``). The input projection (decoupled W.x) is one
-MXU GEMM outside the kernel; the kernel owns only the recurrent path.
+Interfaces match ``repro.core.gru.gru_sequence`` / ``gru_stack_sequence``
+(called from there when ``cfg.backend == "pallas"``). The layer-0 input
+projection (decoupled W.x) is one MXU GEMM outside the kernel; the kernel
+owns the recurrent path — for the stack variant, ALL layers of it in one
+``pallas_call``.
 """
 from __future__ import annotations
 
@@ -10,7 +12,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import on_cpu
-from repro.kernels.gru_sequence.kernel import gru_sequence_kernel
+from repro.kernels.gru_sequence.kernel import (gru_sequence_kernel,
+                                               gru_stack_sequence_kernel)
 
 
 def gru_sequence_pallas(params: dict, h0: jax.Array, xs: jax.Array, *, cfg,
@@ -25,3 +28,31 @@ def gru_sequence_pallas(params: dict, h0: jax.Array, xs: jax.Array, *, cfg,
     if return_all:
         return hT, jnp.moveaxis(hs, 0, -2)
     return hT, None
+
+
+def gru_stack_sequence_pallas(params: tuple, h0s: tuple, xs: jax.Array, *,
+                              cfg, return_all: bool = False):
+    """Fused depth-L stack (uniform hidden sizes): ONE pallas_call.
+
+    params: per-layer ({w,u,b}, ...), layer 0 first; h0s: per-layer (B,H).
+    Returns (tuple of per-layer final h, optionally last layer's (B,T,H)).
+    """
+    L = len(params)
+    if L == 1:
+        hT, hs = gru_sequence_pallas(params[0], h0s[0], xs, cfg=cfg,
+                                     return_all=return_all)
+        return (hT,), hs
+    H = params[0]["u"].shape[0]
+    xp = xs @ params[0]["w"]                       # layer-0 decoupled GEMM
+    xp_t = jnp.moveaxis(xp, -2, 0)                 # (T,B,3H)
+    h0 = jnp.stack(h0s, 0)                         # (L,B,H)
+    u = jnp.stack([p["u"] for p in params], 0)     # (L,H,3H)
+    w_deep = jnp.stack([p["w"] for p in params[1:]], 0)  # (L-1,H,3H)
+    b = jnp.stack([p["b"] for p in params], 0)     # (L,3H)
+    hs, hT = gru_stack_sequence_kernel(h0, xp_t, u, w_deep, b,
+                                       variant=cfg.variant,
+                                       interpret=on_cpu())
+    finals = tuple(hT[l] for l in range(L))
+    if return_all:
+        return finals, jnp.moveaxis(hs, 0, -2)
+    return finals, None

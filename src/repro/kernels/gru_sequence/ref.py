@@ -14,3 +14,22 @@ def gru_sequence_ref(h0, x_proj, u, b, variant: str = "v1"):
         h = gru_step_ref(h, x_proj[t], u, b, variant=variant)
         out.append(h)
     return jnp.stack(out, axis=0)
+
+
+def gru_stack_sequence_ref(h0, x_proj, u, w_deep, b, variant: str = "v1"):
+    """Oracle for the fused stack kernel, same raw-array interface.
+
+    h0: (L,B,H), x_proj: (T,B,3H) layer-0 Wx, u: (L,H,3H),
+    w_deep: (L-1,H,3H), b: (L,3H) -> ((T,B,H) last-layer states,
+    (L,B,H) per-layer finals)."""
+    L = h0.shape[0]
+    hs = [jnp.asarray(h0[l], jnp.float32) for l in range(L)]
+    out = []
+    for t in range(x_proj.shape[0]):
+        xp = jnp.asarray(x_proj[t], jnp.float32)
+        for l in range(L):
+            hs[l] = gru_step_ref(hs[l], xp, u[l], b[l], variant=variant)
+            if l + 1 < L:
+                xp = hs[l] @ jnp.asarray(w_deep[l], jnp.float32)
+        out.append(hs[-1])
+    return jnp.stack(out, axis=0), jnp.stack(hs, axis=0)

@@ -72,14 +72,16 @@ def _bytes_of(shapes) -> int:
 
 
 def _operand_names(args_str: str) -> List[str]:
-    """Names inside op( ... ) at paren depth 0, attrs stripped."""
+    """Names inside op( ... ) at nesting depth 0, attrs stripped. Operands
+    may be typed (``dot(f32[128,128]{1,0} %x, ...)`` in older dialects), so
+    commas inside brackets/braces must not split."""
     out, depth, cur = [], 0, []
     for ch in args_str:
-        if ch == "(":
+        if ch in "([{":
             depth += 1
             cur.append(ch)
-        elif ch == ")":
-            if depth == 0:
+        elif ch in ")]}":
+            if ch == ")" and depth == 0:
                 break
             depth -= 1
             cur.append(ch)
@@ -346,7 +348,11 @@ def analyze(hlo_text: str) -> Account:
             acc.flops += ins.dot_flops
             operand_full = [comp.symtab.get(o, 0) for o in ins.operands]
             operand_bytes = sum(operand_full)
-            if count_bytes and ins.op not in _FREE_OPS:
+            # plain calls are byte-transparent: traffic is accounted inside
+            # the callee, where fusion slice-awareness applies (some dialects
+            # wrap slice fusions in a call; counting the call site would
+            # charge the FULL operand per loop trip)
+            if count_bytes and ins.op not in _FREE_OPS and ins.op != "call":
                 out_b, in_b = ins.out_bytes, operand_bytes
                 if ins.op == "fusion":
                     fused = next((c for c, _, k in ins.calls if k == "fusion"),
@@ -369,12 +375,13 @@ def analyze(hlo_text: str) -> Account:
                 acc.coll_counts[ins.coll_kind] = (
                     acc.coll_counts.get(ins.coll_kind, 0) + 1)
             for callee, trip, kind in ins.calls:
-                sub = resolve(callee, count_bytes and kind == "while",
+                transparent = kind == "while" or ins.op == "call"
+                sub = resolve(callee, count_bytes and transparent,
                               seen + (cname,))
                 if kind == "while" and trip == 1 and sub.flops > 0:
                     acc.unknown_trip_loops += 1
                 acc.add(sub, mult=trip,
-                        with_bytes=(kind == "while" and count_bytes))
+                        with_bytes=(transparent and count_bytes))
         memo[key] = acc
         return acc
 

@@ -3,7 +3,8 @@ this module never touches jax device state)."""
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -20,11 +21,10 @@ def make_production_mesh(*, multi_pod: bool = False):
     need = int(np.prod(shape))
     devs = jax.devices()
     assert len(devs) >= need, (len(devs), need)
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes),
-                         devices=devs[:need])
+    return compat.make_mesh(shape, axes, devices=devs[:need])
 
 
 def make_host_mesh(shape, axes):
     """Small host-device mesh for tests/examples (requires
     XLA_FLAGS=--xla_force_host_platform_device_count set before jax init)."""
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)

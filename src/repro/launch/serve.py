@@ -33,10 +33,19 @@ def main(argv=None):
                          cfg.param_dtype)
     engine = ServeEngine(cfg, params, ShardCtx(), max_batch=args.requests)
     rng = np.random.default_rng(args.seed)
-    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size,
-                                        size=args.prompt_len).astype(np.int32),
-                    max_new_tokens=args.max_new)
-            for _ in range(args.requests)]
+    if cfg.family == "gru":
+        # feature-vector waves: prompts are (S, X) float windows
+        reqs = [Request(prompt=rng.normal(size=(args.prompt_len,
+                                                cfg.gru.input_dim))
+                        .astype(np.float32),
+                        max_new_tokens=args.max_new)
+                for _ in range(args.requests)]
+    else:
+        reqs = [Request(prompt=rng.integers(0, cfg.vocab_size,
+                                            size=args.prompt_len)
+                        .astype(np.int32),
+                        max_new_tokens=args.max_new)
+                for _ in range(args.requests)]
     done = engine.generate(reqs)
     for i, r in enumerate(done):
         print(f"req{i}: {len(r.out)} tokens -> {r.out[:8]}...")

@@ -1,8 +1,11 @@
-"""The paper's own model (``gru-jet``) behind the framework model API.
+"""The paper's own model family (``gru-jet`` and deep stacks) behind the
+framework model API.
 
-Forward/loss = the jet-tagging sequence classifier (GRU + linear head,
-H=20, X=5, 5 classes in the paper's validated configuration). Serving =
-single-step recurrent decode, the paper's latency-measurement path.
+Forward/loss = the jet-tagging sequence classifier (GRU stack + linear
+head; the paper's validated configuration is one layer, H=20, X=5, 5
+classes). Serving = single-step recurrent decode through the whole stack,
+the paper's latency-measurement path; the cache carries one hidden state
+per layer.
 """
 from __future__ import annotations
 
@@ -39,9 +42,12 @@ def loss_fn(params: dict, cfg: ModelConfig, batch: dict, *,
 # --- serving: the paper's latency path ---------------------------------------
 
 def cache_specs(cfg: ModelConfig, batch: int, capacity: int = 0) -> dict:
+    """Recurrent cache: one hidden state PER LAYER of the stack."""
     return {
-        "h": Spec((batch, cfg.gru.hidden_dim), ("batch", "act_gates"),
-                  init="zeros", dtype="float32"),
+        "h": tuple(
+            Spec((batch, h), ("batch", "act_gates"), init="zeros",
+                 dtype="float32")
+            for h in cfg.gru.resolved_layer_dims),
         "pos": Spec((), (), init="zeros", dtype="int32"),
     }
 
@@ -52,21 +58,25 @@ def init_cache(cfg: ModelConfig, batch: int, capacity: int = 0) -> dict:
 
 def decode_step(params: dict, cfg: ModelConfig, cache: dict, x: jax.Array, *,
                 ctx: ShardCtx = ShardCtx()):
-    """One recurrent step: x (B,X) features -> (class logits so far, cache)."""
-    h = gru_core.gru_step(params["cell"], cache["h"], x=x, cfg=cfg.gru)
-    h = constrain(h, ("batch", "act_gates"), ctx)
-    logits = h @ params["head"]["w"] + params["head"]["b"]
-    return logits.astype(jnp.float32), {"h": h, "pos": cache["pos"] + 1}
+    """One recurrent step through the stack: x (B,X) features ->
+    (class logits so far, cache)."""
+    cells = gru_core.stack_cell_params(params, cfg.gru)
+    hs = gru_core.gru_stack_decode_step(cells, cache["h"], x, cfg=cfg.gru)
+    hs = tuple(constrain(h, ("batch", "act_gates"), ctx) for h in hs)
+    logits = hs[-1] @ params["head"]["w"] + params["head"]["b"]
+    return logits.astype(jnp.float32), {"h": hs, "pos": cache["pos"] + 1}
 
 
 def prefill(params: dict, cfg: ModelConfig, batch: dict, *,
             ctx: ShardCtx = ShardCtx()):
-    """Run the full sequence, return (logits, final recurrent state)."""
+    """Run the full sequence, return (logits, per-layer recurrent state)."""
     xs = batch["features"]
     B = xs.shape[0]
-    h0 = jnp.zeros((B, cfg.gru.hidden_dim), xs.dtype)
-    hT, _ = gru_core.gru_sequence(params["cell"], h0, xs, cfg=cfg.gru)
-    logits = (hT @ params["head"]["w"] + params["head"]["b"]).astype(jnp.float32)
-    cache = {"h": hT.astype(jnp.float32),
+    cells = gru_core.stack_cell_params(params, cfg.gru)
+    h0s = gru_core.stack_h0(cfg.gru, B, xs.dtype)
+    finals, _ = gru_core.gru_stack_sequence(cells, h0s, xs, cfg=cfg.gru)
+    logits = (finals[-1] @ params["head"]["w"]
+              + params["head"]["b"]).astype(jnp.float32)
+    cache = {"h": tuple(h.astype(jnp.float32) for h in finals),
              "pos": jnp.array(xs.shape[1] - 1, jnp.int32)}
     return logits, cache

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.configs.base import ModelConfig, MoEConfig
 from repro.core.params import Spec
 from repro.distributed.sharding import ShardCtx, resolve_pspec
@@ -205,7 +206,7 @@ def moe_apply(p: dict, cfg: ModelConfig, x: jax.Array, *,
             ep_size=ep_size, compute_dtype=compute,
             tp_mode=("gather_sp" if sp_tokens else m.tp_mode),
             tp_size=tp_size)
-        out = jax.shard_map(
+        out = shard_map(
             fn, mesh=ctx.mesh,
             in_specs=(tok_spec, sel_spec, sel_spec, wgt_spec, wgt_spec, wd_spec),
             out_specs=tok_spec,

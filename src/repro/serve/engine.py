@@ -5,6 +5,14 @@ the sequential decode path (batch can be 1); throughput comes from batching
 aligned requests. Requests are left-aligned into fixed slots, prefilled
 once, then decoded lockstep with per-slot finish masking (EOS or budget);
 the step function is jitted once per (batch, prompt_len) bucket.
+
+The GRU family (the paper's own model) serves FEATURE VECTORS instead of
+tokens: a request's ``prompt`` is a float (S, X) feature window, prefilled
+through the whole recurrent stack, and each decode step pushes one more
+feature vector (the request's ``stream`` if provided, else free-running on
+the last observed features) and emits the running class prediction. Per
+step that is exactly one pass through the depth-L recurrence — the paper's
+latency figure of merit, measured by ``latency_stats``.
 """
 from __future__ import annotations
 
@@ -23,9 +31,10 @@ from repro.models import api as mapi
 
 @dataclass
 class Request:
-    prompt: np.ndarray               # (S,) int32
+    prompt: np.ndarray               # (S,) int32 tokens | (S, X) float features
     max_new_tokens: int = 16
     eos_id: int = -1                 # -1 = never
+    stream: Optional[np.ndarray] = None  # gru: (>=max_new, X) decode features
     out: List[int] = field(default_factory=list)
     done: bool = False
 
@@ -60,14 +69,16 @@ class ServeEngine:
         """Serve a wave of requests (padded/aligned batch)."""
         reqs = list(requests)
         assert len(reqs) <= self.max_batch
+        if self.cfg.family == "gru":
+            return self._generate_gru(reqs)
+        if self.cfg.family in ("audio", "vlm"):
+            raise NotImplementedError("wave serving is LM/GRU-only; use the "
+                                      "model API directly for other families")
         B = len(reqs)
         S = max(len(r.prompt) for r in reqs)
         toks = np.zeros((B, S), np.int32)
         for i, r in enumerate(reqs):
             toks[i, S - len(r.prompt):] = r.prompt      # left-pad alignment
-        if self.cfg.family in ("audio", "vlm", "gru"):
-            raise NotImplementedError("wave serving is LM-only; use the "
-                                      "model API directly for other families")
         prefill = self._get_prefill(S)
         logits, cache = prefill(self.params, {"tokens": jnp.asarray(toks)})
         decode = self._get_decode()
@@ -90,6 +101,49 @@ class ServeEngine:
             if finished.all():
                 break
             next_tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        for r in reqs:
+            r.done = True
+        return reqs
+
+    def _generate_gru(self, reqs: List[Request]) -> List[Request]:
+        """Feature-vector wave serving for the paper's recurrent family.
+
+        Prompts are (S_i, X) float windows, left-padded with zeros and
+        prefilled through the stack once; every decode step feeds the next
+        (B, X) feature slab (request ``stream`` when given, else the last
+        prompt vector, free-running) and records the argmax class."""
+        X = self.cfg.gru.input_dim
+        B = len(reqs)
+        prompts = [np.asarray(r.prompt, np.float32).reshape(-1, X)
+                   for r in reqs]
+        S = max(p.shape[0] for p in prompts)
+        feats = np.zeros((B, S, X), np.float32)
+        for i, p in enumerate(prompts):
+            feats[i, S - p.shape[0]:] = p               # left-pad alignment
+        prefill = self._get_prefill(S)
+        logits, cache = prefill(self.params, {"features": jnp.asarray(feats)})
+        decode = self._get_decode()
+        max_new = max(r.max_new_tokens for r in reqs)
+        finished = np.zeros(B, bool)
+        for step in range(max_new):
+            nxt = np.stack([
+                r.stream[step] if r.stream is not None
+                and step < len(r.stream) else prompts[i][-1]
+                for i, r in enumerate(reqs)]).astype(np.float32)
+            t0 = time.perf_counter()
+            logits, cache = decode(self.params, cache, jnp.asarray(nxt))
+            logits.block_until_ready()
+            self.step_times.append(time.perf_counter() - t0)
+            cls = np.asarray(jnp.argmax(logits, -1))
+            for i, r in enumerate(reqs):
+                if not finished[i]:
+                    r.out.append(int(cls[i]))
+                    if (int(cls[i]) == r.eos_id
+                            or len(r.out) >= r.max_new_tokens):
+                        finished[i] = True
+                        r.done = True
+            if finished.all():
+                break
         for r in reqs:
             r.done = True
         return reqs

@@ -6,7 +6,7 @@ Two step builders:
 * ``make_train_step`` — pure-GSPMD: batch sharded over (pod, data); XLA
   derives every collective. This is the dry-run / production default.
 * ``make_pod_train_step`` — the multi-pod distributed-optimization path:
-  ``jax.shard_map(axis_names={"pod"})`` makes the pod axis MANUAL (data/model
+  ``shard_map(axis_names={"pod"})`` makes the pod axis MANUAL (data/model
   stay auto inside), each pod computes local gradients, and the cross-pod
   exchange goes through ``repro.distributed.compression`` (int8+error
   feedback / bf16) — the slow-link-aware design for 1000+ node meshes.
@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.configs.base import ModelConfig, TrainConfig
 from repro.core.params import Spec, abstract_params, init_params, is_spec
 from repro.distributed import compression
@@ -113,9 +114,15 @@ def make_pod_train_step(model_cfg: ModelConfig, train_cfg: TrainConfig,
     A = mapi.get_api(model_cfg)
     method = train_cfg.grad_compression
     use_ef = method == "int8_ef"
-    # inside the pod-manual region, constraints may only touch auto axes
-    inner_ctx = ShardCtx(mesh=mesh, profile=ctx.profile,
-                         manual=ctx.manual + ("pod",))
+    # inside the pod-manual region, constraints may only touch auto axes.
+    # Old jax (no jax.shard_map) crashes XLA on sharding constraints inside
+    # a partial-manual region (IsManualSubgroup check); constraints are
+    # hints, so drop them there and keep the collectives identical.
+    if hasattr(jax, "shard_map"):
+        inner_ctx = ShardCtx(mesh=mesh, profile=ctx.profile,
+                             manual=ctx.manual + ("pod",))
+    else:
+        inner_ctx = ShardCtx(mesh=None, profile=ctx.profile)
 
     def loss_fn(params, batch):
         return A.loss_fn(params, model_cfg, batch, inner_ctx)
@@ -157,7 +164,7 @@ def make_pod_train_step(model_cfg: ModelConfig, train_cfg: TrainConfig,
         met_shape = jax.eval_shape(
             lambda s, b: local_fn(s, b, reduce=False)[1], state, batch)
         met_specs = jax.tree_util.tree_map(lambda _: P(), met_shape)
-        return jax.shard_map(
+        return shard_map(
             local_fn, mesh=mesh, axis_names={"pod"},
             in_specs=(st_specs, batch_specs),
             out_specs=(st_specs, met_specs),

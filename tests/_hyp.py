@@ -1,0 +1,34 @@
+"""Optional-hypothesis shim: the real library when installed, otherwise
+drop-in ``given``/``settings``/``st`` stand-ins that turn each property
+test into a clean pytest skip instead of a collection error. Import via
+``from _hyp import given, settings, st`` (tests/ is on sys.path under
+pytest's rootdir-based import mode)."""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """st.integers(...), st.floats(...), ... -> inert placeholders."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+    def settings(*_a, **_k):
+        return lambda fn: fn
+
+    def given(*_a, **_k):
+        def deco(fn):
+            # zero-arg wrapper: pytest must not see the original signature,
+            # or it would demand fixtures for the hypothesis arguments
+            def skipper():
+                pytest.skip("hypothesis not installed")
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+        return deco

@@ -8,7 +8,7 @@ import pytest
 def test_mini_dryrun_train_and_decode(multidev):
     multidev("""
 import jax, jax.numpy as jnp
-from jax.sharding import AxisType
+from repro import compat
 from repro.configs.base import get_smoke_config, TrainConfig, ShapeConfig
 from repro.core.params import abstract_params
 from repro.distributed.sharding import ShardCtx, param_shardings
@@ -16,8 +16,7 @@ from repro.models import api as mapi
 from repro.train import trainer
 from repro.launch.hloparse import analyze
 
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(AxisType.Auto,)*3)
+mesh = compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
 ctx = ShardCtx(mesh=mesh)
 
 for arch in ["qwen3-0.6b", "qwen2-moe-a2.7b", "xlstm-125m", "hymba-1.5b"]:

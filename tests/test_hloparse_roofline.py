@@ -49,9 +49,10 @@ def test_slice_aware_bytes():
 def test_collectives_counted(multidev):
     multidev("""
 import jax, jax.numpy as jnp
-from jax.sharding import PartitionSpec as P, NamedSharding, AxisType
+from repro import compat
+from jax.sharding import PartitionSpec as P, NamedSharding
 from repro.launch.hloparse import analyze
-mesh = jax.make_mesh((4,), ("model",), axis_types=(AxisType.Auto,))
+mesh = compat.make_mesh((4,), ("model",))
 x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
 w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
 def f(x, w):

@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.configs.base import get_smoke_config
 from repro.core.params import init_params
@@ -58,7 +58,7 @@ def test_padded_experts_never_routed():
 def test_ep_shard_map_matches_local(multidev):
     multidev("""
 import dataclasses, jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
+from repro import compat
 from repro.configs.base import get_smoke_config
 from repro.core.params import init_params
 from repro.distributed.sharding import ShardCtx
@@ -67,7 +67,7 @@ cfg = get_smoke_config("qwen2-moe-a2.7b").replace(dtype="float32", param_dtype="
 cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
 params = init_params(moe_mod.moe_specs(cfg), jax.random.key(0), "float32")
 x = jax.random.normal(jax.random.key(1), (4, 8, cfg.d_model))
-mesh = jax.make_mesh((2, 2), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+mesh = compat.make_mesh((2, 2), ("data", "model"))
 out_ep, _ = jax.jit(lambda p, x: moe_mod.moe_apply(p, cfg, x, ctx=ShardCtx(mesh=mesh)))(params, x)
 ref = moe_mod.moe_ref(params, cfg, x)
 np.testing.assert_allclose(np.asarray(out_ep), np.asarray(ref), rtol=3e-4, atol=3e-4)

@@ -64,10 +64,11 @@ def test_multipod_batch_axes():
 def test_rowparallel_gru_all_modes(multidev):
     multidev("""
 import jax, jax.numpy as jnp, numpy as np
+from repro import compat
 from repro.configs.base import GRUConfig
 from repro.core import gru, rowparallel
 from repro.core.params import init_params
-mesh = jax.make_mesh((4,), ("model",))
+mesh = compat.make_mesh((4,), ("model",))
 H, X, B, T = 32, 8, 2, 9
 params = init_params(gru.gru_cell_specs(X, H), jax.random.key(0))
 xs = jax.random.normal(jax.random.key(1), (B, T, X))
@@ -121,13 +122,13 @@ print("PASS")
 def test_pipeline_parallel(multidev):
     multidev("""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
+from repro import compat
 from repro.distributed import pipeline as pp
 def stage_fn(p, x):
     return jnp.tanh(x @ p["w"] + p["b"])
 sp = {"w": jax.random.normal(jax.random.key(2), (4, 16, 16)) * 0.5,
       "b": jnp.zeros((4, 16))}
-mesh = jax.make_mesh((4,), ("pod",), axis_types=(AxisType.Auto,))
+mesh = jax.make_mesh((4,), ("pod",))
 xs = jax.random.normal(jax.random.key(3), (8, 4, 16))
 out_pp = pp.pipeline_apply(stage_fn, sp, xs, mesh=mesh, axis="pod")
 out_seq = pp.sequential_reference(stage_fn, sp, xs)
@@ -141,16 +142,17 @@ def test_compression_int8_ef_unbiased(multidev):
     to the true value (residual is carried, not lost)."""
     multidev("""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import PartitionSpec as P, AxisType
+from repro import compat
+from jax.sharding import PartitionSpec as P
 from repro.distributed.compression import pod_allreduce_mean
-mesh = jax.make_mesh((2,), ("pod",), axis_types=(AxisType.Auto,))
+mesh = compat.make_mesh((2,), ("pod",))
 g_true = {"w": jnp.array([0.301, -0.7004, 1e-4, 0.02])}
 def run_once(ef):
     def f(g, e):
         out, e2 = pod_allreduce_mean(g, "int8_ef", "pod",
                                      {"w": e["w"][0]})
         return out, {"w": e2["w"][None]}
-    return jax.jit(jax.shard_map(f, mesh=mesh, axis_names={"pod"},
+    return jax.jit(compat.shard_map(f, mesh=mesh, axis_names={"pod"},
         in_specs=(P(), P("pod")), out_specs=(P(), P("pod")),
         check_vma=False))(g_true, ef)
 ef = {"w": jnp.zeros((2, 4))}

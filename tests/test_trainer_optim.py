@@ -96,14 +96,14 @@ def test_pod_compressed_training(multidev):
     """Explicit pod-DP with int8+EF tracks uncompressed training."""
     multidev("""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
+from repro import compat
 from repro.configs.base import ShapeConfig, TrainConfig, get_smoke_config
 from repro.data.pipeline import SyntheticStream
 from repro.distributed.sharding import ShardCtx
 from repro.train import trainer
 
 cfg = get_smoke_config("qwen3-0.6b").replace(dtype="float32", param_dtype="float32")
-mesh = jax.make_mesh((2, 2), ("pod", "data"), axis_types=(AxisType.Auto,)*2)
+mesh = compat.make_mesh((2, 2), ("pod", "data"))
 ctx = ShardCtx(mesh=mesh)
 stream = SyntheticStream(cfg, ShapeConfig("t", 16, 8, "train"))
 
