@@ -219,32 +219,45 @@ def gru_step(params: dict, h: jax.Array, x: Optional[jax.Array] = None,
 # ---------------------------------------------------------------------------
 
 def gru_sequence(params: dict, h0: jax.Array, xs: jax.Array, *, cfg: GRUConfig,
-                 return_all: bool = False):
+                 return_all: bool = False, mask: Optional[jax.Array] = None):
     """Run the recurrence over ``xs`` (..., T, X), time axis = -2.
 
     Respects ``cfg.decoupled_wx`` (hoisted input GEMM), ``cfg.backend``
     ("xla" | "pallas"), and ``cfg.unroll`` (short-sequence latency mode).
+
+    ``mask`` (B, T) bool, optional: timesteps where it is False leave the
+    hidden state untouched — left-padded (bucketed) batches produce
+    bitwise the same final state as their unpadded prompts, since GRU
+    biases make zero *inputs* non-neutral. A masked call runs the XLA scan
+    (the fused kernels don't stream a mask yet; see ROADMAP).
     """
-    if cfg.backend == "pallas":
+    if cfg.backend == "pallas" and mask is None:
         from repro.kernels.gru_sequence import ops as seq_ops
         return seq_ops.gru_sequence_pallas(params, h0, xs, cfg=cfg, return_all=return_all)
 
+    m_t = None if mask is None else jnp.moveaxis(mask, -1, 0)  # (T, B)
     step = functools.partial(gru_step, params, cfg=cfg)
+
+    def gated(h, h2, mt):
+        return h2 if mt is None else jnp.where(mt[..., None], h2, h)
+
     if cfg.decoupled_wx:
         xp = input_projection(params, xs, cfg)           # (..., T, 3H) one GEMM
         xp_t = jnp.moveaxis(xp, -2, 0)
 
-        def body(h, xpt):
-            h2 = step(h, x_proj=xpt)
+        def body(h, op):
+            xpt, mt = op
+            h2 = gated(h, step(h, x_proj=xpt), mt)
             return h2, (h2 if return_all else None)
-        hT, hs = jax.lax.scan(body, h0, xp_t, unroll=cfg.unroll)
+        hT, hs = jax.lax.scan(body, h0, (xp_t, m_t), unroll=cfg.unroll)
     else:
         xs_t = jnp.moveaxis(xs, -2, 0)
 
-        def body(h, xt):
-            h2 = step(h, x=xt)
+        def body(h, op):
+            xt, mt = op
+            h2 = gated(h, step(h, x=xt), mt)
             return h2, (h2 if return_all else None)
-        hT, hs = jax.lax.scan(body, h0, xs_t, unroll=cfg.unroll)
+        hT, hs = jax.lax.scan(body, h0, (xs_t, m_t), unroll=cfg.unroll)
     if return_all:
         return hT, jnp.moveaxis(hs, 0, -2)
     return hT, None
@@ -266,7 +279,8 @@ def _uniform_stack_dims(cfg: GRUConfig) -> bool:
 
 def gru_stack_sequence(params: Sequence[dict], h0s: Sequence[jax.Array],
                        xs: jax.Array, *, cfg: GRUConfig,
-                       return_all: bool = False):
+                       return_all: bool = False,
+                       mask: Optional[jax.Array] = None):
     """Run a depth-L stack over ``xs`` (..., T, X), time axis = -2.
 
     ``params``/``h0s`` are per-layer sequences (layer 0 first). Returns
@@ -279,10 +293,16 @@ def gru_stack_sequence(params: Sequence[dict], h0s: Sequence[jax.Array],
 
     ``backend="pallas"`` with uniform hidden sizes fuses the whole stack
     into one pallas_call; otherwise each layer runs its own kernel.
+
+    ``mask`` (B, T) bool, optional: False steps freeze EVERY layer's state
+    (one shared mask is exact — during frozen steps upper layers ignore
+    their input, so the real steps see exactly the unpadded computation).
+    Masked runs take the XLA path.
     """
     params = stack_cell_params(params, cfg)
     L = len(params)
-    if cfg.backend == "pallas" and L > 1 and _uniform_stack_dims(cfg):
+    if cfg.backend == "pallas" and L > 1 and _uniform_stack_dims(cfg) \
+            and mask is None:
         from repro.kernels.gru_sequence import ops as seq_ops
         return seq_ops.gru_stack_sequence_pallas(params, tuple(h0s), xs,
                                                  cfg=cfg,
@@ -293,7 +313,8 @@ def gru_stack_sequence(params: Sequence[dict], h0s: Sequence[jax.Array],
         lcfg = layer_config(cfg, l)
         last = l == L - 1
         hT, hs = gru_sequence(params[l], h0s[l], cur, cfg=lcfg,
-                              return_all=(not last) or return_all)
+                              return_all=(not last) or return_all,
+                              mask=mask)
         finals.append(hT)
         if not last:
             cur = hs
@@ -301,11 +322,27 @@ def gru_stack_sequence(params: Sequence[dict], h0s: Sequence[jax.Array],
 
 
 def gru_stack_decode_step(params: Sequence[dict], hs: Sequence[jax.Array],
-                          x: jax.Array, *, cfg: GRUConfig) -> tuple:
+                          x: jax.Array, *, cfg: GRUConfig,
+                          impl: Optional[str] = None) -> tuple:
     """One serve step through the whole stack: layer ``l`` consumes layer
     ``l-1``'s NEW hidden state (same-timestep threading as the sequence
-    path). Returns the tuple of per-layer new hidden states."""
+    path). Returns the tuple of per-layer new hidden states.
+
+    ``impl``: "pallas" = fused decode-step kernel (ONE pallas_call for the
+    whole depth, weights pinned in VMEM — the latency fast path); "xla" =
+    layer-by-layer structural modes; None = follow ``cfg.backend``.
+    Heterogeneous layer sizes always take the XLA path. A dict ``params``
+    may carry precomputed ``"stacked_cells"`` (see
+    ``repro.kernels.gru_sequence.ops.prepare_stacked_cells``) so the fused
+    path does no per-step weight restacking.
+    """
+    stacked = params.get("stacked_cells") if isinstance(params, dict) else None
     params = stack_cell_params(params, cfg)
+    impl = impl or ("pallas" if cfg.backend == "pallas" else "xla")
+    if impl == "pallas" and _uniform_stack_dims(cfg):
+        from repro.kernels.gru_sequence import ops as seq_ops
+        return seq_ops.gru_stack_decode_pallas(params, tuple(hs), x, cfg=cfg,
+                                               stacked=stacked)
     new_hs = []
     cur = x
     for l in range(len(params)):
@@ -316,7 +353,8 @@ def gru_stack_decode_step(params: Sequence[dict], hs: Sequence[jax.Array],
 
 
 def gru_stack_reference(params: Sequence[dict], h0s: Sequence[jax.Array],
-                        xs: jax.Array, return_all: bool = False):
+                        xs: jax.Array, return_all: bool = False,
+                        mask: Optional[jax.Array] = None):
     """Dense fp32 layer-by-layer oracle for the stack (depth-1 ==
     ``gru_reference``). Returns (per-layer finals, last-layer states|None)."""
     params = stack_cell_params(params)
@@ -326,7 +364,8 @@ def gru_stack_reference(params: Sequence[dict], h0s: Sequence[jax.Array],
     for l, p in enumerate(params):
         last = l == len(params) - 1
         hT, hs = gru_reference(p, h0s[l], cur,
-                               return_all=(not last) or return_all)
+                               return_all=(not last) or return_all,
+                               mask=mask)
         finals.append(hT)
         if not last:
             cur = hs
@@ -349,8 +388,11 @@ def gru_decode_step(params: dict, h: jax.Array, x: jax.Array, *, cfg: GRUConfig)
 
 # pure-jnp dense oracle used by every test --------------------------------
 
-def gru_reference(params: dict, h0: jax.Array, xs: jax.Array, return_all: bool = False):
-    """Dense, unfused, fp32 oracle (no structural modes, no scan tricks)."""
+def gru_reference(params: dict, h0: jax.Array, xs: jax.Array,
+                  return_all: bool = False,
+                  mask: Optional[jax.Array] = None):
+    """Dense, unfused, fp32 oracle (no structural modes, no scan tricks).
+    ``mask`` (B, T): False steps leave h untouched (padding semantics)."""
     w = params["w"].astype(jnp.float32)
     u = params["u"].astype(jnp.float32)
     b = params["b"].astype(jnp.float32)
@@ -362,7 +404,8 @@ def gru_reference(params: dict, h0: jax.Array, xs: jax.Array, return_all: bool =
         z = jax.nn.sigmoid(x @ w[:, :H] + h @ u[:, :H] + b[:H])
         r = jax.nn.sigmoid(x @ w[:, H:2 * H] + h @ u[:, H:2 * H] + b[H:2 * H])
         ht = jnp.tanh(x @ w[:, 2 * H:] + (r * h) @ u[:, 2 * H:] + b[2 * H:])
-        h = (1 - z) * h + z * ht
+        h2 = (1 - z) * h + z * ht
+        h = h2 if mask is None else jnp.where(mask[..., t, None], h2, h)
         if return_all:
             out.append(h)
     if return_all:

@@ -200,10 +200,16 @@ def gru_sequence_sharded(params: dict, h0: jax.Array, xs: jax.Array, *,
 # ---------------------------------------------------------------------------
 
 def gru_stack_sequence_sharded(params, h0s, xs, *, mesh: Mesh, cfg: GRUConfig,
-                               axis: str = "model"):
+                               axis: str = "model", return_all: bool = False):
     """Depth-L stack with every layer's U output rows (rowwise) or
     contraction dim (cascade) sharded on the SAME mesh axis, inside ONE
-    shard_map. Returns the tuple of per-layer final h, replicated.
+    shard_map. Returns the tuple of per-layer final h, replicated; with
+    ``return_all=True`` returns ``(finals, last_layer_states (B,T,H))`` so
+    sharded prefill can emit the full sequence without a second pass — a
+    rowwise last layer's states are already replicated by the step's
+    trailing all-gather (zero extra collectives), a cascade last layer
+    republishes its sequence with ONE amortized gather, exactly like the
+    inner layers.
 
     The latency play (rowwise layers): the trailing all-gather that closes
     each step already replicates the full ``h'``, which is precisely the
@@ -243,9 +249,13 @@ def gru_stack_sequence_sharded(params, h0s, xs, *, mesh: Mesh, cfg: GRUConfig,
         idx = jax.lax.axis_index(axis)
         cur = xs_full.astype(jnp.float32)          # (B,T,·) replicated
         finals = []
+        all_states = None
         for l in range(L):
             H, a = dims[l], largs[l]
-            last = l == L - 1     # last layer only needs its final state
+            last = l == L - 1
+            # inner layers thread their full sequence up; the last layer
+            # emits it only when the caller asked for return_all
+            emit = (not last) or return_all
             if modes[l] == "rowwise":
                 xp = jnp.einsum("btx,xgh->btgh", cur, a["w3"]).reshape(B, T, -1)
                 u_flat = a["u3"].reshape(H, -1)
@@ -253,13 +263,17 @@ def gru_stack_sequence_sharded(params, h0s, xs, *, mesh: Mesh, cfg: GRUConfig,
                 step = functools.partial(_rowwise_step, axis=axis, n=n,
                                          variant=cfg.variant)
 
-                def body(h, xp_t, step=step, u=u_flat, b=b_flat, last=last):
+                def body(h, xp_t, step=step, u=u_flat, b=b_flat, emit=emit):
                     h2 = step(h, xp_t, u, b, idx)
-                    return h2, (None if last else h2)  # carry == full h
+                    return h2, (h2 if emit else None)  # carry == full h
                 hT, hs = jax.lax.scan(body, h0s_full[l].astype(jnp.float32),
                                       jnp.moveaxis(xp, 1, 0))
-                if not last:
-                    cur = jnp.moveaxis(hs, 0, 1)   # already replicated: reuse
+                if emit:
+                    seq = jnp.moveaxis(hs, 0, 1)   # already replicated: reuse
+                    if not last:
+                        cur = seq
+                    else:
+                        all_states = seq
             else:
                 xp = jnp.einsum("btx,xh->bth", cur, a["w"].astype(jnp.float32))
                 Hl = H // n
@@ -268,23 +282,32 @@ def gru_stack_sequence_sharded(params, h0s, xs, *, mesh: Mesh, cfg: GRUConfig,
                 step = functools.partial(_cascade_step, axis=axis,
                                          variant=cfg.variant)
 
-                def body(h_l, xp_t, step=step, u=a["u"], b=a["b"], last=last):
+                def body(h_l, xp_t, step=step, u=a["u"], b=a["b"], emit=emit):
                     h2 = step(h_l, xp_t, u, b)
-                    return h2, (None if last else h2)
+                    return h2, (h2 if emit else None)
                 hT_l, hs_l = jax.lax.scan(body, h_shard,
                                           jnp.moveaxis(xp, 1, 0))
-                if last:
-                    hT = jax.lax.all_gather(hT_l, axis, axis=1, tiled=True)
-                else:
+                if emit:
                     # ONE gather republishes the whole output sequence
                     hs = jax.lax.all_gather(hs_l, axis, axis=2, tiled=True)
-                    cur = jnp.moveaxis(hs, 0, 1)
-                    hT = cur[:, -1]
+                    seq = jnp.moveaxis(hs, 0, 1)
+                    hT = seq[:, -1]
+                    if not last:
+                        cur = seq
+                    else:
+                        all_states = seq
+                else:
+                    hT = jax.lax.all_gather(hT_l, axis, axis=1, tiled=True)
             finals.append(hT)
+        if return_all:
+            return tuple(finals), all_states
         return tuple(finals)
 
+    out_specs = tuple(P() for _ in range(L))
+    if return_all:
+        out_specs = (out_specs, P())
     return shard_map(
         f, mesh=mesh,
         in_specs=(P(), tuple(P() for _ in range(L)), tuple(layer_specs)),
-        out_specs=tuple(P() for _ in range(L)), check_vma=False,
+        out_specs=out_specs, check_vma=False,
     )(xs, tuple(h0s), tuple(layer_args))

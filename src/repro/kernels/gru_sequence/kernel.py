@@ -18,6 +18,15 @@ step runs the whole depth — layer l consumes layer l-1's same-timestep
 output directly from registers/VMEM, so an L-layer stack costs one kernel
 launch and one weight fetch total, instead of L sequential pallas_calls
 with L hidden-state round-trips through HBM.
+
+``gru_stack_decode_kernel`` is the latency-constrained serve path: ONE
+grid step of the same fused-stack structure, advancing a whole batch of
+per-layer hidden states through all L layers for ONE token. The grid axis
+is the BATCH (tiled), not time — weights stay pinned via constant
+index_maps while successive batch tiles stream through, so wave size
+scales past a single VMEM block without re-fetching a byte of U/W. This
+is the paper's figure of merit (single-step latency) with the AIE
+weight-residency story intact on TPU.
 """
 from __future__ import annotations
 
@@ -150,3 +159,67 @@ def gru_stack_sequence_kernel(h0: jax.Array, x_proj: jax.Array, u: jax.Array,
         interpret=interpret,
     )(h0, x_proj, u, w_deep, b)
     return hs, hT
+
+
+# ---------------------------------------------------------------------------
+# fused multi-layer decode step (the latency path)
+# ---------------------------------------------------------------------------
+
+def _decode_kernel(h_ref, xp_ref, u_ref, wd_ref, b_ref, o_ref, *,
+                   variant: str, num_layers: int):
+    """One token through all L layers for one batch tile. Weights resident;
+    layer l+1 consumes layer l's same-token output straight from registers
+    (nothing round-trips through HBM)."""
+    b = b_ref[...].astype(jnp.float32)                    # (L, 3H)
+    xp = xp_ref[...].astype(jnp.float32)                  # (Bt, 3H): layer-0 Wx
+    for l in range(num_layers):                           # static unroll
+        h_new = _gate_math(h_ref[l].astype(jnp.float32), xp, u_ref[l],
+                           b[l:l + 1], variant)
+        o_ref[l] = h_new.astype(o_ref.dtype)
+        if l + 1 < num_layers:
+            xp = _dot(h_new.astype(wd_ref.dtype), wd_ref[l]).astype(jnp.float32)
+
+
+def _pick_batch_block(B: int, limit: int = 256) -> int:
+    """Largest divisor of B that fits the VMEM budget heuristic."""
+    blk = min(B, limit)
+    while B % blk:
+        blk -= 1
+    return blk
+
+
+@functools.partial(jax.jit, static_argnames=("variant", "batch_block",
+                                             "interpret"))
+def gru_stack_decode_kernel(h: jax.Array, x_proj: jax.Array, u: jax.Array,
+                            w_deep: jax.Array, b: jax.Array, *,
+                            variant: str = "v1", batch_block: int = 0,
+                            interpret: bool = False) -> jax.Array:
+    """Fused decode step for a depth-L stack (uniform hidden size H).
+
+    h: (L,B,H) per-layer hidden states; x_proj: (B,3H) precomputed layer-0
+    Wx for the ONE new token; u: (L,H,3H); w_deep: (L-1,H,3H) deep-layer
+    input projections ((1,1,3H) zeros for L=1, unused); b: (L,3H).
+    Returns the new per-layer states (L,B,H).
+
+    Grid = batch tiles (``batch_block`` rows each, 0 = auto): all weights
+    use constant index_maps so the Pallas pipeline fetches them from HBM
+    once regardless of how many tiles stream through.
+    """
+    L, B, H = h.shape
+    Bt = batch_block or _pick_batch_block(B)
+    assert B % Bt == 0, (B, Bt)
+    Ld = max(L - 1, 1)
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, variant=variant, num_layers=L),
+        grid=(B // Bt,),
+        in_specs=[
+            pl.BlockSpec((L, Bt, H), lambda i: (0, i, 0)),     # this batch tile
+            pl.BlockSpec((Bt, 3 * H), lambda i: (i, 0)),       # its Wx slab
+            pl.BlockSpec((L, H, 3 * H), lambda i: (0, 0, 0)),  # all U: ONCE
+            pl.BlockSpec((Ld,) + w_deep.shape[1:], lambda i: (0, 0, 0)),
+            pl.BlockSpec((L, 3 * H), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((L, Bt, H), lambda i: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((L, B, H), h.dtype),
+        interpret=interpret,
+    )(h, x_proj, u, w_deep, b)

@@ -13,7 +13,21 @@ import jax.numpy as jnp
 
 from repro.kernels import on_cpu
 from repro.kernels.gru_sequence.kernel import (gru_sequence_kernel,
+                                               gru_stack_decode_kernel,
                                                gru_stack_sequence_kernel)
+
+
+def _stacked_weights(params: tuple):
+    """(u (L,H,3H), w_deep (max(L-1,1),·,3H), b (L,3H)) device-side stacks."""
+    L = len(params)
+    H = params[0]["u"].shape[0]
+    u = jnp.stack([p["u"] for p in params], 0)
+    if L > 1:
+        w_deep = jnp.stack([p["w"] for p in params[1:]], 0)
+    else:
+        w_deep = jnp.zeros((1, 1, 3 * H), params[0]["w"].dtype)
+    b = jnp.stack([p["b"] for p in params], 0)
+    return u, w_deep, b
 
 
 def gru_sequence_pallas(params: dict, h0: jax.Array, xs: jax.Array, *, cfg,
@@ -42,13 +56,10 @@ def gru_stack_sequence_pallas(params: tuple, h0s: tuple, xs: jax.Array, *,
         hT, hs = gru_sequence_pallas(params[0], h0s[0], xs, cfg=cfg,
                                      return_all=return_all)
         return (hT,), hs
-    H = params[0]["u"].shape[0]
     xp = xs @ params[0]["w"]                       # layer-0 decoupled GEMM
     xp_t = jnp.moveaxis(xp, -2, 0)                 # (T,B,3H)
     h0 = jnp.stack(h0s, 0)                         # (L,B,H)
-    u = jnp.stack([p["u"] for p in params], 0)     # (L,H,3H)
-    w_deep = jnp.stack([p["w"] for p in params[1:]], 0)  # (L-1,H,3H)
-    b = jnp.stack([p["b"] for p in params], 0)     # (L,3H)
+    u, w_deep, b = _stacked_weights(params)
     hs, hT = gru_stack_sequence_kernel(h0, xp_t, u, w_deep, b,
                                        variant=cfg.variant,
                                        interpret=on_cpu())
@@ -56,3 +67,34 @@ def gru_stack_sequence_pallas(params: tuple, h0s: tuple, xs: jax.Array, *,
     if return_all:
         return finals, jnp.moveaxis(hs, 0, -2)
     return finals, None
+
+
+def prepare_stacked_cells(params: tuple) -> dict:
+    """Precompute the stacked-weight views the fused decode kernel wants
+    ({u (L,H,3H), w_deep, b (L,3H)}). Do this ONCE outside the per-step
+    jit (ServeEngine does, via the model API's ``prepare_params``) so the
+    decode trace carries no per-token weight restacking."""
+    u, w_deep, b = _stacked_weights(tuple(params))
+    return {"u": u, "w_deep": w_deep, "b": b}
+
+
+def gru_stack_decode_pallas(params: tuple, hs: tuple, x: jax.Array, *, cfg,
+                            stacked: dict = None) -> tuple:
+    """Fused decode step: ONE pallas_call advances the whole batch through
+    all L layers for one token (uniform hidden sizes required).
+
+    params: per-layer ({w,u,b}, ...); hs: per-layer (B,H) current states;
+    x: (B,X) the new token's features; stacked: optional precomputed
+    ``prepare_stacked_cells`` output (skips the per-call weight stacking).
+    Returns per-layer new states. The layer-0 input projection is one
+    small GEMM outside the kernel; the kernel owns the entire recurrent
+    critical path.
+    """
+    xp = x @ params[0]["w"]                        # (B,3H)
+    h = jnp.stack(tuple(hs), 0)                    # (L,B,H)
+    if stacked is None:
+        stacked = prepare_stacked_cells(params)
+    h2 = gru_stack_decode_kernel(h, xp, stacked["u"], stacked["w_deep"],
+                                 stacked["b"], variant=cfg.variant,
+                                 interpret=on_cpu())
+    return tuple(h2[l] for l in range(len(params)))

@@ -33,3 +33,19 @@ def gru_stack_sequence_ref(h0, x_proj, u, w_deep, b, variant: str = "v1"):
                 xp = hs[l] @ jnp.asarray(w_deep[l], jnp.float32)
         out.append(hs[-1])
     return jnp.stack(out, axis=0), jnp.stack(hs, axis=0)
+
+
+def gru_stack_decode_ref(h, x_proj, u, w_deep, b, variant: str = "v1"):
+    """Oracle for the fused decode-step kernel, same raw-array interface.
+
+    h: (L,B,H) per-layer states, x_proj: (B,3H) layer-0 Wx of ONE token,
+    u: (L,H,3H), w_deep: (L-1,H,3H), b: (L,3H) -> new states (L,B,H)."""
+    L = h.shape[0]
+    xp = jnp.asarray(x_proj, jnp.float32)
+    out = []
+    for l in range(L):
+        h_new = gru_step_ref(h[l], xp, u[l], b[l], variant=variant)
+        out.append(h_new)
+        if l + 1 < L:
+            xp = h_new @ jnp.asarray(w_deep[l], jnp.float32)
+    return jnp.stack(out, axis=0)

@@ -2,10 +2,16 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
         --requests 4 --max-new 16
+
+GRU waves run bucketed continuous batching: ``--slots`` bounds the live
+batch (defaults to ``--requests``); give MORE requests than slots to
+exercise mid-wave admit/retire. ``--gru-backend pallas`` serves decode
+through the fused persistent stack kernel (one pallas_call per step).
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 
 import jax
 import numpy as np
@@ -22,21 +28,36 @@ def main(argv=None):
     p.add_argument("--arch", required=True)
     p.add_argument("--smoke", action="store_true")
     p.add_argument("--requests", type=int, default=4)
+    p.add_argument("--slots", type=int, default=0,
+                   help="decode batch slots (0 = --requests); requests "
+                        "beyond this queue and admit as slots free up (gru)")
     p.add_argument("--prompt-len", type=int, default=12)
+    p.add_argument("--vary-prompt", action="store_true",
+                   help="gru: ragged prompt lengths (exercises buckets+mask)")
     p.add_argument("--max-new", type=int, default=16)
+    p.add_argument("--gru-backend", choices=("xla", "pallas"), default=None,
+                   help="override cfg.gru.backend (pallas = fused kernels)")
+    p.add_argument("--bucket-min", type=int, default=8)
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.gru_backend and cfg.family == "gru":
+        cfg = cfg.replace(gru=dataclasses.replace(cfg.gru,
+                                                  backend=args.gru_backend))
     A = mapi.get_api(cfg)
     params = init_params(A.specs(cfg), jax.random.key(args.seed),
                          cfg.param_dtype)
-    engine = ServeEngine(cfg, params, ShardCtx(), max_batch=args.requests)
+    engine = ServeEngine(cfg, params, ShardCtx(),
+                         max_batch=args.slots or args.requests,
+                         bucket_min=args.bucket_min)
     rng = np.random.default_rng(args.seed)
     if cfg.family == "gru":
         # feature-vector waves: prompts are (S, X) float windows
-        reqs = [Request(prompt=rng.normal(size=(args.prompt_len,
-                                                cfg.gru.input_dim))
+        def plen():
+            return (int(rng.integers(1, args.prompt_len + 1))
+                    if args.vary_prompt else args.prompt_len)
+        reqs = [Request(prompt=rng.normal(size=(plen(), cfg.gru.input_dim))
                         .astype(np.float32),
                         max_new_tokens=args.max_new)
                 for _ in range(args.requests)]
@@ -51,8 +72,11 @@ def main(argv=None):
         print(f"req{i}: {len(r.out)} tokens -> {r.out[:8]}...")
     stats = engine.latency_stats()
     print(f"decode latency: mean={stats['mean_s']*1e3:.2f}ms "
-          f"p50={stats['p50_s']*1e3:.2f}ms p99={stats['p99_s']*1e3:.2f}ms "
-          f"({stats['steps']} steps)")
+          f"p50={stats['p50_s']*1e3:.2f}ms p90={stats['p90_s']*1e3:.2f}ms "
+          f"p99={stats['p99_s']*1e3:.2f}ms ({stats['steps']} steps); "
+          f"prefill mean={stats['prefill_mean_s']*1e3:.2f}ms "
+          f"({stats['prefills']} prefills, "
+          f"{len(engine._prefill_jit)} bucket jits)")
     return done
 
 

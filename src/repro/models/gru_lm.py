@@ -41,6 +41,19 @@ def loss_fn(params: dict, cfg: ModelConfig, batch: dict, *,
 
 # --- serving: the paper's latency path ---------------------------------------
 
+def prepare_params(params: dict, cfg: ModelConfig) -> dict:
+    """One-time serving prep: attach the stacked-weight views the fused
+    decode kernel consumes (``"stacked_cells"``), so the per-step decode
+    trace never restacks U/W/b. No-op for heterogeneous layer sizes (the
+    fused path doesn't apply) or already-prepared params."""
+    g = cfg.gru
+    dims = g.resolved_layer_dims
+    if "stacked_cells" in params or any(d != dims[0] for d in dims):
+        return params
+    from repro.kernels.gru_sequence.ops import prepare_stacked_cells
+    cells = gru_core.stack_cell_params(params, g)
+    return {**params, "stacked_cells": prepare_stacked_cells(cells)}
+
 def cache_specs(cfg: ModelConfig, batch: int, capacity: int = 0) -> dict:
     """Recurrent cache: one hidden state PER LAYER of the stack."""
     return {
@@ -59,9 +72,15 @@ def init_cache(cfg: ModelConfig, batch: int, capacity: int = 0) -> dict:
 def decode_step(params: dict, cfg: ModelConfig, cache: dict, x: jax.Array, *,
                 ctx: ShardCtx = ShardCtx()):
     """One recurrent step through the stack: x (B,X) features ->
-    (class logits so far, cache)."""
-    cells = gru_core.stack_cell_params(params, cfg.gru)
-    hs = gru_core.gru_stack_decode_step(cells, cache["h"], x, cfg=cfg.gru)
+    (class logits so far, cache).
+
+    With ``cfg.gru.backend == "pallas"`` (uniform layer sizes) the whole
+    depth runs as ONE fused pallas_call: the per-layer cache states are
+    stacked device-side and fed straight to the kernel — no host round
+    trips on the latency-critical path. Params prepared by
+    ``prepare_params`` carry pre-stacked weights so the step also does no
+    per-token weight restacking."""
+    hs = gru_core.gru_stack_decode_step(params, cache["h"], x, cfg=cfg.gru)
     hs = tuple(constrain(h, ("batch", "act_gates"), ctx) for h in hs)
     logits = hs[-1] @ params["head"]["w"] + params["head"]["b"]
     return logits.astype(jnp.float32), {"h": hs, "pos": cache["pos"] + 1}
@@ -69,12 +88,17 @@ def decode_step(params: dict, cfg: ModelConfig, cache: dict, x: jax.Array, *,
 
 def prefill(params: dict, cfg: ModelConfig, batch: dict, *,
             ctx: ShardCtx = ShardCtx()):
-    """Run the full sequence, return (logits, per-layer recurrent state)."""
+    """Run the full sequence, return (logits, per-layer recurrent state).
+
+    ``batch["mask"]`` (B, T) bool, optional: False timesteps freeze the
+    recurrence, so left-padded bucketed prompts (ServeEngine) yield the
+    same state as their unpadded originals."""
     xs = batch["features"]
     B = xs.shape[0]
     cells = gru_core.stack_cell_params(params, cfg.gru)
     h0s = gru_core.stack_h0(cfg.gru, B, xs.dtype)
-    finals, _ = gru_core.gru_stack_sequence(cells, h0s, xs, cfg=cfg.gru)
+    finals, _ = gru_core.gru_stack_sequence(cells, h0s, xs, cfg=cfg.gru,
+                                            mask=batch.get("mask"))
     logits = (finals[-1] @ params["head"]["w"]
               + params["head"]["b"]).astype(jnp.float32)
     cache = {"h": tuple(h.astype(jnp.float32) for h in finals),

@@ -1,22 +1,48 @@
-"""Batched serving engine: prefill + decode loop over the model API.
+"""Batched serving engine: bucketed prefill + continuous-batching decode.
 
 Design point mirrors the paper: the figure of merit is PER-STEP LATENCY of
 the sequential decode path (batch can be 1); throughput comes from batching
-aligned requests. Requests are left-aligned into fixed slots, prefilled
-once, then decoded lockstep with per-slot finish masking (EOS or budget);
-the step function is jitted once per (batch, prompt_len) bucket.
+aligned requests WITHOUT ever paying a recompile on the hot path.
+
+Compile-once discipline (the ROADMAP's re-jit item):
+
+* **Prompt-length buckets** — prompts are left-padded up to the next
+  power of two (>= ``bucket_min``), so prefill jits once per bucket, not
+  once per distinct prompt length. Padding is made semantics-exact by a
+  per-slot length mask threaded to the recurrent core (False timesteps
+  freeze the hidden state), so a bucketed prompt yields bitwise the same
+  state as its unpadded original.
+* **Fixed batch slots** (GRU waves) — the batch axis is always padded to
+  ``max_batch`` slots (empty slots carry zero features and are masked
+  out), so BOTH prefill and decode see one static batch shape: the decode
+  step compiles exactly once per engine lifetime.
+* **Keyed decode cache** — ``_get_decode`` is keyed by the decode input's
+  batch shape (the donated-cache jit used to be keyed on nothing, so a
+  wave with a different batch size silently retraced against it).
+
+Continuous batching (GRU waves): ``generate`` accepts MORE requests than
+``max_batch``. The overflow queues; whenever a slot's request finishes
+(EOS or budget), the slot is retired mid-wave and the next queued request
+is admitted into it — its prompt is prefilled through the same bucketed
+prefill (batch padded to the slot shape, so no new compilation) and its
+per-layer hidden state is scattered into the live wave cache. Finished
+streams therefore free capacity immediately instead of padding the wave
+to the slowest request.
 
 The GRU family (the paper's own model) serves FEATURE VECTORS instead of
-tokens: a request's ``prompt`` is a float (S, X) feature window, prefilled
-through the whole recurrent stack, and each decode step pushes one more
-feature vector (the request's ``stream`` if provided, else free-running on
-the last observed features) and emits the running class prediction. Per
-step that is exactly one pass through the depth-L recurrence — the paper's
-latency figure of merit, measured by ``latency_stats``.
+tokens: a request's ``prompt`` is a float (S, X) feature window, and each
+decode step pushes one more feature vector (the request's ``stream`` if
+provided, else free-running on the last observed features) and emits the
+running class prediction. Per step that is exactly one pass through the
+depth-L recurrence — with ``cfg.gru.backend == "pallas"`` a single fused
+pallas_call (see ``repro.kernels.gru_sequence``) — the paper's latency
+figure of merit, measured by ``latency_stats`` (p50/p99 tail bounds, not
+just means: the paper's constraint is a deadline).
 """
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
 
@@ -39,24 +65,51 @@ class Request:
     done: bool = False
 
 
+def bucket_len(S: int, minimum: int = 8) -> int:
+    """Next power of two >= max(S, minimum): the prefill jit key."""
+    b = max(minimum, 1)
+    while b < S:
+        b *= 2
+    return b
+
+
+@dataclass
+class _Slot:
+    """One live decode lane of a GRU wave."""
+    req: Request
+    last_feat: np.ndarray            # free-running fallback feature vector
+    step: int = 0                    # per-request decode step (stream index)
+
+
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, ctx: ShardCtx = ShardCtx(),
-                 max_batch: int = 8):
+                 max_batch: int = 8, bucket_min: int = 8):
         self.cfg = cfg
-        self.params = params
         self.ctx = ctx
         self.max_batch = max_batch
+        self.bucket_min = bucket_min
         self.api = mapi.get_api(cfg)
-        self._prefill_jit = {}
-        self._decode_jit = None
+        prep = getattr(self.api, "prepare_params", None)
+        self.params = prep(params, cfg) if prep else params
+        self._prefill_jit = {}           # keyed by prompt-length bucket
+        self._decode_jit = {}            # keyed by decode batch shape
+        self._decode_warm = set()        # keys whose compile step has passed
+        self._scatter_jit = None
         self.step_times: List[float] = []
+        self.prefill_times: List[float] = []
 
-    def _get_decode(self):
-        if self._decode_jit is None:
+    # -- jit caches ---------------------------------------------------------
+
+    def _get_decode(self, batch_shape: tuple):
+        """Decode step jit, keyed by the new-input batch shape. The cache is
+        donated, so an unkeyed entry reused at a different batch shape would
+        silently retrace; the key makes the compile-once contract checkable
+        (see test_serve_engine_decode_cache_keyed_by_batch)."""
+        if batch_shape not in self._decode_jit:
             def fn(params, cache, tok):
                 return self.api.decode_step(params, self.cfg, cache, tok, self.ctx)
-            self._decode_jit = jax.jit(fn, donate_argnums=(1,))
-        return self._decode_jit
+            self._decode_jit[batch_shape] = jax.jit(fn, donate_argnums=(1,))
+        return self._decode_jit[batch_shape]
 
     def _get_prefill(self, S: int):
         if S not in self._prefill_jit:
@@ -65,31 +118,50 @@ class ServeEngine:
             self._prefill_jit[S] = jax.jit(fn)
         return self._prefill_jit[S]
 
+    def _get_scatter(self):
+        """Admit-one cache scatter: copy row 0 of a freshly prefilled cache
+        into slot ``j`` of the live wave cache (device-side, one trace)."""
+        if self._scatter_jit is None:
+            def fn(cache, fresh, j):
+                return {"h": tuple(h.at[j].set(f[0]) for h, f in
+                                   zip(cache["h"], fresh["h"])),
+                        "pos": cache["pos"]}
+            self._scatter_jit = jax.jit(fn)
+        return self._scatter_jit
+
+    # -- LM waves -----------------------------------------------------------
+
     def generate(self, requests: Sequence[Request]) -> List[Request]:
-        """Serve a wave of requests (padded/aligned batch)."""
+        """Serve a wave of requests. GRU waves run bucketed continuous
+        batching and accept any number of requests; LM waves are a single
+        padded/aligned batch of at most ``max_batch``."""
         reqs = list(requests)
-        assert len(reqs) <= self.max_batch
         if self.cfg.family == "gru":
             return self._generate_gru(reqs)
         if self.cfg.family in ("audio", "vlm"):
             raise NotImplementedError("wave serving is LM/GRU-only; use the "
                                       "model API directly for other families")
+        assert len(reqs) <= self.max_batch
         B = len(reqs)
         S = max(len(r.prompt) for r in reqs)
         toks = np.zeros((B, S), np.int32)
         for i, r in enumerate(reqs):
             toks[i, S - len(r.prompt):] = r.prompt      # left-pad alignment
         prefill = self._get_prefill(S)
+        t0 = time.perf_counter()
         logits, cache = prefill(self.params, {"tokens": jnp.asarray(toks)})
-        decode = self._get_decode()
+        logits.block_until_ready()
+        self.prefill_times.append(time.perf_counter() - t0)
         max_new = max(r.max_new_tokens for r in reqs)
         next_tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        key = tuple(next_tok.shape)
+        decode = self._get_decode(key)
         finished = np.zeros(B, bool)
         for _ in range(max_new):
             t0 = time.perf_counter()
             logits, cache = decode(self.params, cache, next_tok)
             logits.block_until_ready()
-            self.step_times.append(time.perf_counter() - t0)
+            self._record_step(key, time.perf_counter() - t0)
             tok_np = np.asarray(next_tok)
             for i, r in enumerate(reqs):
                 if not finished[i]:
@@ -105,50 +177,119 @@ class ServeEngine:
             r.done = True
         return reqs
 
-    def _generate_gru(self, reqs: List[Request]) -> List[Request]:
-        """Feature-vector wave serving for the paper's recurrent family.
+    # -- GRU waves: bucketed continuous batching ----------------------------
 
-        Prompts are (S_i, X) float windows, left-padded with zeros and
-        prefilled through the stack once; every decode step feeds the next
-        (B, X) feature slab (request ``stream`` when given, else the last
-        prompt vector, free-running) and records the argmax class."""
+    def _gru_prefill_batch(self, prompts: List[np.ndarray], Sb: int):
+        """Left-pad prompts into the FIXED (max_batch, Sb, X) slot shape with
+        an exactness mask; rows beyond len(prompts) are empty (fully
+        masked)."""
         X = self.cfg.gru.input_dim
-        B = len(reqs)
-        prompts = [np.asarray(r.prompt, np.float32).reshape(-1, X)
-                   for r in reqs]
-        S = max(p.shape[0] for p in prompts)
-        feats = np.zeros((B, S, X), np.float32)
+        Bs = self.max_batch
+        feats = np.zeros((Bs, Sb, X), np.float32)
+        mask = np.zeros((Bs, Sb), bool)
         for i, p in enumerate(prompts):
-            feats[i, S - p.shape[0]:] = p               # left-pad alignment
-        prefill = self._get_prefill(S)
-        logits, cache = prefill(self.params, {"features": jnp.asarray(feats)})
-        decode = self._get_decode()
-        max_new = max(r.max_new_tokens for r in reqs)
-        finished = np.zeros(B, bool)
-        for step in range(max_new):
-            nxt = np.stack([
-                r.stream[step] if r.stream is not None
-                and step < len(r.stream) else prompts[i][-1]
-                for i, r in enumerate(reqs)]).astype(np.float32)
+            feats[i, Sb - p.shape[0]:] = p
+            mask[i, Sb - p.shape[0]:] = True
+        return feats, mask
+
+    def _gru_prefill(self, prompts: List[np.ndarray]):
+        """One bucketed prefill of up to max_batch prompts; returns cache."""
+        Sb = bucket_len(max(p.shape[0] for p in prompts), self.bucket_min)
+        feats, mask = self._gru_prefill_batch(prompts, Sb)
+        prefill = self._get_prefill(Sb)
+        t0 = time.perf_counter()
+        logits, cache = prefill(self.params, {"features": jnp.asarray(feats),
+                                              "mask": jnp.asarray(mask)})
+        logits.block_until_ready()
+        self.prefill_times.append(time.perf_counter() - t0)
+        return cache
+
+    def _generate_gru(self, reqs: List[Request]) -> List[Request]:
+        if not reqs:
+            return []
+        X = self.cfg.gru.input_dim
+        Bs = self.max_batch
+        pending = deque(reqs)                           # FIFO admission order
+        slots: List[Optional[_Slot]] = [None] * Bs
+
+        def make_slot(r: Request) -> _Slot:
+            p = np.asarray(r.prompt, np.float32).reshape(-1, X)
+            return _Slot(req=r, last_feat=p[-1])
+
+        # initial cohort: ONE batched bucketed prefill
+        cohort = [make_slot(pending.popleft())
+                  for _ in range(min(Bs, len(pending)))]
+        cache = self._gru_prefill(
+            [np.asarray(s.req.prompt, np.float32).reshape(-1, X)
+             for s in cohort])
+        for i, s in enumerate(cohort):
+            slots[i] = s
+
+        scatter = self._get_scatter()
+        key = (Bs, X)
+        decode = self._get_decode(key)
+        nxt = np.zeros((Bs, X), np.float32)
+        while any(s is not None for s in slots):
+            for j, s in enumerate(slots):
+                if s is None:
+                    nxt[j] = 0.0
+                    continue
+                r = s.req
+                nxt[j] = (r.stream[s.step] if r.stream is not None
+                          and s.step < len(r.stream) else s.last_feat)
             t0 = time.perf_counter()
             logits, cache = decode(self.params, cache, jnp.asarray(nxt))
             logits.block_until_ready()
-            self.step_times.append(time.perf_counter() - t0)
+            self._record_step(key, time.perf_counter() - t0)
             cls = np.asarray(jnp.argmax(logits, -1))
-            for i, r in enumerate(reqs):
-                if not finished[i]:
-                    r.out.append(int(cls[i]))
-                    if (int(cls[i]) == r.eos_id
-                            or len(r.out) >= r.max_new_tokens):
-                        finished[i] = True
-                        r.done = True
-            if finished.all():
-                break
+            for j, s in enumerate(slots):
+                if s is None:
+                    continue
+                r = s.req
+                r.out.append(int(cls[j]))
+                s.step += 1
+                if (int(cls[j]) == r.eos_id
+                        or len(r.out) >= r.max_new_tokens):
+                    r.done = True
+                    slots[j] = None                     # retire mid-wave
+                    if pending:                         # admit mid-wave
+                        s2 = make_slot(pending.popleft())
+                        fresh = self._gru_prefill(
+                            [np.asarray(s2.req.prompt, np.float32)
+                             .reshape(-1, X)])
+                        cache = scatter(cache, fresh,
+                                        jnp.asarray(j, jnp.int32))
+                        slots[j] = s2
         for r in reqs:
             r.done = True
         return reqs
 
+    # -- stats --------------------------------------------------------------
+
+    def _record_step(self, key: tuple, dt: float) -> None:
+        """Record one decode-step latency, excluding each decode jit's
+        FIRST call (its compile) so the tail percentiles reflect steady
+        state, not compilation — per key, since every batch shape compiles
+        separately."""
+        if key in self._decode_warm:
+            self.step_times.append(dt)
+        else:
+            self._decode_warm.add(key)
+
     def latency_stats(self) -> Dict[str, float]:
-        ts = np.array(self.step_times[1:] or [0.0])     # drop compile step
-        return {"mean_s": float(ts.mean()), "p50_s": float(np.percentile(ts, 50)),
-                "p99_s": float(np.percentile(ts, 99)), "steps": len(ts)}
+        """Per-step decode latency distribution (tail-bound view: the
+        paper's constraint is a deadline, not an average) plus prefill
+        timings. Compile steps are excluded per decode-jit key at record
+        time; prefill timings INCLUDE each bucket's compile (cold-start
+        cost is part of the prefill story)."""
+        ts = np.array(self.step_times or [0.0])
+        pf = np.array(self.prefill_times or [0.0])
+        return {"mean_s": float(ts.mean()),
+                "p50_s": float(np.percentile(ts, 50)),
+                "p90_s": float(np.percentile(ts, 90)),
+                "p99_s": float(np.percentile(ts, 99)),
+                "max_s": float(ts.max()),
+                "steps": len(ts),
+                "prefill_mean_s": float(pf.mean()),
+                "prefill_p99_s": float(np.percentile(pf, 99)),
+                "prefills": len(self.prefill_times)}

@@ -109,6 +109,131 @@ def test_serve_engine_gru_matches_model_api():
     assert done[0].out[0] == expect
 
 
+def test_serve_engine_no_retrace_same_bucket():
+    """Two GRU waves with DIFFERENT prompt lengths in the same power-of-two
+    bucket share one prefill jit entry and trace it exactly once; the
+    decode step compiles once for the engine lifetime (fixed slots)."""
+    cfg = get_smoke_config("gru-jet-deep")
+    A = mapi.get_api(cfg)
+    params = init_params(A.specs(cfg), jax.random.key(0), cfg.param_dtype)
+    engine = ServeEngine(cfg, params, ShardCtx(), max_batch=2, bucket_min=8)
+    rng = np.random.default_rng(0)
+
+    def wave(S):
+        return [Request(prompt=rng.normal(size=(S, 5)).astype(np.float32),
+                        max_new_tokens=2) for _ in range(2)]
+
+    engine.generate(wave(5))                     # warmup: bucket 8
+    n_prefill = len(engine._prefill_jit)
+    n_decode = len(engine._decode_jit)
+    traces = {k: f._cache_size() for k, f in engine._prefill_jit.items()}
+    engine.generate(wave(7))                     # different S, same bucket
+    assert len(engine._prefill_jit) == n_prefill == 1
+    assert len(engine._decode_jit) == n_decode == 1
+    for k, f in engine._prefill_jit.items():
+        assert f._cache_size() == traces[k] == 1, (k, f._cache_size())
+    for f in engine._decode_jit.values():
+        assert f._cache_size() == 1
+    # a longer prompt opens exactly one NEW bucket
+    engine.generate(wave(11))                    # bucket 16
+    assert len(engine._prefill_jit) == 2
+    assert len(engine._decode_jit) == 1
+
+
+def test_serve_engine_decode_cache_keyed_by_batch():
+    """Regression: the decode jit cache is keyed by batch shape, so waves
+    of different sizes get their own donated-cache jit instead of silently
+    retracing one unkeyed entry."""
+    cfg = get_smoke_config("qwen3-0.6b")
+    A = mapi.get_api(cfg)
+    params = init_params(A.specs(cfg), jax.random.key(0), cfg.param_dtype)
+    engine = ServeEngine(cfg, params, ShardCtx(), max_batch=3)
+    rng = np.random.default_rng(0)
+
+    def wave(B):
+        return [Request(prompt=rng.integers(0, cfg.vocab_size, size=5)
+                        .astype(np.int32), max_new_tokens=2)
+                for _ in range(B)]
+
+    engine.generate(wave(2))
+    engine.generate(wave(1))
+    assert set(engine._decode_jit) == {(2,), (1,)}
+    for f in engine._decode_jit.values():
+        assert f._cache_size() == 1              # each traced exactly once
+    done = engine.generate(wave(2))              # reuses the (2,) entry
+    assert engine._decode_jit[(2,)]._cache_size() == 1
+    assert [len(r.out) for r in done] == [2, 2]
+
+
+def test_serve_engine_gru_continuous_batching():
+    """More requests than slots: finished streams retire mid-wave and
+    queued requests are admitted into the freed slots — everyone is served
+    with correct lengths and only ONE prefill bucket is compiled."""
+    cfg = get_smoke_config("gru-jet-deep")
+    A = mapi.get_api(cfg)
+    params = init_params(A.specs(cfg), jax.random.key(0), cfg.param_dtype)
+    engine = ServeEngine(cfg, params, ShardCtx(), max_batch=2, bucket_min=8)
+    rng = np.random.default_rng(0)
+    budgets = [2, 5, 3, 4, 1]
+    reqs = [Request(prompt=rng.normal(size=(3 + i % 4, 5)).astype(np.float32),
+                    max_new_tokens=n) for i, n in enumerate(budgets)]
+    done = engine.generate(reqs)
+    assert [len(r.out) for r in done] == budgets
+    assert all(r.done for r in done)
+    assert all(0 <= t < 5 for r in done for t in r.out)
+    # 5 requests through 2 slots: 1 cohort prefill + 3 admit prefills,
+    # all through the SAME bucket jit (prompts 3..6 all bucket to 8)
+    stats = engine.latency_stats()
+    assert stats["prefills"] == 4
+    assert len(engine._prefill_jit) == 1
+    for f in engine._prefill_jit.values():
+        assert f._cache_size() == 1
+    # mid-wave admission really overlapped: total decode steps is less than
+    # a serial 2-slot schedule would need (bounded by the longest lane sum)
+    assert stats["steps"] >= max(budgets)
+
+
+def test_serve_engine_gru_bucketed_prefill_exact():
+    """Bucket padding must not change results: a batch-1 engine answer
+    equals the direct model-API answer on the UNPADDED prompt, even though
+    the engine pads the prompt up to the bucket length (mask exactness)."""
+    cfg = get_smoke_config("gru-jet-deep")
+    A = mapi.get_api(cfg)
+    params = init_params(A.specs(cfg), jax.random.key(0), cfg.param_dtype)
+    rng = np.random.default_rng(1)
+    feats = rng.normal(size=(3, 5)).astype(np.float32)   # S=3 -> bucket 8
+    logits, cache = A.prefill(params, cfg,
+                              {"features": jnp.asarray(feats[None])},
+                              ShardCtx())
+    logits2, _ = A.decode_step(params, cfg, cache,
+                               jnp.asarray(feats[-1][None]), ShardCtx())
+    expect = int(np.argmax(np.asarray(logits2)[0]))
+    engine = ServeEngine(cfg, params, ShardCtx(), max_batch=1, bucket_min=8)
+    done = engine.generate([Request(prompt=feats, max_new_tokens=1)])
+    assert done[0].out[0] == expect
+
+
+def test_serve_engine_gru_pallas_backend():
+    """The fused decode path serves end-to-end (backend="pallas"): same
+    class predictions as the XLA engine on the same wave."""
+    import dataclasses
+    cfg = get_smoke_config("gru-jet-deep")
+    cfg_p = cfg.replace(gru=dataclasses.replace(cfg.gru, backend="pallas"))
+    A = mapi.get_api(cfg)
+    params = init_params(A.specs(cfg), jax.random.key(0), cfg.param_dtype)
+    rng = np.random.default_rng(2)
+    prompts = [rng.normal(size=(4, 5)).astype(np.float32) for _ in range(2)]
+    outs = []
+    for c in (cfg, cfg_p):
+        engine = ServeEngine(c, params, ShardCtx(), max_batch=2)
+        # serving prep attaches the pre-stacked decode weights exactly once
+        assert "stacked_cells" in engine.params
+        done = engine.generate([Request(prompt=p, max_new_tokens=3)
+                                for p in prompts])
+        outs.append([r.out for r in done])
+    assert outs[0] == outs[1]
+
+
 def test_serve_engine_greedy_matches_model():
     """Engine's first generated token == argmax of the model prefill."""
     cfg = get_smoke_config("qwen3-0.6b").replace(dtype="float32",
