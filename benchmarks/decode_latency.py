@@ -3,61 +3,86 @@
 The paper's figure of merit is the latency of ONE recurrent step. This
 benchmark tracks it per PR for the two serving implementations:
 
-* ``xla``   — ``gru_stack_decode_step(impl="xla")``: layer-by-layer
-  structural modes (the paper's row-wise scheme by default), L separate
-  dispatch chains per step.
-* ``fused`` — ``gru_stack_decode_step(impl="pallas")``: ONE pallas_call
-  advances the whole batch through all L layers (weights pinned in VMEM
-  via constant index maps; interpret mode on CPU).
+* ``xla``   — layer-by-layer structural modes (the paper's row-wise scheme
+  by default), L separate dispatch chains per step.
+* ``fused`` — ONE pallas_call advances the whole batch through all L
+  layers (weights pinned in VMEM via constant index maps; interpret mode
+  on CPU).
+
+``--via`` picks how the step is obtained:
+
+* ``direct``  — the legacy entry point ``gru_stack_decode_step(impl=...)``
+  (now an executor shim, kept for continuity of the series).
+* ``runtime`` — ``repro.core.runtime.plan(cfg, mode="decode").decode``:
+  the capability-dispatched executor path ServeEngine uses; each row then
+  records WHICH backend the plan resolved (``backend`` field), so the
+  artifact documents the dispatch decision alongside the latency.
 
 Sweeps depth x batch and reports the per-step latency DISTRIBUTION
 (p50/p99 — the paper's constraint is a tail bound, not an average), each
-step timed individually with a device sync. Emits BENCH_gru_decode.json.
+step timed individually with a device sync, both impls measured in
+alternating rounds (shared-host drift bias). Emits BENCH_gru_decode.json.
 
-    PYTHONPATH=src python benchmarks/decode_latency.py [--smoke]
+    PYTHONPATH=src python benchmarks/decode_latency.py [--smoke] [--via runtime]
 
 CSV: name,us_per_call,derived
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
+import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import GRUConfig
-from repro.core import gru
+from repro.core import gru, runtime
 from repro.core.params import init_params
 
 
-def _make_step(cfg: GRUConfig, impl: str, batch: int):
-    """(jitted step fn, params, warm state, input) for one impl."""
-    params = init_params(gru.gru_stack_specs(cfg), jax.random.key(0))
-    if impl == "pallas":
-        # serving prepares params once (ServeEngine via prepare_params);
-        # measure the same pre-stacked fast path here
-        from repro.kernels.gru_sequence.ops import prepare_stacked_cells
-        params = {"cells": tuple(params),
-                  "stacked_cells": prepare_stacked_cells(tuple(params))}
+def _make_step(cfg: GRUConfig, impl: str, batch: int, via: str = "direct"):
+    """(jitted step fn, params, warm state, input, backend name) for one
+    impl routed either through the legacy entry point or the executor."""
+    raw = init_params(gru.gru_stack_specs(cfg), jax.random.key(0))
+    rcfg = dataclasses.replace(cfg, backend=impl)
+    # serving prepares params once (ServeEngine via runtime.prepare);
+    # measure the same pre-stacked fast path here
+    params = runtime.prepare(raw, rcfg)
     hs = gru.stack_h0(cfg, batch)
     x = jnp.ones((batch, cfg.input_dim))
-    f = jax.jit(lambda p, h, xv: gru.gru_stack_decode_step(p, h, xv, cfg=cfg,
-                                                           impl=impl))
-    out = f(params, hs, x)
+    if via == "runtime":
+        plan = runtime.plan(rcfg, batch=batch, mode="decode")
+        backend = plan.decode_backend
+        f = jax.jit(lambda p, h, xv: plan.decode(p, h, xv))
+    else:
+        backend = impl
+        params = {"cells": params.cells,
+                  **({"stacked_cells": params.stacked}
+                     if params.stacked is not None else {})}
+        f = jax.jit(lambda p, h, xv: gru.gru_stack_decode_step(
+            p, h, xv, cfg=cfg, impl=impl))
+    with warnings.catch_warnings():
+        # the legacy shim warns at first TRACE, i.e. on this first call
+        warnings.simplefilter("ignore", DeprecationWarning)
+        out = f(params, hs, x)
     out[-1].block_until_ready()
-    return f, params, out, x
+    return f, params, out, x, backend
 
 
-def _per_step_times(cfg: GRUConfig, batch: int, iters: int,
-                    warmup: int = 10, rounds: int = 10) -> dict:
+def _per_step_times(cfg: GRUConfig, batch: int, iters: int, via: str,
+                    warmup: int = 10, rounds: int = 10):
     """Per-step latencies for BOTH impls, measured in alternating rounds so
     machine-load drift (shared CI hosts) biases neither implementation."""
-    bench = {impl: _make_step(cfg, "pallas" if impl == "fused" else "xla",
-                              batch)
-             for impl in ("xla", "fused")}
+    bench, backends = {}, {}
+    for impl in ("xla", "fused"):
+        f, params, out, x, backend = _make_step(
+            cfg, "pallas" if impl == "fused" else "xla", batch, via)
+        bench[impl] = (f, params, out, x)
+        backends[impl] = backend
     ts = {impl: [] for impl in bench}
     for impl, (f, params, out, x) in bench.items():
         for _ in range(warmup):
@@ -73,21 +98,22 @@ def _per_step_times(cfg: GRUConfig, batch: int, iters: int,
                 out[-1].block_until_ready()
                 ts[impl].append(time.perf_counter() - t0)
             bench[impl] = (f, params, out, x)
-    return {impl: np.array(v) for impl, v in ts.items()}
+    return {impl: np.array(v) for impl, v in ts.items()}, backends
 
 
 def run(depths=(1, 2, 3), batches=(1, 8, 32), H: int = 32, X: int = 5,
         iters: int = 300, json_path: str = "BENCH_gru_decode.json",
-        csv: bool = True):
+        csv: bool = True, via: str = "direct"):
     """Depth x batch x impl sweep; emits the BENCH_gru_decode.json artifact."""
     rows = []
     for L in depths:
         for B in batches:
             cfg = GRUConfig(input_dim=X, hidden_dim=H, num_layers=L)
-            pair = _per_step_times(cfg, B, iters)
+            pair, backends = _per_step_times(cfg, B, iters, via)
             for impl, ts in pair.items():
                 row = {"depth": L, "batch": B, "impl": impl, "hidden_dim": H,
                        "input_dim": X, "steps": len(ts),
+                       "via": via, "backend": backends[impl],
                        "p50_us": round(float(np.percentile(ts, 50)) * 1e6, 2),
                        "p90_us": round(float(np.percentile(ts, 90)) * 1e6, 2),
                        "p99_us": round(float(np.percentile(ts, 99)) * 1e6, 2),
@@ -95,7 +121,7 @@ def run(depths=(1, 2, 3), batches=(1, 8, 32), H: int = 32, X: int = 5,
                 rows.append(row)
                 if csv:
                     print(f"decode_L{L}_B{B}_{impl},{row['p50_us']:.2f},"
-                          f"p99={row['p99_us']:.2f}us")
+                          f"p99={row['p99_us']:.2f}us;backend={row['backend']}")
     summary = {}
     for L in depths:
         pair = {r["impl"]: r for r in rows
@@ -104,7 +130,7 @@ def run(depths=(1, 2, 3), batches=(1, 8, 32), H: int = 32, X: int = 5,
             summary[f"p50_speedup_depth{L}"] = round(
                 pair["xla"]["p50_us"] / max(pair["fused"]["p50_us"], 1e-9), 3)
     out = {"bench": "gru_decode_step_latency",
-           "backend": jax.default_backend(),
+           "backend": jax.default_backend(), "via": via,
            "rows": rows, "summary": summary}
     with open(json_path, "w") as f:
         json.dump(out, f, indent=2)
@@ -119,6 +145,10 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="reduced sweep for CI (still emits the artifact)")
+    ap.add_argument("--via", choices=("direct", "runtime"), default="direct",
+                    help="route steps through the legacy entry point or the "
+                         "capability-dispatched executor (records the "
+                         "plan's backend choice in the artifact)")
     ap.add_argument("--depths", type=int, nargs="+", default=None)
     ap.add_argument("--batches", type=int, nargs="+", default=None)
     ap.add_argument("--iters", type=int, default=None)
@@ -127,8 +157,8 @@ if __name__ == "__main__":
     if args.smoke:
         run(depths=tuple(args.depths or (1, 3)),
             batches=tuple(args.batches or (1, 8)),
-            iters=args.iters or 120, json_path=args.json)
+            iters=args.iters or 120, json_path=args.json, via=args.via)
     else:
         run(depths=tuple(args.depths or (1, 2, 3)),
             batches=tuple(args.batches or (1, 8, 32)),
-            iters=args.iters or 300, json_path=args.json)
+            iters=args.iters or 300, json_path=args.json, via=args.via)

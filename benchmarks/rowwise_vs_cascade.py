@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import GRUConfig
-from repro.core import gru
+from repro.core import gru, runtime
 from repro.core.latency import gru_step_model
 from repro.core.params import init_params
 
@@ -59,28 +59,32 @@ def _measure_seq(cfg: GRUConfig, H: int, X: int, T: int = 32,
     params = init_params(gru.gru_cell_specs(X, H), jax.random.key(0))
     h0 = jnp.zeros((1, H))
     xs = jnp.ones((1, T, X))
-    f = jax.jit(lambda p, h, x: gru.gru_sequence(p, h, x, cfg=cfg)[0])
-    f(params, h0, xs).block_until_ready()
+    plan = runtime.plan(cfg, batch=1, seq=T, mode="sequence")
+    f = jax.jit(lambda p, h, x: plan.sequence(p, (h,), x)[0][0])
+    f((params,), h0, xs).block_until_ready()
     t0 = time.perf_counter()
     for _ in range(iters):
-        out = f(params, h0, xs)
+        out = f((params,), h0, xs)
     out.block_until_ready()
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def _measure_stack_decode(cfg: GRUConfig, iters: int = 200) -> float:
-    """Per-step decode latency (us) of one jitted pass through the stack."""
-    params = init_params(gru.gru_stack_specs(cfg), jax.random.key(0))
+def _measure_stack_decode(cfg: GRUConfig, iters: int = 200):
+    """Per-step decode latency (us) of one executor-planned pass through
+    the stack, plus the backend the plan resolved."""
+    params = runtime.prepare(
+        init_params(gru.gru_stack_specs(cfg), jax.random.key(0)), cfg)
     hs = gru.stack_h0(cfg, 1)
     x = jnp.ones((1, cfg.input_dim))
-    f = jax.jit(lambda p, h, xv: gru.gru_stack_decode_step(p, h, xv, cfg=cfg))
+    plan = runtime.plan(cfg, batch=1, mode="decode")
+    f = jax.jit(lambda p, h, xv: plan.decode(p, h, xv))
     out = f(params, hs, x)
     out[-1].block_until_ready()
     t0 = time.perf_counter()
     for _ in range(iters):
         out = f(params, out, x)
     out[-1].block_until_ready()
-    return (time.perf_counter() - t0) / iters * 1e6
+    return (time.perf_counter() - t0) / iters * 1e6, plan.decode_backend
 
 
 def run_depth_sweep(layers=(1, 2, 4), H: int = 32, X: int = 5,
@@ -91,11 +95,13 @@ def run_depth_sweep(layers=(1, 2, 4), H: int = 32, X: int = 5,
         for mode in ("rowwise", "cascade", "dense"):
             cfg = GRUConfig(input_dim=X, hidden_dim=H, num_layers=L,
                             matvec_mode=mode)
-            us = _measure_stack_decode(cfg)
+            us, backend = _measure_stack_decode(cfg)
             results.append({"num_layers": L, "mode": mode, "hidden_dim": H,
-                            "input_dim": X, "decode_step_us": round(us, 2)})
+                            "input_dim": X, "backend": backend,
+                            "decode_step_us": round(us, 2)})
             if csv:
-                print(f"e4_depth_L{L}_{mode},{us:.2f},stack_decode_step")
+                print(f"e4_depth_L{L}_{mode},{us:.2f},stack_decode_step;"
+                      f"backend={backend}")
     with open(json_path, "w") as f:
         json.dump({"bench": "gru_depth_decode_latency", "rows": results}, f,
                   indent=2)

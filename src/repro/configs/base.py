@@ -76,7 +76,9 @@ class GRUConfig:
     fused_gates: bool = True         # hybrid fused aggregation vs unfused
     decoupled_wx: bool = True        # hoist W.x out of the recurrence
     variant: str = "v1"              # "v1" (paper/Cho) | "v3" (beyond-paper fused-U)
-    backend: str = "xla"             # "xla" | "pallas"
+    backend: str = "xla"             # executor preference ("xla" | "pallas"
+                                     # | "auto" = cheapest legal backend;
+                                     # see repro.core.runtime)
     row_block: int = 0               # rows per block (0 = auto)
     unroll: int = 1                  # scan unroll for short-seq latency mode
     # --- deep stacks ---

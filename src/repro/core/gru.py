@@ -44,11 +44,21 @@ matvec-only. Per-layer ``matvec_mode`` overrides
 stack — the paper's hybrid AIE-PL split, generalized per layer. With
 ``backend="pallas"`` and uniform hidden sizes the whole stack lowers to
 ONE fused pallas_call (see ``repro.kernels.gru_sequence``).
+
+Backend DISPATCH lives in ``repro.core.runtime`` (the capability-driven
+executor): this module keeps the gate math, the parameter specs, the
+XLA-scan backend implementations (``gru_sequence_xla`` /
+``gru_stack_sequence_xla`` / ``gru_stack_decode_xla``) and the dense
+oracles. The historical entry points (``gru_sequence``,
+``gru_stack_sequence``, ``gru_stack_decode_step``, ``gru_decode_step``)
+remain as deprecated shims over the executor — bitwise-equal, warning
+once per process.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Optional, Sequence
 
 import jax
@@ -56,6 +66,27 @@ import jax.numpy as jnp
 
 from repro.configs.base import GRUConfig
 from repro.core.params import Spec
+
+
+# ---------------------------------------------------------------------------
+# deprecation bookkeeping for the legacy entry points (now executor shims)
+# ---------------------------------------------------------------------------
+
+_DEPRECATION_WARNED: set = set()
+
+
+def _warn_deprecated(old: str) -> None:
+    """One DeprecationWarning per entry point per process: the legacy GRU
+    entry points still work (and stay bitwise-equal to the executor) but
+    new code should go through ``repro.core.runtime.plan()``."""
+    if old in _DEPRECATION_WARNED:
+        return
+    _DEPRECATION_WARNED.add(old)
+    warnings.warn(
+        f"{old} is a deprecated entry point; use "
+        "repro.core.runtime.plan()/sequence()/decode() (capability-"
+        "dispatched executor) instead.",
+        DeprecationWarning, stacklevel=3)
 
 
 # ---------------------------------------------------------------------------
@@ -218,23 +249,19 @@ def gru_step(params: dict, h: jax.Array, x: Optional[jax.Array] = None,
 # sequence
 # ---------------------------------------------------------------------------
 
-def gru_sequence(params: dict, h0: jax.Array, xs: jax.Array, *, cfg: GRUConfig,
-                 return_all: bool = False, mask: Optional[jax.Array] = None):
-    """Run the recurrence over ``xs`` (..., T, X), time axis = -2.
+def gru_sequence_xla(params: dict, h0: jax.Array, xs: jax.Array, *,
+                     cfg: GRUConfig, return_all: bool = False,
+                     mask: Optional[jax.Array] = None):
+    """The XLA-scan backend implementation (no dispatch): run the
+    recurrence over ``xs`` (..., T, X), time axis = -2.
 
-    Respects ``cfg.decoupled_wx`` (hoisted input GEMM), ``cfg.backend``
-    ("xla" | "pallas"), and ``cfg.unroll`` (short-sequence latency mode).
-
-    ``mask`` (B, T) bool, optional: timesteps where it is False leave the
-    hidden state untouched — left-padded (bucketed) batches produce
-    bitwise the same final state as their unpadded prompts, since GRU
-    biases make zero *inputs* non-neutral. A masked call runs the XLA scan
-    (the fused kernels don't stream a mask yet; see ROADMAP).
+    Respects ``cfg.decoupled_wx`` (hoisted input GEMM) and ``cfg.unroll``
+    (short-sequence latency mode). ``mask`` (B, T) bool, optional:
+    timesteps where it is False leave the hidden state untouched —
+    left-padded (bucketed) batches produce bitwise the same final state as
+    their unpadded prompts, since GRU biases make zero *inputs*
+    non-neutral.
     """
-    if cfg.backend == "pallas" and mask is None:
-        from repro.kernels.gru_sequence import ops as seq_ops
-        return seq_ops.gru_sequence_pallas(params, h0, xs, cfg=cfg, return_all=return_all)
-
     m_t = None if mask is None else jnp.moveaxis(mask, -1, 0)  # (T, B)
     step = functools.partial(gru_step, params, cfg=cfg)
 
@@ -263,6 +290,19 @@ def gru_sequence(params: dict, h0: jax.Array, xs: jax.Array, *, cfg: GRUConfig,
     return hT, None
 
 
+def gru_sequence(params: dict, h0: jax.Array, xs: jax.Array, *, cfg: GRUConfig,
+                 return_all: bool = False, mask: Optional[jax.Array] = None):
+    """DEPRECATED single-cell entry point — thin shim over the executor
+    (``repro.core.runtime``), which capability-dispatches ``cfg.backend``
+    to the XLA scan or the Pallas kernels (masked calls included)."""
+    _warn_deprecated("gru_sequence")
+    from repro.core import runtime
+    lcfg = cfg if cfg.resolved_num_layers == 1 else layer_config(cfg, 0)
+    finals, states = runtime.sequence((params,), (h0,), xs, cfg=lcfg,
+                                      return_all=return_all, mask=mask)
+    return finals[0], states
+
+
 # ---------------------------------------------------------------------------
 # deep stacks
 # ---------------------------------------------------------------------------
@@ -272,77 +312,63 @@ def stack_h0(cfg: GRUConfig, batch: int, dtype=jnp.float32) -> tuple:
     return tuple(jnp.zeros((batch, h), dtype) for h in cfg.resolved_layer_dims)
 
 
-def _uniform_stack_dims(cfg: GRUConfig) -> bool:
-    dims = cfg.resolved_layer_dims
-    return all(d == dims[0] for d in dims)
-
-
-def gru_stack_sequence(params: Sequence[dict], h0s: Sequence[jax.Array],
-                       xs: jax.Array, *, cfg: GRUConfig,
-                       return_all: bool = False,
-                       mask: Optional[jax.Array] = None):
-    """Run a depth-L stack over ``xs`` (..., T, X), time axis = -2.
+def gru_stack_sequence_xla(params: Sequence[dict], h0s: Sequence[jax.Array],
+                           xs: jax.Array, *, cfg: GRUConfig,
+                           return_all: bool = False,
+                           mask: Optional[jax.Array] = None):
+    """The XLA-scan stack backend (no dispatch): run a depth-L stack over
+    ``xs`` (..., T, X), time axis = -2, layer-by-layer.
 
     ``params``/``h0s`` are per-layer sequences (layer 0 first). Returns
     ``(finals, all_states)`` where ``finals`` is the tuple of per-layer
     final hidden states and ``all_states`` is the LAST layer's full
-    hidden sequence (or None). Execution is layer-by-layer: every layer
-    hoists its input GEMM over the lower layer's full sequence (layer 0:
-    the paper's decoupled ``W.x``), so the recurrent path of each layer is
-    matvec-only. Depth 1 is exactly ``gru_sequence``.
-
-    ``backend="pallas"`` with uniform hidden sizes fuses the whole stack
-    into one pallas_call; otherwise each layer runs its own kernel.
+    hidden sequence (or None). Every layer hoists its input GEMM over the
+    lower layer's full sequence (layer 0: the paper's decoupled ``W.x``),
+    so the recurrent path of each layer is matvec-only. Depth 1 is exactly
+    ``gru_sequence_xla``.
 
     ``mask`` (B, T) bool, optional: False steps freeze EVERY layer's state
     (one shared mask is exact — during frozen steps upper layers ignore
     their input, so the real steps see exactly the unpadded computation).
-    Masked runs take the XLA path.
     """
     params = stack_cell_params(params, cfg)
     L = len(params)
-    if cfg.backend == "pallas" and L > 1 and _uniform_stack_dims(cfg) \
-            and mask is None:
-        from repro.kernels.gru_sequence import ops as seq_ops
-        return seq_ops.gru_stack_sequence_pallas(params, tuple(h0s), xs,
-                                                 cfg=cfg,
-                                                 return_all=return_all)
     finals = []
     cur = xs
+    hs = None
     for l in range(L):
         lcfg = layer_config(cfg, l)
         last = l == L - 1
-        hT, hs = gru_sequence(params[l], h0s[l], cur, cfg=lcfg,
-                              return_all=(not last) or return_all,
-                              mask=mask)
+        hT, hs = gru_sequence_xla(params[l], h0s[l], cur, cfg=lcfg,
+                                  return_all=(not last) or return_all,
+                                  mask=mask)
         finals.append(hT)
         if not last:
             cur = hs
     return tuple(finals), (hs if return_all else None)
 
 
-def gru_stack_decode_step(params: Sequence[dict], hs: Sequence[jax.Array],
-                          x: jax.Array, *, cfg: GRUConfig,
-                          impl: Optional[str] = None) -> tuple:
-    """One serve step through the whole stack: layer ``l`` consumes layer
-    ``l-1``'s NEW hidden state (same-timestep threading as the sequence
-    path). Returns the tuple of per-layer new hidden states.
+def gru_stack_sequence(params: Sequence[dict], h0s: Sequence[jax.Array],
+                       xs: jax.Array, *, cfg: GRUConfig,
+                       return_all: bool = False,
+                       mask: Optional[jax.Array] = None):
+    """DEPRECATED stack entry point — thin shim over the executor, which
+    dispatches to the XLA scan, the fused Pallas stack kernel (uniform
+    dims; masked calls stream the mask in-kernel, no XLA fallback), or the
+    per-layer Pallas chain (heterogeneous dims)."""
+    _warn_deprecated("gru_stack_sequence")
+    from repro.core import runtime
+    return runtime.sequence(params, tuple(h0s), xs, cfg=cfg,
+                            return_all=return_all, mask=mask)
 
-    ``impl``: "pallas" = fused decode-step kernel (ONE pallas_call for the
-    whole depth, weights pinned in VMEM — the latency fast path); "xla" =
-    layer-by-layer structural modes; None = follow ``cfg.backend``.
-    Heterogeneous layer sizes always take the XLA path. A dict ``params``
-    may carry precomputed ``"stacked_cells"`` (see
-    ``repro.kernels.gru_sequence.ops.prepare_stacked_cells``) so the fused
-    path does no per-step weight restacking.
-    """
-    stacked = params.get("stacked_cells") if isinstance(params, dict) else None
+
+def gru_stack_decode_xla(params: Sequence[dict], hs: Sequence[jax.Array],
+                         x: jax.Array, *, cfg: GRUConfig) -> tuple:
+    """The XLA decode backend (no dispatch): one serve step through the
+    whole stack via layer-by-layer structural-mode matvecs. Layer ``l``
+    consumes layer ``l-1``'s NEW hidden state (same-timestep threading as
+    the sequence path). Returns the tuple of per-layer new hidden states."""
     params = stack_cell_params(params, cfg)
-    impl = impl or ("pallas" if cfg.backend == "pallas" else "xla")
-    if impl == "pallas" and _uniform_stack_dims(cfg):
-        from repro.kernels.gru_sequence import ops as seq_ops
-        return seq_ops.gru_stack_decode_pallas(params, tuple(hs), x, cfg=cfg,
-                                               stacked=stacked)
     new_hs = []
     cur = x
     for l in range(len(params)):
@@ -350,6 +376,26 @@ def gru_stack_decode_step(params: Sequence[dict], hs: Sequence[jax.Array],
         new_hs.append(h2)
         cur = h2
     return tuple(new_hs)
+
+
+def gru_stack_decode_step(params: Sequence[dict], hs: Sequence[jax.Array],
+                          x: jax.Array, *, cfg: GRUConfig,
+                          impl: Optional[str] = None) -> tuple:
+    """DEPRECATED decode entry point — thin shim over the executor.
+
+    ``impl``: "pallas" / "xla" override ``cfg.backend`` as the dispatch
+    preference (kept for compatibility); None follows ``cfg.backend``.
+    Under the executor a "pallas" preference with heterogeneous layer
+    sizes now runs the per-layer Pallas chain instead of silently taking
+    the XLA path. A dict ``params`` may carry precomputed
+    ``"stacked_cells"`` (see ``runtime.prepare``) so the fused path does
+    no per-step weight restacking.
+    """
+    _warn_deprecated("gru_stack_decode_step")
+    from repro.core import runtime
+    if impl is not None and impl != cfg.backend:
+        cfg = dataclasses.replace(cfg, backend=impl)
+    return runtime.decode(params, tuple(hs), x, cfg=cfg)
 
 
 def gru_stack_reference(params: Sequence[dict], h0s: Sequence[jax.Array],
@@ -373,17 +419,23 @@ def gru_stack_reference(params: Sequence[dict], h0s: Sequence[jax.Array],
 
 
 def gru_classify(params: dict, xs: jax.Array, *, cfg: GRUConfig) -> jax.Array:
-    """Paper's jet-tagging forward pass: xs (B, T, X) -> logits (B, C)."""
+    """Paper's jet-tagging forward pass: xs (B, T, X) -> logits (B, C).
+    Routed through the executor (``repro.core.runtime``)."""
+    from repro.core import runtime
     B = xs.shape[0]
     cells = stack_cell_params(params, cfg)
     h0s = stack_h0(cfg, B, xs.dtype)
-    finals, _ = gru_stack_sequence(cells, h0s, xs, cfg=cfg)
+    finals, _ = runtime.sequence(cells, h0s, xs, cfg=cfg)
     return finals[-1] @ params["head"]["w"] + params["head"]["b"]
 
 
 def gru_decode_step(params: dict, h: jax.Array, x: jax.Array, *, cfg: GRUConfig) -> jax.Array:
-    """Latency-critical single-step serve path (batch can be 1)."""
-    return gru_step(params["cell"] if "cell" in params else params, h, x=x, cfg=cfg)
+    """DEPRECATED single-cell serve step — executor shim (batch can be 1)."""
+    _warn_deprecated("gru_decode_step")
+    from repro.core import runtime
+    cell = params["cell"] if "cell" in params else params
+    lcfg = cfg if cfg.resolved_num_layers == 1 else layer_config(cfg, 0)
+    return runtime.decode((cell,), (h,), x, cfg=lcfg)[0]
 
 
 # pure-jnp dense oracle used by every test --------------------------------

@@ -199,8 +199,9 @@ def gru_sequence_sharded(params: dict, h0: jax.Array, xs: jax.Array, *,
 # deep stacks: per-layer row sharding with collective reuse
 # ---------------------------------------------------------------------------
 
-def gru_stack_sequence_sharded(params, h0s, xs, *, mesh: Mesh, cfg: GRUConfig,
-                               axis: str = "model", return_all: bool = False):
+def gru_stack_sequence_sharded_impl(params, h0s, xs, *, mesh: Mesh,
+                                    cfg: GRUConfig, axis: str = "model",
+                                    return_all: bool = False, mask=None):
     """Depth-L stack with every layer's U output rows (rowwise) or
     contraction dim (cascade) sharded on the SAME mesh axis, inside ONE
     shard_map. Returns the tuple of per-layer final h, replicated; with
@@ -209,7 +210,14 @@ def gru_stack_sequence_sharded(params, h0s, xs, *, mesh: Mesh, cfg: GRUConfig,
     rowwise last layer's states are already replicated by the step's
     trailing all-gather (zero extra collectives), a cascade last layer
     republishes its sequence with ONE amortized gather, exactly like the
-    inner layers.
+    inner layers. This is the executor's ``sharded`` backend
+    (``repro.core.runtime``).
+
+    ``mask`` (B, T) bool, optional: replicated across the mesh and scanned
+    next to the input projections; False steps freeze every layer's
+    (local) hidden state AFTER the step's collectives, so the gating adds
+    zero communication and bucketed left-padded prompts stay
+    bitwise-identical to their unpadded originals on every shard.
 
     The latency play (rowwise layers): the trailing all-gather that closes
     each step already replicates the full ``h'``, which is precisely the
@@ -245,9 +253,12 @@ def gru_stack_sequence_sharded(params, h0s, xs, *, mesh: Mesh, cfg: GRUConfig,
             layer_args.append({"w": c["w"], "u": c["u"], "b": c["b"]})
             layer_specs.append({"w": P(), "u": P(axis, None), "b": P()})
 
-    def f(xs_full, h0s_full, largs):
+    def f(xs_full, h0s_full, largs, *margs):
         idx = jax.lax.axis_index(axis)
         cur = xs_full.astype(jnp.float32)          # (B,T,·) replicated
+        # (T, B) replicated mask, scanned alongside the projections; None
+        # keeps the unmasked trace byte-identical to the historical one.
+        m_t = None if not margs else jnp.moveaxis(margs[0], 1, 0)
         finals = []
         all_states = None
         for l in range(L):
@@ -263,11 +274,20 @@ def gru_stack_sequence_sharded(params, h0s, xs, *, mesh: Mesh, cfg: GRUConfig,
                 step = functools.partial(_rowwise_step, axis=axis, n=n,
                                          variant=cfg.variant)
 
-                def body(h, xp_t, step=step, u=u_flat, b=b_flat, emit=emit):
-                    h2 = step(h, xp_t, u, b, idx)
+                def body(h, op, step=step, u=u_flat, b=b_flat, emit=emit):
+                    if m_t is None:
+                        h2 = step(h, op, u, b, idx)
+                    else:
+                        xp_t, mt = op
+                        # gate AFTER the trailing gather: replicated select,
+                        # no extra collectives; live rows keep exact bits.
+                        h2 = jnp.where(mt[:, None], step(h, xp_t, u, b, idx),
+                                       h)
                     return h2, (h2 if emit else None)  # carry == full h
+                ops_ = (jnp.moveaxis(xp, 1, 0) if m_t is None
+                        else (jnp.moveaxis(xp, 1, 0), m_t))
                 hT, hs = jax.lax.scan(body, h0s_full[l].astype(jnp.float32),
-                                      jnp.moveaxis(xp, 1, 0))
+                                      ops_)
                 if emit:
                     seq = jnp.moveaxis(hs, 0, 1)   # already replicated: reuse
                     if not last:
@@ -282,11 +302,19 @@ def gru_stack_sequence_sharded(params, h0s, xs, *, mesh: Mesh, cfg: GRUConfig,
                 step = functools.partial(_cascade_step, axis=axis,
                                          variant=cfg.variant)
 
-                def body(h_l, xp_t, step=step, u=a["u"], b=a["b"], emit=emit):
-                    h2 = step(h_l, xp_t, u, b)
+                def body(h_l, op, step=step, u=a["u"], b=a["b"], emit=emit):
+                    if m_t is None:
+                        h2 = step(h_l, op, u, b)
+                    else:
+                        xp_t, mt = op
+                        # the carry is the (B, H/n) LOCAL shard; the (B,)
+                        # mask broadcasts over it on every device alike.
+                        h2 = jnp.where(mt[:, None], step(h_l, xp_t, u, b),
+                                       h_l)
                     return h2, (h2 if emit else None)
-                hT_l, hs_l = jax.lax.scan(body, h_shard,
-                                          jnp.moveaxis(xp, 1, 0))
+                ops_ = (jnp.moveaxis(xp, 1, 0) if m_t is None
+                        else (jnp.moveaxis(xp, 1, 0), m_t))
+                hT_l, hs_l = jax.lax.scan(body, h_shard, ops_)
                 if emit:
                     # ONE gather republishes the whole output sequence
                     hs = jax.lax.all_gather(hs_l, axis, axis=2, tiled=True)
@@ -306,8 +334,24 @@ def gru_stack_sequence_sharded(params, h0s, xs, *, mesh: Mesh, cfg: GRUConfig,
     out_specs = tuple(P() for _ in range(L))
     if return_all:
         out_specs = (out_specs, P())
+    margs = () if mask is None else (mask,)
+    mspecs = () if mask is None else (P(),)
     return shard_map(
         f, mesh=mesh,
-        in_specs=(P(), tuple(P() for _ in range(L)), tuple(layer_specs)),
+        in_specs=(P(), tuple(P() for _ in range(L)), tuple(layer_specs))
+        + mspecs,
         out_specs=out_specs, check_vma=False,
-    )(xs, tuple(h0s), tuple(layer_args))
+    )(xs, tuple(h0s), tuple(layer_args), *margs)
+
+
+def gru_stack_sequence_sharded(params, h0s, xs, *, mesh: Mesh, cfg: GRUConfig,
+                               axis: str = "model", return_all: bool = False,
+                               mask=None):
+    """DEPRECATED entry point — use ``repro.core.runtime.plan(cfg,
+    mesh=...)``, which dispatches sequence work to this shard_map program
+    whenever a mesh is supplied. Kept as a thin, bitwise-equal shim."""
+    from repro.core.gru import _warn_deprecated
+    _warn_deprecated("gru_stack_sequence_sharded")
+    return gru_stack_sequence_sharded_impl(params, h0s, xs, mesh=mesh,
+                                           cfg=cfg, axis=axis,
+                                           return_all=return_all, mask=mask)

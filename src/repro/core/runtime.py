@@ -1,0 +1,411 @@
+"""One GRU executor: capability-dispatched backends behind ``plan()``/run.
+
+The paper's core idea is a single workload-distribution framework that maps
+GRU matvecs onto whichever compute fabric is available (AIE rows vs. the PL
+cascade). This module is that framework's TPU translation: every execution
+strategy the repo has grown — the XLA structural-mode scan, the fused
+Pallas stack kernels, the per-layer Pallas chain, the shard_map row/cascade
+programs — registers here as a *backend* with declared capabilities, and
+``plan()`` picks the cheapest legal one per call instead of each caller
+hard-wiring an entry point.
+
+Capability table (see ``BackendSpec``; costs are dispatch-preference hints,
+lower = faster):
+
+=============  ====  ======  ====  ==========  ======  ========  ====
+backend        mask  hetero  mesh  return_all  decode  sequence  cost
+=============  ====  ======  ====  ==========  ======  ========  ====
+pallas_fused   yes   no      no    yes         yes     yes       10
+pallas_chain   yes   yes     no    yes         yes     yes       20
+xla            yes   yes     no    yes         yes     yes       30
+sharded        yes   yes     REQ   yes         no      yes       5
+=============  ====  ======  ====  ==========  ======  ========  ====
+
+* ``mask``: a (B, T) length mask streams through the backend (bucketed
+  left-padded prefill stays bitwise-identical to unpadded prompts — every
+  backend here claims ``mask_exact``). The fused Pallas kernels stream the
+  mask in-kernel (one (1, B) slice per grid step); no XLA fallback remains.
+* ``hetero``: heterogeneous ``cfg.layer_dims`` (the fused kernel needs one
+  uniform VMEM block shape; the chain runs one kernel per layer instead of
+  raising or silently degrading).
+* ``mesh`` = REQ: the backend *requires* a mesh and is strongly preferred
+  for sequence work whenever one is passed (providing a mesh is an explicit
+  request to use it). Decode under a mesh falls back to a replicated
+  single-host backend: one recurrent step is latency-bound and per-step
+  collectives would dominate.
+
+Dispatch: ``cfg.backend`` is a preference — ``"xla"`` (default) and
+``"pallas"`` pin their family when legal; ``"auto"`` picks purely by cost.
+An illegal preference (e.g. pallas + hetero dims) falls through to the
+cheapest legal backend in the same family, then overall — never an error
+as long as ANY backend can serve the call.
+
+Surfaces:
+
+* ``prepare(params, cfg, mesh=None) -> StackParams`` — ONE-time param
+  normalization subsuming ``stack_cell_params`` / ``prepare_stacked_cells``
+  / the model API's ``prepare_params``: accepts every historical layout and
+  precomputes the stacked-weight views the fused kernels consume.
+* ``plan(cfg, *, batch, seq, mesh, mask, mode) -> ExecPlan`` — memoized;
+  the returned ``prefill`` / ``decode`` / ``sequence`` callables are stable
+  objects (jit-friendly: re-planning the same key returns the SAME plan)
+  and reference-exact w.r.t. ``gru_stack_reference``.
+* ``sequence(...)`` / ``decode(...)`` — plan-and-run conveniences; the
+  deprecated entry points in ``repro.core.gru`` are thin shims over these.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+
+from repro.configs.base import GRUConfig
+from repro.core import gru as gru_core
+
+
+# ---------------------------------------------------------------------------
+# backend registry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Capabilities:
+    """What a backend can legally execute (checked by ``plan()``)."""
+    supports_mask: bool = False      # (B,T) length mask streams through
+    supports_hetero_dims: bool = False   # per-layer hidden sizes may differ
+    supports_mesh: bool = False      # True = REQUIRES a mesh (shard_map)
+    return_all: bool = False         # can emit the last layer's full sequence
+    decode: bool = False             # single-step serve path
+    sequence: bool = True            # whole-sequence / prefill path
+    mask_exact: bool = True          # masked+padded == unpadded, bitwise
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendSpec:
+    """One registered execution strategy.
+
+    ``sequence_fn(sp, h0s, xs, *, cfg, return_all, mask, mesh)`` returns
+    ``(per-layer finals tuple, last-layer states | None)``;
+    ``decode_fn(sp, hs, x, *, cfg)`` returns the per-layer new states.
+    ``cost`` is a relative per-call dispatch hint (lower = preferred).
+    """
+    name: str
+    caps: Capabilities
+    cost: int
+    sequence_fn: Optional[Callable] = None
+    decode_fn: Optional[Callable] = None
+
+
+_REGISTRY: Dict[str, BackendSpec] = {}
+
+
+def register_backend(spec: BackendSpec) -> None:
+    _REGISTRY[spec.name] = spec
+
+
+def backends() -> Dict[str, BackendSpec]:
+    """Snapshot of the registry (name -> spec), for introspection/tests."""
+    _ensure_backends()
+    return dict(_REGISTRY)
+
+
+def _ensure_backends() -> None:
+    """Make sure the kernels package had a chance to register its backends
+    (it does so on import; plan() imports it on first use otherwise, so
+    dispatch never depends on import order)."""
+    if "pallas_fused" not in _REGISTRY:
+        from repro.kernels.gru_sequence import ops as seq_ops
+        seq_ops.register_runtime_backends()
+
+
+# ---------------------------------------------------------------------------
+# canonical params: StackParams + prepare()
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class StackParams:
+    """Canonical GRU stack parameters: the ONE layout every backend takes.
+
+    ``cells``: per-layer ``{"w","u","b"}`` dicts, layer 0 first.
+    ``stacked``: the fused kernels' precomputed device-side weight stacks
+    (``{"u","w_deep","b"}``) — present for uniform hidden sizes, ``None``
+    for heterogeneous stacks (the fused backend doesn't apply there).
+    """
+    cells: tuple
+    stacked: Optional[dict] = None
+
+    def tree_flatten(self):
+        return (self.cells, self.stacked), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def dims(self) -> Tuple[int, ...]:
+        return tuple(c["u"].shape[0] for c in self.cells)
+
+
+def prepare(params, cfg: GRUConfig, mesh=None, *,
+            want_stacked: bool = True) -> StackParams:
+    """One-time normalization of ANY accepted param layout to StackParams.
+
+    Subsumes ``stack_cell_params`` (layout normalization),
+    ``prepare_stacked_cells`` (fused-kernel weight stacking) and the model
+    API's ``prepare_params`` (serving prep). Accepts ``StackParams``
+    (passthrough), ``{"cells": ...}``, ``{"cell": ...}``, a bare
+    ``{w,u,b}`` cell, a per-layer sequence, and dicts already carrying a
+    precomputed ``"stacked_cells"`` entry (reused, not recomputed). Do this
+    ONCE outside the per-step jit so decode traces never restack weights.
+
+    ``want_stacked=False`` skips computing the fused-kernel weight stacks
+    (plan callables pass it when the resolved backend never reads them, so
+    an XLA-dispatched call doesn't pay L stacking ops per trace).
+    ``mesh`` is accepted for signature stability (pre-sharding hook); the
+    sharded backend currently shards inside its shard_map.
+    """
+    if isinstance(params, StackParams):
+        return params
+    stacked = params.get("stacked_cells") if isinstance(params, dict) else None
+    cells = gru_core.stack_cell_params(params, cfg)
+    dims = tuple(c["u"].shape[0] for c in cells)
+    if (want_stacked and stacked is None
+            and all(d == dims[0] for d in dims)):
+        from repro.kernels.gru_sequence import ops as seq_ops
+        stacked = seq_ops.prepare_stacked_cells(cells)
+    return StackParams(cells=cells, stacked=stacked)
+
+
+# ---------------------------------------------------------------------------
+# built-in backends: xla scan + sharded shard_map programs
+# ---------------------------------------------------------------------------
+
+def _xla_sequence(sp, h0s, xs, *, cfg, return_all, mask, mesh):
+    return gru_core.gru_stack_sequence_xla(sp.cells, h0s, xs, cfg=cfg,
+                                           return_all=return_all, mask=mask)
+
+
+def _xla_decode(sp, hs, x, *, cfg):
+    return gru_core.gru_stack_decode_xla(sp.cells, hs, x, cfg=cfg)
+
+
+def _sharded_sequence(sp, h0s, xs, *, cfg, return_all, mask, mesh):
+    from repro.core import rowparallel
+    out = rowparallel.gru_stack_sequence_sharded_impl(
+        sp.cells, h0s, xs, mesh=mesh, cfg=cfg, return_all=return_all,
+        mask=mask)
+    if return_all:
+        return out
+    return out, None
+
+
+register_backend(BackendSpec(
+    name="xla",
+    caps=Capabilities(supports_mask=True, supports_hetero_dims=True,
+                      supports_mesh=False, return_all=True, decode=True,
+                      sequence=True),
+    cost=30,
+    sequence_fn=_xla_sequence, decode_fn=_xla_decode))
+
+register_backend(BackendSpec(
+    name="sharded",
+    caps=Capabilities(supports_mask=True, supports_hetero_dims=True,
+                      supports_mesh=True, return_all=True, decode=False,
+                      sequence=True),
+    cost=5,
+    sequence_fn=_sharded_sequence, decode_fn=None))
+
+
+# ---------------------------------------------------------------------------
+# plan(): capability filtering + cost choice
+# ---------------------------------------------------------------------------
+
+class NoCapableBackend(ValueError):
+    """No registered backend can legally serve the requested call."""
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ExecPlan:
+    """A resolved execution plan: metadata + jit-stable callables.
+
+    ``sequence(params, h0s, xs, *, return_all=False, mask=None)`` returns
+    ``(per-layer finals, last-layer states | None)``; ``prefill`` is the
+    finals-only view of the same backend; ``decode(params, hs, x)`` returns
+    the per-layer new states. ``params`` may be any layout ``prepare``
+    accepts (pass a prepared ``StackParams`` on hot paths).
+    """
+    cfg: GRUConfig
+    batch: Optional[int]
+    seq: Optional[int]
+    masked: bool
+    mesh: object
+    mode: str
+    sequence_backend: Optional[str]
+    decode_backend: Optional[str]
+    mask_exact: bool
+    sequence: Callable = dataclasses.field(repr=False, default=None)
+    prefill: Callable = dataclasses.field(repr=False, default=None)
+    decode: Callable = dataclasses.field(repr=False, default=None)
+
+    def describe(self) -> dict:
+        return {"sequence_backend": self.sequence_backend,
+                "decode_backend": self.decode_backend,
+                "masked": self.masked, "mask_exact": self.mask_exact,
+                "mesh": self.mesh is not None, "mode": self.mode,
+                "batch": self.batch, "seq": self.seq}
+
+
+def _hetero(cfg: GRUConfig) -> bool:
+    dims = cfg.resolved_layer_dims
+    return any(d != dims[0] for d in dims)
+
+
+def _legal(spec: BackendSpec, *, op: str, masked: bool, hetero: bool,
+           mesh, need_return_all: bool = False) -> bool:
+    c = spec.caps
+    if op == "decode":
+        if not c.decode or spec.decode_fn is None:
+            return False
+    else:
+        if not c.sequence or spec.sequence_fn is None:
+            return False
+        if masked and not c.supports_mask:
+            return False
+        if need_return_all and not c.return_all:
+            return False
+    if hetero and not c.supports_hetero_dims:
+        return False
+    if c.supports_mesh and mesh is None:
+        return False                      # shard_map backends need a mesh
+    return True
+
+
+def _cost(spec: BackendSpec, cfg: GRUConfig, *, op: str, mesh) -> int:
+    cost = spec.cost
+    if spec.name.startswith("pallas") and jax.default_backend() not in (
+            "cpu", "tpu"):
+        # the Pallas kernels target TPU (pltpu VMEM scratch) and run
+        # interpret-mode on CPU; on any other platform they cannot lower,
+        # so "auto" must never pick them over the XLA scan.
+        cost += 1_000_000
+    if mesh is not None:
+        # a mesh was explicitly provided: backends that actually use it win
+        # sequence work outright; the rest run replicated (penalized evenly,
+        # so relative single-host preference is preserved for decode).
+        cost += -10_000 if spec.caps.supports_mesh else 100
+    pref = getattr(cfg, "backend", "xla")
+    if pref == "xla" and spec.name == "xla":
+        cost -= 1_000
+    elif pref == "pallas" and spec.name.startswith("pallas"):
+        cost -= 1_000
+    return cost
+
+
+def _select(op: str, cfg: GRUConfig, *, masked: bool, mesh,
+            need_return_all: bool = False) -> Optional[BackendSpec]:
+    hetero = _hetero(cfg)
+    legal = [s for s in _REGISTRY.values()
+             if _legal(s, op=op, masked=masked, hetero=hetero, mesh=mesh,
+                       need_return_all=need_return_all)]
+    if not legal:
+        return None
+    return min(legal, key=lambda s: (_cost(s, cfg, op=op, mesh=mesh), s.name))
+
+
+_PLAN_CACHE: Dict[tuple, ExecPlan] = {}
+
+
+def plan(cfg: GRUConfig, *, batch: Optional[int] = None,
+         seq: Optional[int] = None, mesh=None, mask: bool = False,
+         mode: str = "serve") -> ExecPlan:
+    """Resolve the fastest legal backend(s) for a GRU workload.
+
+    ``mask`` declares whether calls will carry a (B, T) length mask (the
+    array itself is a run-time argument). ``mode``: ``"prefill"`` /
+    ``"sequence"`` require a sequence backend, ``"decode"`` a decode
+    backend, ``"serve"`` both. Plans are memoized — the same key returns
+    the SAME ExecPlan object, so its callables are stable across calls and
+    jit caches keyed on them never retrace.
+    """
+    _ensure_backends()
+    key = (cfg, batch, seq, mesh, bool(mask), mode)
+    hit = _PLAN_CACHE.get(key)
+    if hit is not None:
+        return hit
+
+    seq_spec = _select("sequence", cfg, masked=bool(mask), mesh=mesh)
+    # a finals-only backend may win the primary selection; return_all=True
+    # calls then fall through to the cheapest fully-capable backend instead
+    # of failing inside the backend (the silent-capability-gap failure mode
+    # this module exists to eliminate). Both specs are fixed at plan time,
+    # so the callables stay jit-stable.
+    seq_spec_ra = (seq_spec if seq_spec is not None
+                   and seq_spec.caps.return_all
+                   else _select("sequence", cfg, masked=bool(mask),
+                                mesh=mesh, need_return_all=True))
+    dec_spec = _select("decode", cfg, masked=False, mesh=mesh)
+    if mode in ("prefill", "sequence", "serve") and seq_spec is None:
+        raise NoCapableBackend(
+            f"no sequence backend for cfg.backend={cfg.backend!r} "
+            f"mask={mask} dims={cfg.resolved_layer_dims} mesh={mesh}")
+    if mode in ("decode", "serve") and dec_spec is None:
+        raise NoCapableBackend(
+            f"no decode backend for cfg.backend={cfg.backend!r} "
+            f"dims={cfg.resolved_layer_dims}")
+
+    def run_sequence(params, h0s, xs, *, return_all=False, mask=None):
+        if mask is not None and not key[4]:
+            raise ValueError("plan was built with mask=False; re-plan with "
+                             "mask=True to pass a length mask")
+        spec = seq_spec if not return_all else seq_spec_ra
+        if spec is None:
+            raise NoCapableBackend(
+                f"no return_all-capable sequence backend for "
+                f"cfg.backend={cfg.backend!r} mask={mask is not None} "
+                f"dims={cfg.resolved_layer_dims} mesh={mesh}")
+        sp = prepare(params, cfg,
+                     want_stacked=spec.name == "pallas_fused")
+        return spec.sequence_fn(sp, tuple(h0s), xs, cfg=cfg,
+                                return_all=return_all, mask=mask,
+                                mesh=mesh)
+
+    def run_prefill(params, h0s, xs, *, mask=None):
+        return run_sequence(params, h0s, xs, mask=mask)[0]
+
+    def run_decode(params, hs, x):
+        sp = prepare(params, cfg,
+                     want_stacked=dec_spec.name == "pallas_fused")
+        return dec_spec.decode_fn(sp, tuple(hs), x, cfg=cfg)
+
+    p = ExecPlan(
+        cfg=cfg, batch=batch, seq=seq, masked=bool(mask), mesh=mesh,
+        mode=mode,
+        sequence_backend=seq_spec.name if seq_spec else None,
+        decode_backend=dec_spec.name if dec_spec else None,
+        mask_exact=seq_spec.caps.mask_exact if seq_spec else True,
+        sequence=run_sequence, prefill=run_prefill,
+        decode=run_decode if dec_spec else None)
+    _PLAN_CACHE[key] = p
+    return p
+
+
+# ---------------------------------------------------------------------------
+# plan-and-run conveniences (the legacy entry points shim onto these)
+# ---------------------------------------------------------------------------
+
+def sequence(params, h0s, xs, *, cfg: GRUConfig, return_all: bool = False,
+             mask=None, mesh=None):
+    """Run a depth-L stack over xs (B,T,X) with the planned backend.
+    Returns (per-layer finals, last-layer states | None)."""
+    p = plan(cfg, batch=xs.shape[0] if xs.ndim >= 3 else None,
+             seq=xs.shape[-2], mesh=mesh, mask=mask is not None,
+             mode="sequence")
+    return p.sequence(params, h0s, xs, return_all=return_all, mask=mask)
+
+
+def decode(params, hs, x, *, cfg: GRUConfig, mesh=None):
+    """One serve step through the stack with the planned backend.
+    Returns the per-layer new hidden states."""
+    p = plan(cfg, batch=x.shape[0], mesh=mesh, mode="decode")
+    return p.decode(params, hs, x)

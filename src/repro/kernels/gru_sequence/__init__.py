@@ -1,5 +1,11 @@
 from repro.kernels.gru_sequence import ops, ref
 from repro.kernels.gru_sequence.kernel import (gru_sequence_kernel,
+                                               gru_stack_decode_kernel,
                                                gru_stack_sequence_kernel)
 
-__all__ = ["ops", "ref", "gru_sequence_kernel", "gru_stack_sequence_kernel"]
+# Plug the Pallas backends into the GRU executor's capability registry
+# (repro.core.runtime); runtime.plan() also triggers this lazily.
+ops.register_runtime_backends()
+
+__all__ = ["ops", "ref", "gru_sequence_kernel", "gru_stack_sequence_kernel",
+           "gru_stack_decode_kernel"]

@@ -27,6 +27,12 @@ index_maps while successive batch tiles stream through, so wave size
 scales past a single VMEM block without re-fetching a byte of U/W. This
 is the paper's figure of merit (single-step latency) with the AIE
 weight-residency story intact on TPU.
+
+Both sequence kernels take an optional (T, B) length MASK, streamed
+through the grid one (1, B) slice per step next to the input projection:
+False steps freeze the hidden state (every layer's, for the stack) with an
+in-kernel select, so bucketed left-padded prefill runs the fused kernels
+— unmasked rows execute bit-identical arithmetic to unpadded prompts.
 """
 from __future__ import annotations
 
@@ -75,28 +81,63 @@ def _seq_kernel(h0_ref, xp_ref, u_ref, b_ref, o_ref, h_s, *, variant: str):
     o_ref[...] = h_new[None].astype(o_ref.dtype)
 
 
+def _seq_kernel_masked(h0_ref, xp_ref, u_ref, b_ref, m_ref, o_ref, h_s, *,
+                       variant: str):
+    """Masked variant: the (1, B) mask slice streams in next to the step's
+    input projection; False rows keep their previous hidden state. Unmasked
+    rows run EXACTLY the unmasked arithmetic (``where`` selects, it does not
+    perturb), so left-padded bucketed prompts stay bitwise-identical to
+    their unpadded originals."""
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        h_s[...] = h0_ref[...].astype(jnp.float32)
+
+    xp = xp_ref[...][0].astype(jnp.float32)               # (B, 3H) this step
+    keep = m_ref[...][0] != 0.0                           # (B,) this step
+    h_new = _gate_math(h_s[...], xp, u_ref[...],
+                       b_ref[...].astype(jnp.float32), variant)
+    h_new = jnp.where(keep[:, None], h_new, h_s[...])     # freeze masked rows
+    h_s[...] = h_new
+    o_ref[...] = h_new[None].astype(o_ref.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("variant", "interpret"))
 def gru_sequence_kernel(h0: jax.Array, x_proj: jax.Array, u: jax.Array,
-                        b: jax.Array, *, variant: str = "v1",
+                        b: jax.Array, mask=None, *, variant: str = "v1",
                         interpret: bool = False) -> jax.Array:
     """h0: (B,H), x_proj: (T,B,3H) time-major precomputed Wx, u: (H,3H),
-    b: (3H,) -> all hidden states (T,B,H)."""
+    b: (3H,) -> all hidden states (T,B,H).
+
+    ``mask`` (T,B) float (nonzero = live step), optional: streamed through
+    the grid one (1,B) slice per step; False steps freeze the hidden state
+    in-kernel, so bucketed (left-padded) prefill runs the SAME fused kernel
+    as unpadded prompts instead of falling back to the XLA scan."""
     T, B, H3 = x_proj.shape
     H = H3 // 3
+    in_specs = [
+        pl.BlockSpec((B, H), lambda t: (0, 0)),        # h0: resident
+        pl.BlockSpec((1, B, 3 * H), lambda t: (t, 0, 0)),  # stream step t
+        pl.BlockSpec((H, 3 * H), lambda t: (0, 0)),    # U: fetched ONCE
+        pl.BlockSpec((1, 3 * H), lambda t: (0, 0)),
+    ]
+    args = [h0, x_proj, u, b[None, :]]
+    if mask is None:
+        kern = functools.partial(_seq_kernel, variant=variant)
+    else:
+        kern = functools.partial(_seq_kernel_masked, variant=variant)
+        in_specs.append(pl.BlockSpec((1, B), lambda t: (t, 0)))  # step's mask
+        args.append(mask.astype(jnp.float32))
     return pl.pallas_call(
-        functools.partial(_seq_kernel, variant=variant),
+        kern,
         grid=(T,),
-        in_specs=[
-            pl.BlockSpec((B, H), lambda t: (0, 0)),        # h0: resident
-            pl.BlockSpec((1, B, 3 * H), lambda t: (t, 0, 0)),  # stream step t
-            pl.BlockSpec((H, 3 * H), lambda t: (0, 0)),    # U: fetched ONCE
-            pl.BlockSpec((1, 3 * H), lambda t: (0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, B, H), lambda t: (t, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((T, B, H), h0.dtype),
         scratch_shapes=[pltpu.VMEM((B, H), jnp.float32)],  # carried hidden state
         interpret=interpret,
-    )(h0, x_proj, u, b[None, :])
+    )(*args)
 
 
 # ---------------------------------------------------------------------------
@@ -123,9 +164,34 @@ def _stack_kernel(h0_ref, xp_ref, u_ref, wd_ref, b_ref, o_ref, hT_ref, h_s, *,
     hT_ref[...] = h_s[...].astype(hT_ref.dtype)
 
 
+def _stack_kernel_masked(h0_ref, xp_ref, u_ref, wd_ref, b_ref, m_ref, o_ref,
+                         hT_ref, h_s, *, variant: str, num_layers: int):
+    """Masked fused stack: ONE shared (1, B) mask slice per step freezes
+    EVERY layer's state on False rows (exact — during frozen steps upper
+    layers ignore their input). The next layer consumes the GATED output,
+    matching the layer-by-layer masked semantics of the XLA path."""
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        h_s[...] = h0_ref[...].astype(jnp.float32)
+
+    b = b_ref[...].astype(jnp.float32)                    # (L, 3H)
+    xp = xp_ref[...][0].astype(jnp.float32)               # (B, 3H): layer 0 Wx
+    keep = m_ref[...][0] != 0.0                           # (B,) this step
+    for l in range(num_layers):                           # static unroll
+        h_new = _gate_math(h_s[l], xp, u_ref[l], b[l:l + 1], variant)
+        h_new = jnp.where(keep[:, None], h_new, h_s[l])   # freeze masked rows
+        h_s[l] = h_new
+        if l + 1 < num_layers:
+            xp = _dot(h_new.astype(wd_ref.dtype), wd_ref[l]).astype(jnp.float32)
+    o_ref[...] = h_new[None].astype(o_ref.dtype)
+    hT_ref[...] = h_s[...].astype(hT_ref.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("variant", "interpret"))
 def gru_stack_sequence_kernel(h0: jax.Array, x_proj: jax.Array, u: jax.Array,
-                              w_deep: jax.Array, b: jax.Array, *,
+                              w_deep: jax.Array, b: jax.Array, mask=None, *,
                               variant: str = "v1", interpret: bool = False):
     """Depth-L fused stack (uniform hidden size H across layers).
 
@@ -134,21 +200,35 @@ def gru_stack_sequence_kernel(h0: jax.Array, x_proj: jax.Array, u: jax.Array,
     (L-1,H,3H) input projections of layers 1..L-1 (pass (1,1,3H) zeros for
     L=1, unused); b: (L,3H). Returns (last-layer states (T,B,H),
     per-layer final states (L,B,H)).
+
+    ``mask`` (T,B) float (nonzero = live step), optional: streamed one
+    (1,B) slice per grid step; False steps freeze every layer's hidden
+    state in-kernel (bucketed prefill runs the fused kernel, no XLA
+    fallback).
     """
     T, B, H3 = x_proj.shape
     H = H3 // 3
     L = h0.shape[0]
     Ld = max(L - 1, 1)
+    in_specs = [
+        pl.BlockSpec((L, B, H), lambda t: (0, 0, 0)),      # h0: resident
+        pl.BlockSpec((1, B, 3 * H), lambda t: (t, 0, 0)),  # stream step t
+        pl.BlockSpec((L, H, 3 * H), lambda t: (0, 0, 0)),  # all U: ONCE
+        pl.BlockSpec((Ld,) + w_deep.shape[1:], lambda t: (0, 0, 0)),
+        pl.BlockSpec((L, 3 * H), lambda t: (0, 0)),
+    ]
+    args = [h0, x_proj, u, w_deep, b]
+    if mask is None:
+        kern = functools.partial(_stack_kernel, variant=variant, num_layers=L)
+    else:
+        kern = functools.partial(_stack_kernel_masked, variant=variant,
+                                 num_layers=L)
+        in_specs.append(pl.BlockSpec((1, B), lambda t: (t, 0)))  # step's mask
+        args.append(mask.astype(jnp.float32))
     hs, hT = pl.pallas_call(
-        functools.partial(_stack_kernel, variant=variant, num_layers=L),
+        kern,
         grid=(T,),
-        in_specs=[
-            pl.BlockSpec((L, B, H), lambda t: (0, 0, 0)),      # h0: resident
-            pl.BlockSpec((1, B, 3 * H), lambda t: (t, 0, 0)),  # stream step t
-            pl.BlockSpec((L, H, 3 * H), lambda t: (0, 0, 0)),  # all U: ONCE
-            pl.BlockSpec((Ld,) + w_deep.shape[1:], lambda t: (0, 0, 0)),
-            pl.BlockSpec((L, 3 * H), lambda t: (0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, B, H), lambda t: (t, 0, 0)),
             pl.BlockSpec((L, B, H), lambda t: (0, 0, 0)),
@@ -157,7 +237,7 @@ def gru_stack_sequence_kernel(h0: jax.Array, x_proj: jax.Array, u: jax.Array,
                    jax.ShapeDtypeStruct((L, B, H), h0.dtype)],
         scratch_shapes=[pltpu.VMEM((L, B, H), jnp.float32)],  # per-layer h
         interpret=interpret,
-    )(h0, x_proj, u, w_deep, b)
+    )(*args)
     return hs, hT
 
 

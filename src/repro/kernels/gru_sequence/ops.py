@@ -1,12 +1,21 @@
-"""Public wrappers: run a GRU (or a whole GRU stack) with the Pallas backend.
+"""Pallas GRU executor backends: fused whole-stack kernels + per-layer chain.
 
-Interfaces match ``repro.core.gru.gru_sequence`` / ``gru_stack_sequence``
-(called from there when ``cfg.backend == "pallas"``). The layer-0 input
-projection (decoupled W.x) is one MXU GEMM outside the kernel; the kernel
-owns the recurrent path — for the stack variant, ALL layers of it in one
-``pallas_call``.
+These wrappers are the implementation of the ``pallas_fused`` and
+``pallas_chain`` backends of :mod:`repro.core.runtime` — registered via
+:func:`register_runtime_backends` (called on package import). Nothing
+outside ``repro.core`` / ``repro.kernels`` should import them directly
+(CI enforces the boundary); go through ``runtime.plan()``.
+
+The layer-0 input projection (decoupled W.x) is one MXU GEMM outside the
+kernel; the kernel owns the recurrent path — for the fused variant, ALL
+layers of it in one ``pallas_call``. A (B, T) length mask, when given, is
+streamed through the kernels per step (no XLA fallback for bucketed
+prefill). The chain variant runs one kernel per layer and therefore also
+serves heterogeneous ``layer_dims``.
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -15,6 +24,13 @@ from repro.kernels import on_cpu
 from repro.kernels.gru_sequence.kernel import (gru_sequence_kernel,
                                                gru_stack_decode_kernel,
                                                gru_stack_sequence_kernel)
+
+
+def _time_major_mask(mask: Optional[jax.Array]) -> Optional[jax.Array]:
+    """(B, T) bool/float -> (T, B) float32 for per-step kernel streaming."""
+    if mask is None:
+        return None
+    return jnp.moveaxis(mask, -1, 0).astype(jnp.float32)
 
 
 def _stacked_weights(params: tuple):
@@ -31,13 +47,14 @@ def _stacked_weights(params: tuple):
 
 
 def gru_sequence_pallas(params: dict, h0: jax.Array, xs: jax.Array, *, cfg,
-                        return_all: bool = False):
-    """params: {w,u,b}; xs: (B,T,X) -> (h_T, optionally (B,T,H))."""
+                        return_all: bool = False, mask=None):
+    """params: {w,u,b}; xs: (B,T,X) -> (h_T, optionally (B,T,H)).
+    ``mask`` (B,T): False steps freeze h (streamed through the kernel)."""
     w, u, b = params["w"], params["u"], params["b"]
     xp = xs @ w                                    # (B,T,3H): the decoupled GEMM
     xp_t = jnp.moveaxis(xp, -2, 0)                 # time-major (T,B,3H)
-    hs = gru_sequence_kernel(h0, xp_t, u, b, variant=cfg.variant,
-                             interpret=on_cpu())
+    hs = gru_sequence_kernel(h0, xp_t, u, b, _time_major_mask(mask),
+                             variant=cfg.variant, interpret=on_cpu())
     hT = hs[-1]
     if return_all:
         return hT, jnp.moveaxis(hs, 0, -2)
@@ -45,22 +62,30 @@ def gru_sequence_pallas(params: dict, h0: jax.Array, xs: jax.Array, *, cfg,
 
 
 def gru_stack_sequence_pallas(params: tuple, h0s: tuple, xs: jax.Array, *,
-                              cfg, return_all: bool = False):
+                              cfg, return_all: bool = False, mask=None,
+                              stacked: Optional[dict] = None):
     """Fused depth-L stack (uniform hidden sizes): ONE pallas_call.
 
     params: per-layer ({w,u,b}, ...), layer 0 first; h0s: per-layer (B,H).
     Returns (tuple of per-layer final h, optionally last layer's (B,T,H)).
+    ``mask`` (B,T) streams through the kernel (False steps freeze every
+    layer); ``stacked`` is an optional precomputed ``prepare_stacked_cells``
+    output so a prepared serving path does no per-call weight restacking.
     """
     L = len(params)
     if L == 1:
         hT, hs = gru_sequence_pallas(params[0], h0s[0], xs, cfg=cfg,
-                                     return_all=return_all)
+                                     return_all=return_all, mask=mask)
         return (hT,), hs
     xp = xs @ params[0]["w"]                       # layer-0 decoupled GEMM
     xp_t = jnp.moveaxis(xp, -2, 0)                 # (T,B,3H)
     h0 = jnp.stack(h0s, 0)                         # (L,B,H)
-    u, w_deep, b = _stacked_weights(params)
+    if stacked is None:
+        u, w_deep, b = _stacked_weights(params)
+    else:
+        u, w_deep, b = stacked["u"], stacked["w_deep"], stacked["b"]
     hs, hT = gru_stack_sequence_kernel(h0, xp_t, u, w_deep, b,
+                                       _time_major_mask(mask),
                                        variant=cfg.variant,
                                        interpret=on_cpu())
     finals = tuple(hT[l] for l in range(L))
@@ -69,11 +94,35 @@ def gru_stack_sequence_pallas(params: tuple, h0s: tuple, xs: jax.Array, *,
     return finals, None
 
 
+def gru_stack_sequence_pallas_chain(params: tuple, h0s: tuple, xs: jax.Array,
+                                    *, cfg, return_all: bool = False,
+                                    mask=None):
+    """Per-layer Pallas chain: one sequence kernel per layer, layer ``l``
+    consuming layer ``l-1``'s full hidden sequence. Serves heterogeneous
+    ``layer_dims`` (each layer gets its own VMEM block shapes) at the cost
+    of L kernel launches and L hidden-sequence HBM round-trips. The shared
+    mask is streamed into EVERY layer's kernel (exact: frozen steps feed
+    frozen layers)."""
+    from repro.core.gru import layer_config
+    L = len(params)
+    finals, cur, hs = [], xs, None
+    for l in range(L):
+        last = l == L - 1
+        hT, hs = gru_sequence_pallas(params[l], h0s[l], cur,
+                                     cfg=layer_config(cfg, l),
+                                     return_all=(not last) or return_all,
+                                     mask=mask)
+        finals.append(hT)
+        if not last:
+            cur = hs
+    return tuple(finals), (hs if return_all else None)
+
+
 def prepare_stacked_cells(params: tuple) -> dict:
-    """Precompute the stacked-weight views the fused decode kernel wants
+    """Precompute the stacked-weight views the fused kernels want
     ({u (L,H,3H), w_deep, b (L,3H)}). Do this ONCE outside the per-step
-    jit (ServeEngine does, via the model API's ``prepare_params``) so the
-    decode trace carries no per-token weight restacking."""
+    jit (``runtime.prepare`` does) so the decode trace carries no per-token
+    weight restacking."""
     u, w_deep, b = _stacked_weights(tuple(params))
     return {"u": u, "w_deep": w_deep, "b": b}
 
@@ -98,3 +147,73 @@ def gru_stack_decode_pallas(params: tuple, hs: tuple, x: jax.Array, *, cfg,
                                  stacked["b"], variant=cfg.variant,
                                  interpret=on_cpu())
     return tuple(h2[l] for l in range(len(params)))
+
+
+def gru_stack_decode_pallas_chain(params: tuple, hs: tuple, x: jax.Array, *,
+                                  cfg) -> tuple:
+    """Per-layer Pallas decode: one single-step kernel per layer (supports
+    heterogeneous ``layer_dims``, where the fused decode kernel cannot
+    apply). Depth-1 is bit-identical to one step of the sequence kernel."""
+    cur, out = x, []
+    for l, p in enumerate(params):
+        xp = cur @ p["w"]                          # (B,3H) this layer's Wx
+        h2 = gru_sequence_kernel(hs[l], xp[None], p["u"], p["b"],
+                                 variant=cfg.variant, interpret=on_cpu())[0]
+        out.append(h2)
+        cur = h2
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# runtime registration: the kernels package plugs its backends into the
+# executor's capability registry (see repro.core.runtime's module docstring
+# for the full table).
+# ---------------------------------------------------------------------------
+
+_REGISTERED = False
+
+
+def register_runtime_backends() -> None:
+    """Idempotently register ``pallas_fused`` / ``pallas_chain`` with the
+    GRU executor. Called on ``repro.kernels.gru_sequence`` import and by
+    ``runtime.plan()`` on first use (whichever happens first)."""
+    global _REGISTERED
+    if _REGISTERED:
+        return
+    from repro.core import runtime
+
+    def fused_seq(sp, h0s, xs, *, cfg, return_all, mask, mesh):
+        return gru_stack_sequence_pallas(sp.cells, tuple(h0s), xs, cfg=cfg,
+                                         return_all=return_all, mask=mask,
+                                         stacked=sp.stacked)
+
+    def fused_dec(sp, hs, x, *, cfg):
+        return gru_stack_decode_pallas(sp.cells, tuple(hs), x, cfg=cfg,
+                                       stacked=sp.stacked)
+
+    def chain_seq(sp, h0s, xs, *, cfg, return_all, mask, mesh):
+        return gru_stack_sequence_pallas_chain(sp.cells, tuple(h0s), xs,
+                                               cfg=cfg,
+                                               return_all=return_all,
+                                               mask=mask)
+
+    def chain_dec(sp, hs, x, *, cfg):
+        return gru_stack_decode_pallas_chain(sp.cells, tuple(hs), x, cfg=cfg)
+
+    runtime.register_backend(runtime.BackendSpec(
+        name="pallas_fused",
+        caps=runtime.Capabilities(supports_mask=True,
+                                  supports_hetero_dims=False,
+                                  supports_mesh=False, return_all=True,
+                                  decode=True, sequence=True),
+        cost=10,
+        sequence_fn=fused_seq, decode_fn=fused_dec))
+    runtime.register_backend(runtime.BackendSpec(
+        name="pallas_chain",
+        caps=runtime.Capabilities(supports_mask=True,
+                                  supports_hetero_dims=True,
+                                  supports_mesh=False, return_all=True,
+                                  decode=True, sequence=True),
+        cost=20,
+        sequence_fn=chain_seq, decode_fn=chain_dec))
+    _REGISTERED = True

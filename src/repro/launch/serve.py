@@ -5,8 +5,11 @@
 
 GRU waves run bucketed continuous batching: ``--slots`` bounds the live
 batch (defaults to ``--requests``); give MORE requests than slots to
-exercise mid-wave admit/retire. ``--gru-backend pallas`` serves decode
-through the fused persistent stack kernel (one pallas_call per step).
+exercise mid-wave admit/retire. ``--gru-backend`` sets the executor
+preference (``repro.core.runtime``): ``pallas`` serves through the fused
+persistent stack kernel (one pallas_call per step), ``auto`` lets the
+plan pick the cheapest legal backend. The resolved prefill/decode
+backends are printed with the latency stats.
 """
 from __future__ import annotations
 
@@ -35,8 +38,10 @@ def main(argv=None):
     p.add_argument("--vary-prompt", action="store_true",
                    help="gru: ragged prompt lengths (exercises buckets+mask)")
     p.add_argument("--max-new", type=int, default=16)
-    p.add_argument("--gru-backend", choices=("xla", "pallas"), default=None,
-                   help="override cfg.gru.backend (pallas = fused kernels)")
+    p.add_argument("--gru-backend", choices=("xla", "pallas", "auto"),
+                   default=None,
+                   help="executor backend preference (pallas = fused "
+                        "kernels; auto = cheapest legal backend)")
     p.add_argument("--bucket-min", type=int, default=8)
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
@@ -77,6 +82,10 @@ def main(argv=None):
           f"prefill mean={stats['prefill_mean_s']*1e3:.2f}ms "
           f"({stats['prefills']} prefills, "
           f"{len(engine._prefill_jit)} bucket jits)")
+    if cfg.family == "gru":
+        pf = sorted(set(engine.prefill_backends))
+        print(f"executor plan: prefill={'/'.join(pf) or '-'} "
+              f"decode={engine.decode_backend}")
     return done
 
 

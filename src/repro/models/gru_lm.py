@@ -6,6 +6,14 @@ head; the paper's validated configuration is one layer, H=20, X=5, 5
 classes). Serving = single-step recurrent decode through the whole stack,
 the paper's latency-measurement path; the cache carries one hidden state
 per layer.
+
+All GRU execution routes through the capability-dispatched executor
+(``repro.core.runtime``): ``prefill``/``decode_step`` ask ``plan()`` for
+the fastest legal backend (fused Pallas stack, per-layer Pallas chain,
+XLA scan, or the sharded shard_map program when a mesh is given), and
+``serve_plan`` exposes the resolved plan's metadata so the serving engine
+can record which backend actually runs (e.g. that a masked bucketed
+prefill executes the Pallas kernel, not an XLA fallback).
 """
 from __future__ import annotations
 
@@ -14,6 +22,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core import gru as gru_core
+from repro.core import runtime
 from repro.core.params import Spec, init_params
 from repro.distributed.sharding import ShardCtx, constrain
 
@@ -42,17 +51,27 @@ def loss_fn(params: dict, cfg: ModelConfig, batch: dict, *,
 # --- serving: the paper's latency path ---------------------------------------
 
 def prepare_params(params: dict, cfg: ModelConfig) -> dict:
-    """One-time serving prep: attach the stacked-weight views the fused
-    decode kernel consumes (``"stacked_cells"``), so the per-step decode
-    trace never restacks U/W/b. No-op for heterogeneous layer sizes (the
-    fused path doesn't apply) or already-prepared params."""
-    g = cfg.gru
-    dims = g.resolved_layer_dims
-    if "stacked_cells" in params or any(d != dims[0] for d in dims):
-        return params
-    from repro.kernels.gru_sequence.ops import prepare_stacked_cells
-    cells = gru_core.stack_cell_params(params, g)
-    return {**params, "stacked_cells": prepare_stacked_cells(cells)}
+    """One-time serving prep, delegated to ``runtime.prepare``: attach the
+    stacked-weight views the fused kernels consume (``"stacked_cells"``)
+    so the per-step decode trace never restacks U/W/b. No-op for
+    heterogeneous layer sizes (the fused path doesn't apply) or
+    already-prepared params."""
+    sp = runtime.prepare(params, cfg.gru)
+    out = {"cells": sp.cells, "head": params["head"]}
+    if sp.stacked is not None:
+        out["stacked_cells"] = sp.stacked
+    return out
+
+
+def serve_plan(cfg: ModelConfig, *, batch: int, seq: int = None,
+               masked: bool = False, mode: str = "serve",
+               mesh=None) -> runtime.ExecPlan:
+    """The executor plan a serving call with these shapes will use (same
+    memoized object ``prefill``/``decode_step`` resolve internally) —
+    lets the engine assert/record backend choices without re-planning."""
+    return runtime.plan(cfg.gru, batch=batch, seq=seq, mesh=mesh,
+                        mask=masked, mode=mode)
+
 
 def cache_specs(cfg: ModelConfig, batch: int, capacity: int = 0) -> dict:
     """Recurrent cache: one hidden state PER LAYER of the stack."""
@@ -74,13 +93,15 @@ def decode_step(params: dict, cfg: ModelConfig, cache: dict, x: jax.Array, *,
     """One recurrent step through the stack: x (B,X) features ->
     (class logits so far, cache).
 
-    With ``cfg.gru.backend == "pallas"`` (uniform layer sizes) the whole
-    depth runs as ONE fused pallas_call: the per-layer cache states are
-    stacked device-side and fed straight to the kernel — no host round
-    trips on the latency-critical path. Params prepared by
+    The executor dispatches: with ``cfg.gru.backend == "pallas"`` (uniform
+    layer sizes) the whole depth runs as ONE fused pallas_call — the
+    per-layer cache states are stacked device-side and fed straight to the
+    kernel, no host round trips on the latency-critical path; hetero
+    stacks run the per-layer Pallas chain. Params prepared by
     ``prepare_params`` carry pre-stacked weights so the step also does no
     per-token weight restacking."""
-    hs = gru_core.gru_stack_decode_step(params, cache["h"], x, cfg=cfg.gru)
+    p = runtime.plan(cfg.gru, batch=x.shape[0], mode="decode")
+    hs = p.decode(params, cache["h"], x)
     hs = tuple(constrain(h, ("batch", "act_gates"), ctx) for h in hs)
     logits = hs[-1] @ params["head"]["w"] + params["head"]["b"]
     return logits.astype(jnp.float32), {"h": hs, "pos": cache["pos"] + 1}
@@ -92,13 +113,16 @@ def prefill(params: dict, cfg: ModelConfig, batch: dict, *,
 
     ``batch["mask"]`` (B, T) bool, optional: False timesteps freeze the
     recurrence, so left-padded bucketed prompts (ServeEngine) yield the
-    same state as their unpadded originals."""
+    same state as their unpadded originals — streamed through whichever
+    backend the executor picks (the fused Pallas kernels included; masked
+    bucketed prefill no longer falls back to the XLA scan)."""
     xs = batch["features"]
     B = xs.shape[0]
-    cells = gru_core.stack_cell_params(params, cfg.gru)
+    mask = batch.get("mask")
     h0s = gru_core.stack_h0(cfg.gru, B, xs.dtype)
-    finals, _ = gru_core.gru_stack_sequence(cells, h0s, xs, cfg=cfg.gru,
-                                            mask=batch.get("mask"))
+    p = runtime.plan(cfg.gru, batch=B, seq=xs.shape[1],
+                     mask=mask is not None, mode="prefill")
+    finals = p.prefill(params, h0s, xs, mask=mask)
     logits = (finals[-1] @ params["head"]["w"]
               + params["head"]["b"]).astype(jnp.float32)
     cache = {"h": tuple(h.astype(jnp.float32) for h in finals),

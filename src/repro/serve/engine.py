@@ -21,13 +21,22 @@ Compile-once discipline (the ROADMAP's re-jit item):
   wave with a different batch size silently retraced against it).
 
 Continuous batching (GRU waves): ``generate`` accepts MORE requests than
-``max_batch``. The overflow queues; whenever a slot's request finishes
-(EOS or budget), the slot is retired mid-wave and the next queued request
-is admitted into it — its prompt is prefilled through the same bucketed
-prefill (batch padded to the slot shape, so no new compilation) and its
-per-layer hidden state is scattered into the live wave cache. Finished
-streams therefore free capacity immediately instead of padding the wave
-to the slowest request.
+``max_batch``. The overflow queues; whenever slots' requests finish
+(EOS or budget), the slots are retired mid-wave and queued requests are
+admitted into them. ALL requests admitted at one step share ONE bucketed
+prefill (batch padded to the slot shape, so no new compilation) whose
+rows are scattered into the freed slots of the live wave cache in one
+device-side update — when several slots free simultaneously the admit
+cost stays one prefill, not one per request. Finished streams therefore
+free capacity immediately instead of padding the wave to the slowest
+request.
+
+GRU execution dispatches through the executor (``repro.core.runtime``):
+the engine records the plan's chosen backend per prefill
+(``prefill_backends``) and for the wave's decode loop
+(``decode_backend``), so tests/operators can assert e.g. that a masked
+bucketed prefill ran the fused Pallas kernel rather than an XLA
+fallback.
 
 The GRU family (the paper's own model) serves FEATURE VECTORS instead of
 tokens: a request's ``prompt`` is a float (S, X) feature window, and each
@@ -94,9 +103,11 @@ class ServeEngine:
         self._prefill_jit = {}           # keyed by prompt-length bucket
         self._decode_jit = {}            # keyed by decode batch shape
         self._decode_warm = set()        # keys whose compile step has passed
-        self._scatter_jit = None
+        self._scatter_jit = {}           # keyed by admit-batch size
         self.step_times: List[float] = []
         self.prefill_times: List[float] = []
+        self.prefill_backends: List[str] = []   # executor choice per prefill
+        self.decode_backend: Optional[str] = None
 
     # -- jit caches ---------------------------------------------------------
 
@@ -118,16 +129,17 @@ class ServeEngine:
             self._prefill_jit[S] = jax.jit(fn)
         return self._prefill_jit[S]
 
-    def _get_scatter(self):
-        """Admit-one cache scatter: copy row 0 of a freshly prefilled cache
-        into slot ``j`` of the live wave cache (device-side, one trace)."""
-        if self._scatter_jit is None:
-            def fn(cache, fresh, j):
-                return {"h": tuple(h.at[j].set(f[0]) for h, f in
+    def _get_scatter(self, k: int):
+        """Admit-k cache scatter: copy rows 0..k-1 of a freshly prefilled
+        cache into the ``k`` freed slots of the live wave cache
+        (device-side, one trace per admit-batch size k <= max_batch)."""
+        if k not in self._scatter_jit:
+            def fn(cache, fresh, slots_):
+                return {"h": tuple(h.at[slots_].set(f[:k]) for h, f in
                                    zip(cache["h"], fresh["h"])),
                         "pos": cache["pos"]}
-            self._scatter_jit = jax.jit(fn)
-        return self._scatter_jit
+            self._scatter_jit[k] = jax.jit(fn)
+        return self._scatter_jit[k]
 
     # -- LM waves -----------------------------------------------------------
 
@@ -196,6 +208,14 @@ class ServeEngine:
         """One bucketed prefill of up to max_batch prompts; returns cache."""
         Sb = bucket_len(max(p.shape[0] for p in prompts), self.bucket_min)
         feats, mask = self._gru_prefill_batch(prompts, Sb)
+        planner = getattr(self.api, "plan", None)
+        if planner is not None:          # record the executor's choice
+            # mirrors the plan key gru_lm.prefill resolves for this call:
+            # the engine always sends the slot-shaped batch WITH a mask,
+            # so (batch, seq, masked=True) is the key the model call uses
+            plan = planner(self.cfg, batch=self.max_batch, seq=Sb,
+                           masked=True, mode="prefill")
+            self.prefill_backends.append(plan.sequence_backend)
         prefill = self._get_prefill(Sb)
         t0 = time.perf_counter()
         logits, cache = prefill(self.params, {"features": jnp.asarray(feats),
@@ -225,7 +245,10 @@ class ServeEngine:
         for i, s in enumerate(cohort):
             slots[i] = s
 
-        scatter = self._get_scatter()
+        planner = getattr(self.api, "plan", None)
+        if planner is not None:
+            self.decode_backend = planner(self.cfg, batch=Bs,
+                                          mode="decode").decode_backend
         key = (Bs, X)
         decode = self._get_decode(key)
         nxt = np.zeros((Bs, X), np.float32)
@@ -242,6 +265,7 @@ class ServeEngine:
             logits.block_until_ready()
             self._record_step(key, time.perf_counter() - t0)
             cls = np.asarray(jnp.argmax(logits, -1))
+            freed = []
             for j, s in enumerate(slots):
                 if s is None:
                     continue
@@ -252,14 +276,19 @@ class ServeEngine:
                         or len(r.out) >= r.max_new_tokens):
                     r.done = True
                     slots[j] = None                     # retire mid-wave
-                    if pending:                         # admit mid-wave
-                        s2 = make_slot(pending.popleft())
-                        fresh = self._gru_prefill(
-                            [np.asarray(s2.req.prompt, np.float32)
-                             .reshape(-1, X)])
-                        cache = scatter(cache, fresh,
-                                        jnp.asarray(j, jnp.int32))
-                        slots[j] = s2
+                    freed.append(j)
+            if freed and pending:
+                # batch the step's admits: ALL slots freed this step are
+                # refilled by ONE bucketed prefill, scattered in one go.
+                k = min(len(freed), len(pending))
+                admits = [make_slot(pending.popleft()) for _ in range(k)]
+                fresh = self._gru_prefill(
+                    [np.asarray(s2.req.prompt, np.float32).reshape(-1, X)
+                     for s2 in admits])
+                cache = self._get_scatter(k)(
+                    cache, fresh, jnp.asarray(freed[:k], jnp.int32))
+                for j2, s2 in zip(freed[:k], admits):
+                    slots[j2] = s2
         for r in reqs:
             r.done = True
         return reqs

@@ -1,0 +1,374 @@
+"""The GRU executor (repro.core.runtime): dispatch matrix, prepare(),
+deprecation shims, and plan metadata.
+
+The dispatch-matrix suite is the redesign's contract: every
+(mask on/off x depth 1-3 x hetero/uniform dims x mesh/none x
+prefill/decode) combination must resolve to a backend and match
+``gru_stack_reference`` to tolerance — bitwise (padded+masked vs
+unpadded) wherever the plan claims ``mask_exact``.
+"""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import GRUConfig
+from repro.core import gru, runtime
+from repro.core.params import init_params
+
+TOL = dict(rtol=3e-5, atol=3e-6)
+DEC_TOL = dict(rtol=1e-4, atol=1e-5)
+
+
+def _cfg(depth, hetero, backend="auto", **kw):
+    if hetero:
+        return GRUConfig(input_dim=5, layer_dims=(16, 8, 12)[:depth],
+                         backend=backend, **kw)
+    return GRUConfig(input_dim=5, hidden_dim=16, num_layers=depth,
+                     backend=backend, **kw)
+
+
+def _data(cfg, B=2, T=6, key=1):
+    xs = jax.random.normal(jax.random.key(key), (B, T, cfg.input_dim))
+    return xs, gru.stack_h0(cfg, B)
+
+
+def _padded(xs, P=3):
+    B, T, _ = xs.shape
+    xs_pad = jnp.pad(xs, ((0, 0), (P, 0), (0, 0)))
+    mask = jnp.broadcast_to(jnp.arange(T + P)[None, :] >= P, (B, T + P))
+    return xs_pad, mask
+
+
+# ---------------------------------------------------------------------------
+# dispatch matrix (single host); the mesh column runs in the multidev test
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("depth", [1, 2, 3])
+@pytest.mark.parametrize("hetero", [False, True])
+@pytest.mark.parametrize("masked", [False, True])
+@pytest.mark.parametrize("mode", ["prefill", "decode"])
+def test_dispatch_matrix(depth, hetero, masked, mode):
+    cfg = _cfg(depth, hetero)
+    params = init_params(gru.gru_stack_specs(cfg), jax.random.key(0))
+    xs, h0s = _data(cfg)
+    ref, _ = gru.gru_stack_reference(params, h0s, xs)
+    p = runtime.plan(cfg, batch=2, seq=6, mask=masked, mode=mode)
+    if mode == "decode":
+        assert p.decode_backend is not None
+        hs = h0s
+        for t in range(xs.shape[1]):
+            hs = p.decode(params, hs, xs[:, t])
+        for a, b in zip(hs, ref):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       **DEC_TOL)
+        return
+    assert p.sequence_backend is not None
+    if not masked:
+        finals, _ = p.sequence(params, h0s, xs)
+    else:
+        xs_pad, mask = _padded(xs)
+        finals, _ = p.sequence(params, h0s, xs_pad, mask=mask)
+        if p.mask_exact:
+            # the plan CLAIMS padding invariance: hold it to bitwise
+            un = runtime.plan(cfg, batch=2, seq=6, mode=mode)
+            f_un, _ = un.sequence(params, h0s, xs)
+            for a, b in zip(f_un, finals):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(finals, ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), **TOL)
+
+
+def test_dispatch_matrix_mesh(multidev):
+    """The mesh column of the matrix: sequence work dispatches to the
+    shard_map backend (mask and hetero dims included, both bitwise
+    padding-invariant); decode under a mesh resolves to a replicated
+    single-host backend instead of failing."""
+    multidev("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs.base import GRUConfig
+from repro.core import gru, runtime
+from repro.core.params import init_params
+mesh = jax.make_mesh((4,), ("model",))
+X, B, T, P = 6, 2, 7, 3
+xs = jax.random.normal(jax.random.key(1), (B, T, X))
+xs_pad = jnp.pad(xs, ((0, 0), (P, 0), (0, 0)))
+mask = jnp.broadcast_to(jnp.arange(T + P)[None, :] >= P, (B, T + P))
+for dims in ((16, 16), (16, 8)):
+    for masked in (False, True):
+        cfg = GRUConfig(input_dim=X, layer_dims=dims, backend="auto",
+                        layer_matvec_modes=("rowwise", "cascade"))
+        params = init_params(gru.gru_stack_specs(cfg), jax.random.key(0))
+        h0s = gru.stack_h0(cfg, B)
+        p = runtime.plan(cfg, batch=B, seq=T, mesh=mesh, mask=masked,
+                         mode="prefill")
+        assert p.sequence_backend == "sharded", p.sequence_backend
+        if masked:
+            finals, _ = p.sequence(params, h0s, xs_pad, mask=mask)
+            un = runtime.plan(cfg, batch=B, seq=T, mesh=mesh, mode="prefill")
+            f_un, _ = un.sequence(params, h0s, xs)
+            for a, b in zip(f_un, finals):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        else:
+            finals, _ = p.sequence(params, h0s, xs)
+        ref, _ = gru.gru_stack_reference(params, h0s, xs)
+        for a, b in zip(finals, ref):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=3e-5, atol=3e-6)
+        pd = runtime.plan(cfg, batch=B, mesh=mesh, mode="decode")
+        assert pd.decode_backend in ("xla", "pallas_fused", "pallas_chain")
+print("PASS")
+""", timeout=560)
+
+
+# ---------------------------------------------------------------------------
+# plan semantics
+# ---------------------------------------------------------------------------
+
+def test_plan_picks_expected_backends():
+    """Cost/preference dispatch: auto picks the fused kernel when legal,
+    the chain for hetero dims; explicit prefs pin their family; masked
+    calls no longer push pallas configs onto the XLA scan."""
+    u3 = _cfg(3, hetero=False)
+    h3 = _cfg(3, hetero=True)
+    assert runtime.plan(u3, mode="serve").sequence_backend == "pallas_fused"
+    assert runtime.plan(u3, mode="serve").decode_backend == "pallas_fused"
+    assert runtime.plan(h3, mode="serve").sequence_backend == "pallas_chain"
+    assert runtime.plan(h3, mode="serve").decode_backend == "pallas_chain"
+    assert runtime.plan(u3, mask=True,
+                        mode="prefill").sequence_backend == "pallas_fused"
+    x3 = _cfg(3, hetero=False, backend="xla")
+    assert runtime.plan(x3, mode="serve").sequence_backend == "xla"
+    p3 = _cfg(3, hetero=False, backend="pallas")
+    assert runtime.plan(p3, mask=True,
+                        mode="prefill").sequence_backend == "pallas_fused"
+    # a pallas preference with hetero dims falls through to the chain
+    # (historically: silent XLA decode / a raise) instead of erroring
+    ph = _cfg(3, hetero=True, backend="pallas")
+    assert runtime.plan(ph, mode="decode").decode_backend == "pallas_chain"
+
+
+def test_plan_is_memoized_and_jit_stable():
+    """The same plan key returns the SAME ExecPlan object (stable
+    callables -> jit caches keyed on them never retrace)."""
+    cfg = _cfg(2, hetero=False)
+    a = runtime.plan(cfg, batch=2, seq=6, mode="serve")
+    b = runtime.plan(cfg, batch=2, seq=6, mode="serve")
+    assert a is b and a.sequence is b.sequence and a.decode is b.decode
+    params = runtime.prepare(
+        init_params(gru.gru_stack_specs(cfg), jax.random.key(0)), cfg)
+    xs, h0s = _data(cfg)
+    f = jax.jit(lambda p, h, x: a.decode(p, h, x))
+    f(params, h0s, xs[:, 0])
+    f(params, h0s, xs[:, 1])
+    assert f._cache_size() == 1
+
+
+def test_plan_return_all_falls_through_to_capable_backend():
+    """A finals-only backend may win the primary selection, but a
+    return_all=True call must route to a fully-capable backend instead of
+    failing inside the cheap one (enforced capability, not a doc note)."""
+    cfg = _cfg(2, hetero=False)
+    params = init_params(gru.gru_stack_specs(cfg), jax.random.key(0))
+    xs, h0s = _data(cfg)
+
+    calls = []
+
+    def finals_only(sp, h0s_, xs_, *, cfg, return_all, mask, mesh):
+        assert not return_all
+        calls.append("finals_only")
+        return gru.gru_stack_sequence_xla(sp.cells, h0s_, xs_, cfg=cfg,
+                                          mask=mask)
+
+    runtime.register_backend(runtime.BackendSpec(
+        name="_test_finals_only",
+        caps=runtime.Capabilities(supports_mask=True,
+                                  supports_hetero_dims=True,
+                                  return_all=False, decode=False,
+                                  sequence=True),
+        cost=-50, sequence_fn=finals_only))
+    try:
+        p = runtime.plan(cfg, batch=2, seq=6, mode="sequence")
+        assert p.sequence_backend == "_test_finals_only"
+        f1, s1 = p.sequence(params, h0s, xs)
+        assert calls == ["finals_only"] and s1 is None
+        f2, s2 = p.sequence(params, h0s, xs, return_all=True)
+        assert calls == ["finals_only"]          # fell through, not reused
+        assert s2 is not None
+        for a, b in zip(f1, f2):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), **TOL)
+    finally:
+        runtime._REGISTRY.pop("_test_finals_only", None)
+        runtime._PLAN_CACHE.clear()
+
+
+def test_plan_capability_registry():
+    """Every registered backend exposes the ISSUE's capability surface."""
+    regs = runtime.backends()
+    assert {"xla", "sharded", "pallas_fused", "pallas_chain"} <= set(regs)
+    for spec in regs.values():
+        caps = spec.caps
+        for field in ("supports_mask", "supports_hetero_dims",
+                      "supports_mesh", "return_all", "decode", "sequence"):
+            assert isinstance(getattr(caps, field), bool)
+        assert isinstance(spec.cost, int)
+    assert not regs["pallas_fused"].caps.supports_hetero_dims
+    assert regs["pallas_chain"].caps.supports_hetero_dims
+    assert regs["sharded"].caps.supports_mesh
+    assert not regs["sharded"].caps.decode
+
+
+# ---------------------------------------------------------------------------
+# prepare(): one normalization to rule the three historical ones
+# ---------------------------------------------------------------------------
+
+def test_prepare_subsumes_param_layouts():
+    cfg = _cfg(2, hetero=False)
+    cells = tuple(init_params(gru.gru_stack_specs(cfg), jax.random.key(0)))
+    layouts = [cells, list(cells), {"cells": cells}]
+    sps = [runtime.prepare(p, cfg) for p in layouts]
+    for sp in sps:
+        assert isinstance(sp, runtime.StackParams)
+        assert sp.dims == (16, 16)
+        assert sp.stacked is not None            # uniform -> fused views
+        np.testing.assert_array_equal(np.asarray(sp.stacked["u"]),
+                                      np.asarray(sps[0].stacked["u"]))
+    # StackParams passthrough is identity (hot paths re-prepare for free)
+    assert runtime.prepare(sps[0], cfg) is sps[0]
+    # a dict already carrying stacked_cells keeps them (no recompute)
+    marked = {"cells": cells,
+              "stacked_cells": {"u": sps[0].stacked["u"] + 1.0,
+                                "w_deep": sps[0].stacked["w_deep"],
+                                "b": sps[0].stacked["b"]}}
+    assert runtime.prepare(marked, cfg).stacked is marked["stacked_cells"]
+    # depth-1 seed layout and bare cells
+    cfg1 = _cfg(1, hetero=False)
+    cell = init_params(gru.gru_cell_specs(5, 16), jax.random.key(1))
+    for layout in ({"cell": cell}, cell, (cell,)):
+        sp = runtime.prepare(layout, cfg1)
+        assert len(sp.cells) == 1 and sp.dims == (16,)
+    # hetero stacks carry no fused views
+    cfgh = _cfg(3, hetero=True)
+    sph = runtime.prepare(
+        tuple(init_params(gru.gru_stack_specs(cfgh), jax.random.key(2))),
+        cfgh)
+    assert sph.stacked is None and sph.dims == (16, 8, 12)
+
+
+def test_prepare_is_a_pytree():
+    """StackParams flows through jit/tree_map like any params pytree."""
+    cfg = _cfg(2, hetero=False)
+    sp = runtime.prepare(
+        init_params(gru.gru_stack_specs(cfg), jax.random.key(0)), cfg)
+    leaves = jax.tree_util.tree_leaves(sp)
+    assert len(leaves) == 2 * 3 + 3              # 2 cells x {w,u,b} + stacked
+    sp2 = jax.tree_util.tree_map(lambda x: x, sp)
+    assert isinstance(sp2, runtime.StackParams)
+    assert sp2.dims == sp.dims
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims: warn once per process, bitwise-equal to the executor
+# ---------------------------------------------------------------------------
+
+def test_legacy_shims_warn_once_and_match_bitwise():
+    cfg = _cfg(2, hetero=False)
+    params = init_params(gru.gru_stack_specs(cfg), jax.random.key(0))
+    xs, h0s = _data(cfg)
+    gru._DEPRECATION_WARNED.clear()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        old_f, old_all = gru.gru_stack_sequence(params, h0s, xs, cfg=cfg,
+                                                return_all=True)
+        gru.gru_stack_sequence(params, h0s, xs, cfg=cfg)   # repeat: no new warn
+        old_hs = gru.gru_stack_decode_step(params, h0s, xs[:, 0], cfg=cfg)
+        old_1, _ = gru.gru_sequence(params[0], h0s[0], xs, cfg=cfg)
+    deps = [str(x.message) for x in w
+            if issubclass(x.category, DeprecationWarning)]
+    assert len(deps) == 3, deps                  # one per entry point
+    assert any("gru_stack_sequence" in m for m in deps)
+    assert all("runtime" in m for m in deps)
+
+    new_f, new_all = runtime.sequence(params, h0s, xs, cfg=cfg,
+                                      return_all=True)
+    for a, b in zip(old_f, new_f):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(old_all), np.asarray(new_all))
+    new_hs = runtime.decode(params, h0s, xs[:, 0], cfg=cfg)
+    for a, b in zip(old_hs, new_hs):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    lcfg = gru.layer_config(cfg, 0)
+    new_1, _ = runtime.sequence((params[0],), (h0s[0],), xs, cfg=lcfg)
+    np.testing.assert_array_equal(np.asarray(old_1), np.asarray(new_1[0]))
+
+
+def test_legacy_decode_impl_override_matches_executor():
+    """impl="pallas"/"xla" on the legacy decode shim == an explicit
+    backend preference on the executor, bitwise."""
+    cfg = _cfg(3, hetero=False)
+    params = init_params(gru.gru_stack_specs(cfg), jax.random.key(0))
+    xs, h0s = _data(cfg)
+    for impl in ("xla", "pallas"):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            old = gru.gru_stack_decode_step(params, h0s, xs[:, 0], cfg=cfg,
+                                            impl=impl)
+        new = runtime.decode(params, h0s, xs[:, 0],
+                             cfg=dataclasses.replace(cfg, backend=impl))
+        for a, b in zip(old, new):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# masked fused kernels: the capability the redesign closes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("depth", [1, 3])
+@pytest.mark.parametrize("variant", ["v1", "v3"])
+def test_masked_pallas_sequence_bitwise_vs_unpadded(depth, variant):
+    """Bucketed (left-padded+masked) prefill through the FUSED Pallas
+    kernels: bitwise the unpadded computation at the same batch shape
+    (the bucketing contract), and per-row-correct for ragged lengths —
+    closing the ROADMAP's masked-prefill fallback."""
+    cfg = _cfg(depth, hetero=False, backend="pallas", variant=variant)
+    params = init_params(gru.gru_stack_specs(cfg), jax.random.key(0))
+    xs, h0s = _data(cfg, B=2, T=5)
+    p = runtime.plan(cfg, batch=2, seq=8, mask=True, mode="prefill")
+    assert p.sequence_backend == "pallas_fused"
+    un = runtime.plan(cfg, batch=2, seq=5, mode="prefill")
+    f_un, _ = un.sequence(params, h0s, xs)
+    # uniform left-pad: bitwise at the same batch shape
+    xs_pad, mask = _padded(xs)
+    f_pd, _ = p.sequence(params, h0s, xs_pad, mask=mask)
+    for a, b in zip(f_un, f_pd):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # ragged: row 0 keeps length 5, row 1 only 3, left-aligned into T=5;
+    # rows match their solo (different-batch-shape) runs to fp tolerance
+    lens = np.array([5, 3])
+    xs_r = np.zeros((2, 5, 5), np.float32)
+    xs_r[0] = np.asarray(xs[0])
+    xs_r[1, 2:] = np.asarray(xs[1, :3])
+    mask_r = jnp.asarray(np.arange(5)[None, :] >= (5 - lens)[:, None])
+    f_r, states = p.sequence(params, h0s, jnp.asarray(xs_r), mask=mask_r,
+                             return_all=True)
+    solo = runtime.plan(cfg, batch=1, seq=5, mode="prefill")
+    f0, _ = solo.sequence(params, tuple(h[:1] for h in h0s), xs[:1])
+    f1, _ = solo.sequence(params, tuple(h[1:2] for h in h0s), xs[1:2, :3])
+    for l in range(depth):
+        np.testing.assert_allclose(np.asarray(f_r[l][0]),
+                                   np.asarray(f0[l][0]),
+                                   rtol=1e-6, atol=1e-7)
+        np.testing.assert_allclose(np.asarray(f_r[l][1]),
+                                   np.asarray(f1[l][0]),
+                                   rtol=1e-6, atol=1e-7)
+    # the return_all stream carries the gated (frozen-then-live) states:
+    # compare against the masked XLA backend (variant-aware oracle)
+    xcfg = dataclasses.replace(cfg, backend="xla")
+    px = runtime.plan(xcfg, batch=2, seq=5, mask=True, mode="prefill")
+    _, states_x = px.sequence(params, h0s, jnp.asarray(xs_r), mask=mask_r,
+                              return_all=True)
+    np.testing.assert_allclose(np.asarray(states), np.asarray(states_x),
+                               **TOL)
