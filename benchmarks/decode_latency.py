@@ -1,29 +1,43 @@
-"""Decode-step latency: fused persistent stack kernel vs layer-by-layer XLA.
+"""Decode-step latency: fused persistent stack kernel vs layer-by-layer XLA
+(plus the per-layer Pallas chain and, under a mesh, the sharded step).
 
 The paper's figure of merit is the latency of ONE recurrent step. This
-benchmark tracks it per PR for the two serving implementations:
+benchmark tracks it per PR for the serving implementations:
 
-* ``xla``   — layer-by-layer structural modes (the paper's row-wise scheme
-  by default), L separate dispatch chains per step.
-* ``fused`` — ONE pallas_call advances the whole batch through all L
+* ``xla``     — layer-by-layer structural modes (the paper's row-wise
+  scheme by default), L separate dispatch chains per step.
+* ``fused``   — ONE pallas_call advances the whole batch through all L
   layers (weights pinned in VMEM via constant index maps; interpret mode
   on CPU).
+* ``chain``   — per-layer Pallas kernels (``--via runtime`` only; the
+  hetero-capable backend, measured so the cost model can rank it).
+* ``sharded`` — ONE persistent shard_map step over pre-sharded weights
+  (``--mesh N``; requires N host devices, e.g. via XLA_FLAGS).
 
 ``--via`` picks how the step is obtained:
 
 * ``direct``  — the legacy entry point ``gru_stack_decode_step(impl=...)``
   (now an executor shim, kept for continuity of the series).
-* ``runtime`` — ``repro.core.runtime.plan(cfg, mode="decode").decode``:
-  the capability-dispatched executor path ServeEngine uses; each row then
-  records WHICH backend the plan resolved (``backend`` field), so the
+* ``runtime`` — ``repro.core.runtime.compile(cfg, ..., mode="decode")``:
+  the compiled-executable path ServeEngine uses; each row then records
+  WHICH backend the executable resolved (``backend`` field) and whether
+  the choice came from measured calibration (``cost_source``), so the
   artifact documents the dispatch decision alongside the latency.
+
+``--emit-costs`` additionally writes ``BENCH_backend_costs.json`` in the
+schema ``repro.core.runtime.CostModel`` loads — the calibration artifact
+that turns ``backend="auto"`` into measured per-shape dispatch. It forces
+``--via runtime`` (cost entries are keyed by executor backend names) and
+adds the ``chain`` impl so every single-host decode candidate is covered
+(the CostModel only trusts calibrations that cover ALL legal candidates).
 
 Sweeps depth x batch and reports the per-step latency DISTRIBUTION
 (p50/p99 — the paper's constraint is a tail bound, not an average), each
-step timed individually with a device sync, both impls measured in
+step timed individually with a device sync, all impls measured in
 alternating rounds (shared-host drift bias). Emits BENCH_gru_decode.json.
 
-    PYTHONPATH=src python benchmarks/decode_latency.py [--smoke] [--via runtime]
+    PYTHONPATH=src python benchmarks/decode_latency.py [--smoke] \
+        [--via runtime] [--emit-costs] [--mesh N]
 
 CSV: name,us_per_call,derived
 """
@@ -43,46 +57,63 @@ from repro.configs.base import GRUConfig
 from repro.core import gru, runtime
 from repro.core.params import init_params
 
+# impl label -> executor backend preference. ALL exact names: each impl
+# pins one backend, so measurements are hermetic even when a stale
+# calibration artifact sits in the cwd (a family pref like "pallas" would
+# let measured costs from a previous run pick pallas_chain for the
+# "fused" rows and drop pallas_fused from the emitted coverage).
+_IMPL_PREF = {"xla": "xla", "fused": "pallas_fused", "chain": "pallas_chain",
+              "sharded": "sharded_decode"}
 
-def _make_step(cfg: GRUConfig, impl: str, batch: int, via: str = "direct"):
-    """(jitted step fn, params, warm state, input, backend name) for one
-    impl routed either through the legacy entry point or the executor."""
+
+def _make_step(cfg: GRUConfig, impl: str, batch: int, via: str = "direct",
+               placement=None):
+    """(jitted step fn, params, warm state, input, backend, cost_source)
+    for one impl routed either through the legacy entry point or the
+    compiled executable."""
     raw = init_params(gru.gru_stack_specs(cfg), jax.random.key(0))
-    rcfg = dataclasses.replace(cfg, backend=impl)
+    rcfg = dataclasses.replace(cfg, backend=_IMPL_PREF[impl])
     # serving prepares params once (ServeEngine via runtime.prepare);
-    # measure the same pre-stacked fast path here
-    params = runtime.prepare(raw, rcfg)
+    # measure the same placement-resident fast path here
+    params = runtime.prepare(raw, rcfg, placement)
     hs = gru.stack_h0(cfg, batch)
     x = jnp.ones((batch, cfg.input_dim))
     if via == "runtime":
-        plan = runtime.plan(rcfg, batch=batch, mode="decode")
-        backend = plan.decode_backend
-        f = jax.jit(lambda p, h, xv: plan.decode(p, h, xv))
+        exe = runtime.compile(rcfg, batch=batch, placement=placement,
+                              mode="decode")
+        backend, src = exe.decode_backend, exe.cost_source
+        f = jax.jit(lambda p, h, xv: exe.decode(p, h, xv))
     else:
-        backend = impl
+        assert impl in ("xla", "fused"), \
+            f"--via direct serves xla/fused only, not {impl!r}"
+        backend, src = impl, "n/a"
         params = {"cells": params.cells,
                   **({"stacked_cells": params.stacked}
                      if params.stacked is not None else {})}
         f = jax.jit(lambda p, h, xv: gru.gru_stack_decode_step(
-            p, h, xv, cfg=cfg, impl=impl))
+            p, h, xv, cfg=cfg,
+            impl="pallas" if impl == "fused" else impl))
     with warnings.catch_warnings():
         # the legacy shim warns at first TRACE, i.e. on this first call
         warnings.simplefilter("ignore", DeprecationWarning)
         out = f(params, hs, x)
     out[-1].block_until_ready()
-    return f, params, out, x, backend
+    return f, params, out, x, backend, src
 
 
 def _per_step_times(cfg: GRUConfig, batch: int, iters: int, via: str,
+                    impls=("xla", "fused"), placement=None,
                     warmup: int = 10, rounds: int = 10):
-    """Per-step latencies for BOTH impls, measured in alternating rounds so
-    machine-load drift (shared CI hosts) biases neither implementation."""
-    bench, backends = {}, {}
-    for impl in ("xla", "fused"):
-        f, params, out, x, backend = _make_step(
-            cfg, "pallas" if impl == "fused" else "xla", batch, via)
+    """Per-step latencies for ALL impls, measured in alternating rounds so
+    machine-load drift (shared CI hosts) biases no implementation."""
+    bench, backends, sources = {}, {}, {}
+    for impl in impls:
+        f, params, out, x, backend, src = _make_step(
+            cfg, impl, batch, via,
+            placement=placement if impl == "sharded" else None)
         bench[impl] = (f, params, out, x)
         backends[impl] = backend
+        sources[impl] = src
     ts = {impl: [] for impl in bench}
     for impl, (f, params, out, x) in bench.items():
         for _ in range(warmup):
@@ -98,22 +129,67 @@ def _per_step_times(cfg: GRUConfig, batch: int, iters: int, via: str,
                 out[-1].block_until_ready()
                 ts[impl].append(time.perf_counter() - t0)
             bench[impl] = (f, params, out, x)
-    return {impl: np.array(v) for impl, v in ts.items()}, backends
+    return {impl: np.array(v) for impl, v in ts.items()}, backends, sources
+
+
+def emit_costs(rows, json_path: str = "BENCH_backend_costs.json",
+               csv: bool = True) -> dict:
+    """Convert measured rows into the CostModel calibration artifact.
+
+    Schema (``repro.core.runtime.CostModel.load``): one entry per
+    (backend, op, depth, batch, hidden_dim) with the measured ``p50_us``.
+    Rows must come from ``--via runtime`` so ``backend`` holds executor
+    backend names (the keys dispatch ranks by)."""
+    seen, entries = set(), []
+    for r in rows:
+        if r.get("via") != "runtime":
+            continue
+        key = (r["backend"], "decode", r["depth"], r["batch"],
+               r["hidden_dim"])
+        if key in seen:
+            continue
+        seen.add(key)
+        entries.append({"backend": r["backend"], "op": "decode",
+                        "depth": r["depth"], "batch": r["batch"],
+                        "hidden_dim": r["hidden_dim"],
+                        "p50_us": r["p50_us"]})
+    out = {"bench": "gru_backend_costs", "schema": 1,
+           "device": jax.default_backend(), "entries": entries}
+    with open(json_path, "w") as f:
+        json.dump(out, f, indent=2)
+    if csv:
+        print(f"decode_costs_artifact,0.00,{json_path};"
+              f"entries={len(entries)}")
+    return out
 
 
 def run(depths=(1, 2, 3), batches=(1, 8, 32), H: int = 32, X: int = 5,
         iters: int = 300, json_path: str = "BENCH_gru_decode.json",
-        csv: bool = True, via: str = "direct"):
-    """Depth x batch x impl sweep; emits the BENCH_gru_decode.json artifact."""
+        csv: bool = True, via: str = "direct",
+        impls=("xla", "fused"), mesh_axis: int = 0,
+        costs_path: str = None):
+    """Depth x batch x impl sweep; emits the BENCH_gru_decode.json artifact
+    (and, with ``costs_path``, the CostModel calibration)."""
+    placement = None
+    if mesh_axis:
+        assert len(jax.devices()) >= mesh_axis, (
+            f"--mesh {mesh_axis} needs {mesh_axis} devices; set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={mesh_axis}")
+        from repro.compat import make_mesh
+        placement = runtime.Placement(mesh=make_mesh((mesh_axis,),
+                                                     ("model",)))
+        impls = tuple(impls) + ("sharded",)
     rows = []
     for L in depths:
         for B in batches:
             cfg = GRUConfig(input_dim=X, hidden_dim=H, num_layers=L)
-            pair, backends = _per_step_times(cfg, B, iters, via)
-            for impl, ts in pair.items():
+            series, backends, sources = _per_step_times(
+                cfg, B, iters, via, impls=impls, placement=placement)
+            for impl, ts in series.items():
                 row = {"depth": L, "batch": B, "impl": impl, "hidden_dim": H,
                        "input_dim": X, "steps": len(ts),
                        "via": via, "backend": backends[impl],
+                       "cost_source": sources[impl],
                        "p50_us": round(float(np.percentile(ts, 50)) * 1e6, 2),
                        "p90_us": round(float(np.percentile(ts, 90)) * 1e6, 2),
                        "p99_us": round(float(np.percentile(ts, 99)) * 1e6, 2),
@@ -138,27 +214,46 @@ def run(depths=(1, 2, 3), batches=(1, 8, 32), H: int = 32, X: int = 5,
         for k, v in summary.items():
             print(f"decode_{k},{v:.3f},fused_vs_xla")
         print(f"decode_artifact,0.00,{json_path}")
+    if costs_path:
+        emit_costs(rows, costs_path, csv=csv)
     return out
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="reduced sweep for CI (still emits the artifact)")
+                    help="reduced sweep for CI (still emits the artifacts)")
     ap.add_argument("--via", choices=("direct", "runtime"), default="direct",
                     help="route steps through the legacy entry point or the "
-                         "capability-dispatched executor (records the "
-                         "plan's backend choice in the artifact)")
+                         "compiled executable (records the resolved backend "
+                         "in the artifact)")
+    ap.add_argument("--emit-costs", nargs="?", const="BENCH_backend_costs.json",
+                    default=None, metavar="PATH",
+                    help="also write the CostModel calibration artifact "
+                         "(forces --via runtime and adds the chain impl so "
+                         "every single-host decode candidate is covered)")
+    ap.add_argument("--mesh", type=int, default=0, metavar="N",
+                    help="also measure the sharded decode step on an "
+                         "N-device mesh (needs N host devices via XLA_FLAGS)")
     ap.add_argument("--depths", type=int, nargs="+", default=None)
     ap.add_argument("--batches", type=int, nargs="+", default=None)
     ap.add_argument("--iters", type=int, default=None)
     ap.add_argument("--json", default="BENCH_gru_decode.json")
     args = ap.parse_args()
+    via = args.via
+    impls = ("xla", "fused")
+    if args.emit_costs:
+        via = "runtime"                 # cost entries need backend names
+        impls = ("xla", "fused", "chain")
+    if args.mesh:
+        via = "runtime"                 # the sharded impl is executor-only
     if args.smoke:
         run(depths=tuple(args.depths or (1, 3)),
             batches=tuple(args.batches or (1, 8)),
-            iters=args.iters or 120, json_path=args.json, via=args.via)
+            iters=args.iters or 120, json_path=args.json, via=via,
+            impls=impls, mesh_axis=args.mesh, costs_path=args.emit_costs)
     else:
         run(depths=tuple(args.depths or (1, 2, 3)),
             batches=tuple(args.batches or (1, 8, 32)),
-            iters=args.iters or 300, json_path=args.json, via=args.via)
+            iters=args.iters or 300, json_path=args.json, via=via,
+            impls=impls, mesh_axis=args.mesh, costs_path=args.emit_costs)

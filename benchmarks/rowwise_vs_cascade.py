@@ -59,8 +59,8 @@ def _measure_seq(cfg: GRUConfig, H: int, X: int, T: int = 32,
     params = init_params(gru.gru_cell_specs(X, H), jax.random.key(0))
     h0 = jnp.zeros((1, H))
     xs = jnp.ones((1, T, X))
-    plan = runtime.plan(cfg, batch=1, seq=T, mode="sequence")
-    f = jax.jit(lambda p, h, x: plan.sequence(p, (h,), x)[0][0])
+    exe = runtime.compile(cfg, batch=1, seq=T, mode="sequence")
+    f = jax.jit(lambda p, h, x: exe.sequence(p, (h,), x)[0][0])
     f((params,), h0, xs).block_until_ready()
     t0 = time.perf_counter()
     for _ in range(iters):
@@ -70,21 +70,21 @@ def _measure_seq(cfg: GRUConfig, H: int, X: int, T: int = 32,
 
 
 def _measure_stack_decode(cfg: GRUConfig, iters: int = 200):
-    """Per-step decode latency (us) of one executor-planned pass through
-    the stack, plus the backend the plan resolved."""
+    """Per-step decode latency (us) of one compiled-executable pass through
+    the stack, plus the backend the executable resolved."""
     params = runtime.prepare(
         init_params(gru.gru_stack_specs(cfg), jax.random.key(0)), cfg)
     hs = gru.stack_h0(cfg, 1)
     x = jnp.ones((1, cfg.input_dim))
-    plan = runtime.plan(cfg, batch=1, mode="decode")
-    f = jax.jit(lambda p, h, xv: plan.decode(p, h, xv))
+    exe = runtime.compile(cfg, batch=1, mode="decode")
+    f = jax.jit(lambda p, h, xv: exe.decode(p, h, xv))
     out = f(params, hs, x)
     out[-1].block_until_ready()
     t0 = time.perf_counter()
     for _ in range(iters):
         out = f(params, out, x)
     out[-1].block_until_ready()
-    return (time.perf_counter() - t0) / iters * 1e6, plan.decode_backend
+    return (time.perf_counter() - t0) / iters * 1e6, exe.decode_backend
 
 
 def run_depth_sweep(layers=(1, 2, 4), H: int = 32, X: int = 5,

@@ -76,8 +76,11 @@ class GRUConfig:
     fused_gates: bool = True         # hybrid fused aggregation vs unfused
     decoupled_wx: bool = True        # hoist W.x out of the recurrence
     variant: str = "v1"              # "v1" (paper/Cho) | "v3" (beyond-paper fused-U)
-    backend: str = "xla"             # executor preference ("xla" | "pallas"
-                                     # | "auto" = cheapest legal backend;
+    backend: str = "xla"             # executor preference: "xla"/"pallas"
+                                     # pin a family, an exact backend name
+                                     # (e.g. "pallas_chain") pins one
+                                     # backend, "auto" = cheapest legal
+                                     # (measured costs when calibrated;
                                      # see repro.core.runtime)
     row_block: int = 0               # rows per block (0 = auto)
     unroll: int = 1                  # scan unroll for short-seq latency mode

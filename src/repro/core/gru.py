@@ -78,14 +78,14 @@ _DEPRECATION_WARNED: set = set()
 def _warn_deprecated(old: str) -> None:
     """One DeprecationWarning per entry point per process: the legacy GRU
     entry points still work (and stay bitwise-equal to the executor) but
-    new code should go through ``repro.core.runtime.plan()``."""
+    new code should go through ``repro.core.runtime.compile()``."""
     if old in _DEPRECATION_WARNED:
         return
     _DEPRECATION_WARNED.add(old)
     warnings.warn(
         f"{old} is a deprecated entry point; use "
-        "repro.core.runtime.plan()/sequence()/decode() (capability-"
-        "dispatched executor) instead.",
+        "repro.core.runtime.compile() -> GRUExecutable (capability-"
+        "dispatched executor, two-stage compile/execute) instead.",
         DeprecationWarning, stacklevel=3)
 
 

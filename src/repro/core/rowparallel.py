@@ -38,7 +38,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.configs.base import GRUConfig
@@ -199,6 +199,64 @@ def gru_sequence_sharded(params: dict, h0: jax.Array, xs: jax.Array, *,
 # deep stacks: per-layer row sharding with collective reuse
 # ---------------------------------------------------------------------------
 
+def _layer_view(cell: dict, mode: str) -> dict:
+    """One layer's shard_map-ready weight views (no placement yet).
+
+    rowwise: gate-major reshapes so each shard owns rows of ALL THREE
+    gates; cascade: the raw cell (contraction dim sharded by spec)."""
+    H = cell["u"].shape[0]
+    if mode == "rowwise":
+        Xl = cell["w"].shape[0]
+        return {"w3": cell["w"].reshape(Xl, 3, H),
+                "u3": cell["u"].reshape(H, 3, H),
+                "b3": cell["b"].reshape(3, H)}
+    return {"w": cell["w"], "u": cell["u"], "b": cell["b"]}
+
+
+def _layer_spec(mode: str, axis: str) -> dict:
+    if mode == "rowwise":
+        return {"w3": P(None, None, axis), "u3": P(None, None, axis),
+                "b3": P(None, axis)}
+    return {"w": P(), "u": P(axis, None), "b": P()}
+
+
+def sharded_layer_specs(cfg: GRUConfig, num_layers: int,
+                        axis: str = "model") -> tuple:
+    """Per-layer PartitionSpec dicts matching ``prepare_sharded_layers``."""
+    return tuple(_layer_spec(cfg.layer_matvec_mode(l), axis)
+                 for l in range(num_layers))
+
+
+def prepare_sharded_layers(cells, cfg: GRUConfig, *, mesh: Mesh,
+                           axis: str = "model") -> tuple:
+    """ONE-time weight placement for the sharded backends: the gate-major
+    reshapes AND the ``device_put`` onto the mesh both happen here, so a
+    traced execute call against the result is pure compute (no
+    ``device_put`` of weight arrays in its jaxpr — asserted by tests).
+    This is what ``runtime.prepare(params, cfg, placement)`` calls for a
+    mesh placement; the per-call compat paths run it inside the call
+    (where the ``device_put`` is traced), which is exactly the per-call
+    placement cost the compile/execute split removes."""
+    cells = tuple(cells)
+    n = mesh.shape[axis]
+    placed = []
+    for l, c in enumerate(cells):
+        H = c["u"].shape[0]
+        assert H % n == 0 and 3 * H % n == 0, (H, n)
+        mode = cfg.layer_matvec_mode(l)
+        view = _layer_view(c, mode)
+        spec = _layer_spec(mode, axis)
+        placed.append({k: jax.device_put(v, NamedSharding(mesh, spec[k]))
+                       for k, v in view.items()})
+    return tuple(placed)
+
+
+def _layer_dims(layer_args) -> list:
+    """Hidden size per layer, read off the prepared views."""
+    return [(a["u3"].shape[0] if "u3" in a else a["u"].shape[0])
+            for a in layer_args]
+
+
 def gru_stack_sequence_sharded_impl(params, h0s, xs, *, mesh: Mesh,
                                     cfg: GRUConfig, axis: str = "model",
                                     return_all: bool = False, mask=None):
@@ -227,31 +285,34 @@ def gru_stack_sequence_sharded_impl(params, h0s, xs, *, mesh: Mesh,
     hidden state and republish their output sequence with a single
     all-gather amortized over all T steps. Modes mix freely per layer
     (``cfg.layer_matvec_modes``); requires ``H_l % axis_size == 0``.
+
+    Compat path: builds the gate-major views and places them PER CALL
+    (``prepare_sharded_layers``); hot paths should prepare once via
+    ``runtime.prepare(params, cfg, placement)`` and go through
+    ``gru_stack_sequence_sharded_prepared``.
     """
+    cells = stack_cell_params(params, cfg)
+    layer_args = prepare_sharded_layers(cells, cfg, mesh=mesh, axis=axis)
+    return gru_stack_sequence_sharded_prepared(
+        layer_args, h0s, xs, mesh=mesh, cfg=cfg, axis=axis,
+        return_all=return_all, mask=mask)
+
+
+def gru_stack_sequence_sharded_prepared(layer_args, h0s, xs, *, mesh: Mesh,
+                                        cfg: GRUConfig, axis: str = "model",
+                                        return_all: bool = False, mask=None):
+    """The execute stage of the sharded sequence backend: ONE shard_map
+    over PRE-PLACED per-layer weight views (``prepare_sharded_layers``
+    output, i.e. ``StackParams.placed``). Contains no gate-major restacking
+    and no ``device_put`` — placement already happened at prepare time."""
     n = mesh.shape[axis]
     B, T, X = xs.shape
-    cells = stack_cell_params(params, cfg)
-    L = len(cells)
+    L = len(layer_args)
     modes = [cfg.layer_matvec_mode(l) for l in range(L)]
-    dims = [c["u"].shape[0] for c in cells]
+    dims = _layer_dims(layer_args)
     for H in dims:
         assert H % n == 0 and 3 * H % n == 0, (H, n)
-
-    layer_args, layer_specs = [], []
-    for c, mode in zip(cells, modes):
-        Xl = c["w"].shape[0]
-        H = c["u"].shape[0]
-        if mode == "rowwise":
-            # gate-major views: each shard owns rows of ALL THREE gates
-            layer_args.append({"w3": c["w"].reshape(Xl, 3, H),
-                               "u3": c["u"].reshape(H, 3, H),
-                               "b3": c["b"].reshape(3, H)})
-            layer_specs.append({"w3": P(None, None, axis),
-                                "u3": P(None, None, axis),
-                                "b3": P(None, axis)})
-        else:  # cascade: contraction sharded, everything else replicated
-            layer_args.append({"w": c["w"], "u": c["u"], "b": c["b"]})
-            layer_specs.append({"w": P(), "u": P(axis, None), "b": P()})
+    layer_specs = sharded_layer_specs(cfg, L, axis)
 
     def f(xs_full, h0s_full, largs, *margs):
         idx = jax.lax.axis_index(axis)
@@ -344,12 +405,85 @@ def gru_stack_sequence_sharded_impl(params, h0s, xs, *, mesh: Mesh,
     )(xs, tuple(h0s), tuple(layer_args), *margs)
 
 
+# ---------------------------------------------------------------------------
+# sharded decode: ONE persistent shard_map step over pre-sharded weights
+# ---------------------------------------------------------------------------
+
+def gru_stack_decode_sharded_prepared(layer_args, hs, x, *, mesh: Mesh,
+                                      cfg: GRUConfig, axis: str = "model"):
+    """One serve step through the whole stack inside ONE shard_map, against
+    pre-placed weights (the executor's ``sharded_decode`` backend).
+
+    ``hs``: per-layer (B, H) replicated states; ``x``: (B, X) the new
+    token's features. Returns the per-layer new states, replicated — the
+    same cache layout the replicated decode backends use, so the serving
+    engine can switch backends without converting state.
+
+    Per layer it is exactly one sequence step of the matching mode:
+    rowwise shards compute their xp rows + finished output rows and the
+    step's trailing all-gather republishes ``h'`` — which is again the
+    replicated input the next layer's row-sharded input GEMM needs, so
+    layer boundaries add zero collectives; cascade layers psum partial
+    sums and pay one gather to republish their (single-step) output.
+    """
+    n = mesh.shape[axis]
+    L = len(layer_args)
+    modes = [cfg.layer_matvec_mode(l) for l in range(L)]
+    dims = _layer_dims(layer_args)
+    for H in dims:
+        assert H % n == 0 and 3 * H % n == 0, (H, n)
+    layer_specs = sharded_layer_specs(cfg, L, axis)
+
+    def f(x_full, hs_full, largs):
+        idx = jax.lax.axis_index(axis)
+        cur = x_full.astype(jnp.float32)               # (B, ·) replicated
+        outs = []
+        for l in range(L):
+            H, a = dims[l], largs[l]
+            if modes[l] == "rowwise":
+                B = cur.shape[0]
+                xp = jnp.einsum("bx,xgh->bgh", cur,
+                                a["w3"].astype(jnp.float32)).reshape(B, -1)
+                h2 = _rowwise_step(hs_full[l].astype(jnp.float32), xp,
+                                   a["u3"].reshape(H, -1),
+                                   a["b3"].reshape(-1), idx,
+                                   axis=axis, n=n, variant=cfg.variant)
+            else:
+                xp = cur @ a["w"].astype(jnp.float32)  # (B, 3H) replicated
+                Hl = H // n
+                h_shard = jax.lax.dynamic_slice_in_dim(
+                    hs_full[l].astype(jnp.float32), idx * Hl, Hl, 1)
+                h2_l = _cascade_step(h_shard, xp, a["u"], a["b"],
+                                     axis=axis, variant=cfg.variant)
+                h2 = jax.lax.all_gather(h2_l, axis, axis=1, tiled=True)
+            outs.append(h2)
+            cur = h2                                   # same-token threading
+        return tuple(outs)
+
+    return shard_map(
+        f, mesh=mesh,
+        in_specs=(P(), tuple(P() for _ in range(L)), tuple(layer_specs)),
+        out_specs=tuple(P() for _ in range(L)), check_vma=False,
+    )(x, tuple(hs), tuple(layer_args))
+
+
+def gru_stack_decode_sharded_impl(params, hs, x, *, mesh: Mesh,
+                                  cfg: GRUConfig, axis: str = "model"):
+    """Compat decode wrapper: per-call weight placement + the prepared
+    step. Hot paths prepare once (``runtime.prepare``) instead."""
+    cells = stack_cell_params(params, cfg)
+    layer_args = prepare_sharded_layers(cells, cfg, mesh=mesh, axis=axis)
+    return gru_stack_decode_sharded_prepared(layer_args, hs, x, mesh=mesh,
+                                             cfg=cfg, axis=axis)
+
+
 def gru_stack_sequence_sharded(params, h0s, xs, *, mesh: Mesh, cfg: GRUConfig,
                                axis: str = "model", return_all: bool = False,
                                mask=None):
-    """DEPRECATED entry point — use ``repro.core.runtime.plan(cfg,
-    mesh=...)``, which dispatches sequence work to this shard_map program
-    whenever a mesh is supplied. Kept as a thin, bitwise-equal shim."""
+    """DEPRECATED entry point — use ``repro.core.runtime.compile(cfg,
+    placement=...)``, which dispatches sequence work to this shard_map
+    program whenever a mesh is supplied. Kept as a thin, bitwise-equal
+    shim."""
     from repro.core.gru import _warn_deprecated
     _warn_deprecated("gru_stack_sequence_sharded")
     return gru_stack_sequence_sharded_impl(params, h0s, xs, mesh=mesh,

@@ -1,62 +1,82 @@
-"""One GRU executor: capability-dispatched backends behind ``plan()``/run.
+"""One GRU executor: a two-stage compile/execute API over capability-
+dispatched backends.
 
 The paper's core idea is a single workload-distribution framework that maps
 GRU matvecs onto whichever compute fabric is available (AIE rows vs. the PL
-cascade). This module is that framework's TPU translation: every execution
-strategy the repo has grown — the XLA structural-mode scan, the fused
-Pallas stack kernels, the per-layer Pallas chain, the shard_map row/cascade
-programs — registers here as a *backend* with declared capabilities, and
-``plan()`` picks the cheapest legal one per call instead of each caller
-hard-wiring an entry point.
+cascade) — and, crucially, that weights are placed on the fabric ONCE and
+every subsequent inference runs against resident rows. This module is that
+framework's TPU translation, split the same way the hardware flow is:
 
-Capability table (see ``BackendSpec``; costs are dispatch-preference hints,
-lower = faster):
+* ``compile(cfg, batch=..., seq=..., placement=...) -> GRUExecutable`` —
+  the ahead-of-time step. Resolves WHERE the stack runs (a ``Placement``:
+  host, or a mesh + sharding rule) and WHICH backend serves each op, from
+  a cost model that prefers *measured* per-shape latency over the static
+  preference table. Executables are memoized: the same key returns the
+  SAME object, so its callables are jit-stable.
+* ``prepare(params, cfg, placement) -> StackParams`` — the weight-placement
+  step. All device placement happens HERE, once: for a mesh placement the
+  sharded backends' gate-major reshapes and ``device_put``s run up front
+  (``StackParams.placed``), and the fused kernels' stacked weight views are
+  built once (``StackParams.stacked``) — a traced execute call touches no
+  weight-placement ops at all.
+* ``executable.sequence/prefill/decode(...)`` — the execute stage: pure
+  compute against placement-resident params.
 
-=============  ====  ======  ====  ==========  ======  ========  ====
-backend        mask  hetero  mesh  return_all  decode  sequence  cost
-=============  ====  ======  ====  ==========  ======  ========  ====
-pallas_fused   yes   no      no    yes         yes     yes       10
-pallas_chain   yes   yes     no    yes         yes     yes       20
-xla            yes   yes     no    yes         yes     yes       30
-sharded        yes   yes     REQ   yes         no      yes       5
-=============  ====  ======  ====  ==========  ======  ========  ====
+Capability table (see ``BackendSpec``; ``cost`` is the STATIC dispatch
+fallback, lower = faster; a loaded :class:`CostModel` replaces these
+numbers with measured per-(depth, batch, H) latency whenever every legal
+candidate is covered):
+
+==============  ====  ======  ====  ==========  ======  ========  ====
+backend         mask  hetero  mesh  return_all  decode  sequence  cost
+==============  ====  ======  ====  ==========  ======  ========  ====
+pallas_fused    yes   no      no    yes         yes     yes       10
+pallas_chain    yes   yes     no    yes         yes     yes       20
+xla             yes   yes     no    yes         yes     yes       30
+sharded         yes   yes     REQ   yes         no      yes       5
+sharded_decode  n/a   yes     REQ   n/a         yes     no        200
+==============  ====  ======  ====  ==========  ======  ========  ====
 
 * ``mask``: a (B, T) length mask streams through the backend (bucketed
-  left-padded prefill stays bitwise-identical to unpadded prompts — every
-  backend here claims ``mask_exact``). The fused Pallas kernels stream the
-  mask in-kernel (one (1, B) slice per grid step); no XLA fallback remains.
+  left-padded prefill stays bitwise-identical to unpadded — every sequence
+  backend here claims ``mask_exact``). Decode steps carry no time axis, so
+  the column does not apply to ``sharded_decode``.
 * ``hetero``: heterogeneous ``cfg.layer_dims`` (the fused kernel needs one
   uniform VMEM block shape; the chain runs one kernel per layer instead of
   raising or silently degrading).
-* ``mesh`` = REQ: the backend *requires* a mesh and is strongly preferred
-  for sequence work whenever one is passed (providing a mesh is an explicit
-  request to use it). Decode under a mesh falls back to a replicated
-  single-host backend: one recurrent step is latency-bound and per-step
-  collectives would dominate.
+* ``mesh`` = REQ: the backend *requires* a mesh. Providing a mesh is an
+  explicit request to use it for SEQUENCE work (shard_map backends win
+  outright). Decode is latency-bound: by static cost it stays on a
+  replicated single-host backend (per-step collectives usually dominate),
+  but ``sharded_decode`` (one persistent shard_map step over pre-sharded
+  weights) is a full candidate — a calibration file that measures it
+  faster flips the choice per shape.
 
 Dispatch: ``cfg.backend`` is a preference — ``"xla"`` (default) and
-``"pallas"`` pin their family when legal; ``"auto"`` picks purely by cost.
-An illegal preference (e.g. pallas + hetero dims) falls through to the
-cheapest legal backend in the same family, then overall — never an error
-as long as ANY backend can serve the call.
+``"pallas"`` pin their family when legal, an exact backend name (e.g.
+``"pallas_chain"``, ``"sharded_decode"``) pins that one backend, and
+``"auto"`` picks purely by cost: measured (CostModel) when available for
+every legal candidate, else the static table. An illegal preference falls
+through to the cheapest legal backend — never an error as long as ANY
+backend can serve the call.
 
-Surfaces:
+Cost calibration: ``benchmarks/decode_latency.py --emit-costs`` writes
+``BENCH_backend_costs.json``; :func:`load_cost_model` /
+:func:`set_cost_model` install it (or it is picked up automatically from
+``$REPRO_GRU_COSTS`` / ``./BENCH_backend_costs.json``). A missing or
+corrupt file degrades to the static table — selection is then identical
+to the pre-CostModel executor.
 
-* ``prepare(params, cfg, mesh=None) -> StackParams`` — ONE-time param
-  normalization subsuming ``stack_cell_params`` / ``prepare_stacked_cells``
-  / the model API's ``prepare_params``: accepts every historical layout and
-  precomputes the stacked-weight views the fused kernels consume.
-* ``plan(cfg, *, batch, seq, mesh, mask, mode) -> ExecPlan`` — memoized;
-  the returned ``prefill`` / ``decode`` / ``sequence`` callables are stable
-  objects (jit-friendly: re-planning the same key returns the SAME plan)
-  and reference-exact w.r.t. ``gru_stack_reference``.
-* ``sequence(...)`` / ``decode(...)`` — plan-and-run conveniences; the
-  deprecated entry points in ``repro.core.gru`` are thin shims over these.
+Legacy surface: ``plan()`` (one-shot resolve) and the ``ExecPlan`` name
+are deprecated shims over ``compile()``/``GRUExecutable`` — same memoized
+objects, bitwise-equal results, one DeprecationWarning per process.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional, Tuple
+import json
+import os
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 
@@ -65,12 +85,47 @@ from repro.core import gru as gru_core
 
 
 # ---------------------------------------------------------------------------
+# placement: WHERE a stack runs (resolved at compile/prepare time)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    """Where weights live and execution happens.
+
+    ``mesh=None`` is the host placement (single-device, replicated).
+    With a mesh, ``axis`` names the mesh axis the sharded backends
+    partition over (U output rows for rowwise layers, the contraction dim
+    for cascade layers — the rule itself is per-layer via
+    ``cfg.layer_matvec_modes``). Hashable: it is part of the executable
+    cache key, so distinct meshes compile distinct executables.
+    """
+    mesh: object = None
+    axis: str = "model"
+
+    @property
+    def is_host(self) -> bool:
+        return self.mesh is None
+
+
+HOST = Placement()
+
+
+def _as_placement(p) -> Placement:
+    """Normalize None | Mesh | Placement -> Placement."""
+    if p is None:
+        return HOST
+    if isinstance(p, Placement):
+        return p
+    return Placement(mesh=p)
+
+
+# ---------------------------------------------------------------------------
 # backend registry
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
 class Capabilities:
-    """What a backend can legally execute (checked by ``plan()``)."""
+    """What a backend can legally execute (checked by ``compile()``)."""
     supports_mask: bool = False      # (B,T) length mask streams through
     supports_hetero_dims: bool = False   # per-layer hidden sizes may differ
     supports_mesh: bool = False      # True = REQUIRES a mesh (shard_map)
@@ -84,10 +139,11 @@ class Capabilities:
 class BackendSpec:
     """One registered execution strategy.
 
-    ``sequence_fn(sp, h0s, xs, *, cfg, return_all, mask, mesh)`` returns
-    ``(per-layer finals tuple, last-layer states | None)``;
-    ``decode_fn(sp, hs, x, *, cfg)`` returns the per-layer new states.
-    ``cost`` is a relative per-call dispatch hint (lower = preferred).
+    ``sequence_fn(sp, h0s, xs, *, cfg, return_all, mask, placement)``
+    returns ``(per-layer finals tuple, last-layer states | None)``;
+    ``decode_fn(sp, hs, x, *, cfg, placement)`` returns the per-layer new
+    states. ``cost`` is the STATIC relative dispatch hint (lower =
+    preferred), used whenever no measured cost covers the call.
     """
     name: str
     caps: Capabilities
@@ -111,7 +167,7 @@ def backends() -> Dict[str, BackendSpec]:
 
 def _ensure_backends() -> None:
     """Make sure the kernels package had a chance to register its backends
-    (it does so on import; plan() imports it on first use otherwise, so
+    (it does so on import; compile() imports it on first use otherwise, so
     dispatch never depends on import order)."""
     if "pallas_fused" not in _REGISTRY:
         from repro.kernels.gru_sequence import ops as seq_ops
@@ -131,73 +187,237 @@ class StackParams:
     ``stacked``: the fused kernels' precomputed device-side weight stacks
     (``{"u","w_deep","b"}``) — present for uniform hidden sizes, ``None``
     for heterogeneous stacks (the fused backend doesn't apply there).
+    ``placed``: the sharded backends' per-layer gate-major weight views,
+    ``device_put`` onto ``placement.mesh`` up front — present only for a
+    mesh placement. ``placement`` (aux data) records where ``placed``
+    lives, so a matching ``prepare()`` is a free passthrough.
     """
     cells: tuple
     stacked: Optional[dict] = None
+    placed: Optional[tuple] = None
+    placement: Placement = HOST
 
     def tree_flatten(self):
-        return (self.cells, self.stacked), None
+        return (self.cells, self.stacked, self.placed), (self.placement,)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children)
+        return cls(*children, placement=aux[0])
 
     @property
     def dims(self) -> Tuple[int, ...]:
         return tuple(c["u"].shape[0] for c in self.cells)
 
 
-def prepare(params, cfg: GRUConfig, mesh=None, *,
+def prepare(params, cfg: GRUConfig, placement=None, *,
             want_stacked: bool = True) -> StackParams:
-    """One-time normalization of ANY accepted param layout to StackParams.
+    """One-time normalization of ANY accepted param layout to a
+    placement-resident StackParams.
 
     Subsumes ``stack_cell_params`` (layout normalization),
     ``prepare_stacked_cells`` (fused-kernel weight stacking) and the model
     API's ``prepare_params`` (serving prep). Accepts ``StackParams``
-    (passthrough), ``{"cells": ...}``, ``{"cell": ...}``, a bare
-    ``{w,u,b}`` cell, a per-layer sequence, and dicts already carrying a
-    precomputed ``"stacked_cells"`` entry (reused, not recomputed). Do this
-    ONCE outside the per-step jit so decode traces never restack weights.
+    (passthrough; upgraded in place-of if the placement changed),
+    ``{"cells": ...}``, ``{"cell": ...}``, a bare ``{w,u,b}`` cell, a
+    per-layer sequence, and dicts already carrying a precomputed
+    ``"stacked_cells"`` entry (reused, not recomputed). Do this ONCE
+    outside the per-step jit so decode traces never restack weights.
 
-    ``want_stacked=False`` skips computing the fused-kernel weight stacks
-    (plan callables pass it when the resolved backend never reads them, so
-    an XLA-dispatched call doesn't pay L stacking ops per trace).
-    ``mesh`` is accepted for signature stability (pre-sharding hook); the
-    sharded backend currently shards inside its shard_map.
+    ``placement`` (a :class:`Placement`, a raw mesh, or None = host):
+    with a mesh, ALL device placement happens here — the sharded backends'
+    per-layer gate-major reshapes and ``device_put``s run now, so a traced
+    execute call contains no weight placement (asserted by the test
+    suite via jaxpr inspection). ``want_stacked=False`` skips the fused
+    kernels' weight stacks (an executable whose resolved backends never
+    read them passes it).
     """
+    pl_ = _as_placement(placement)
     if isinstance(params, StackParams):
-        return params
+        if pl_.is_host or params.placement == pl_:
+            return params
+        placed = _place_layers(params.cells, cfg, pl_)
+        return StackParams(cells=params.cells, stacked=params.stacked,
+                           placed=placed, placement=pl_)
     stacked = params.get("stacked_cells") if isinstance(params, dict) else None
+    placed = params.get("placed_cells") if isinstance(params, dict) else None
     cells = gru_core.stack_cell_params(params, cfg)
     dims = tuple(c["u"].shape[0] for c in cells)
     if (want_stacked and stacked is None
             and all(d == dims[0] for d in dims)):
         from repro.kernels.gru_sequence import ops as seq_ops
         stacked = seq_ops.prepare_stacked_cells(cells)
-    return StackParams(cells=cells, stacked=stacked)
+    if pl_.is_host:
+        placed = None
+    else:
+        if placed is not None and not _placed_on(placed, pl_):
+            placed = None                # stale views from another mesh
+        if placed is None:
+            # no pre-placed views for THIS mesh: place now (traced callers
+            # pay this per call — the cost the compile/execute split moves
+            # into prepare())
+            placed = _place_layers(cells, cfg, pl_)
+    return StackParams(cells=cells, stacked=stacked, placed=placed,
+                       placement=HOST if pl_.is_host else pl_)
+
+
+def _place_layers(cells, cfg: GRUConfig, pl_: Placement) -> tuple:
+    from repro.core import rowparallel
+    return rowparallel.prepare_sharded_layers(cells, cfg, mesh=pl_.mesh,
+                                              axis=pl_.axis)
+
+
+def _placed_on(placed, pl_: Placement) -> bool:
+    """Best-effort check that pre-placed views actually live on this
+    placement's mesh, so a dict prepared for mesh A is not fed into a
+    shard_map over mesh B (which would silently re-transfer the weights
+    inside the traced call). Concrete arrays expose their committed
+    NamedSharding; tracers (an already-traced hot path) are trusted."""
+    try:
+        arr = next(iter(placed[0].values()))
+        sh = arr.sharding
+    except Exception:  # noqa: BLE001 - tracer or exotic layout: trust it
+        return True
+    from jax.sharding import NamedSharding
+    if isinstance(sh, NamedSharding):
+        return sh.mesh == pl_.mesh
+    return True
+
+
+# ---------------------------------------------------------------------------
+# measured cost model (static table fallback)
+# ---------------------------------------------------------------------------
+
+class CostModel:
+    """Measured per-backend latency, keyed (backend, op, depth, hidden)
+    with linear interpolation over batch.
+
+    Loaded from the ``BENCH_backend_costs.json`` artifact that
+    ``benchmarks/decode_latency.py --emit-costs`` writes. Lookups outside
+    the measured batch range clamp to the nearest measured batch (the
+    relative backend order at the edge is the best available signal).
+    ``lookup`` returns None for any (backend, op, depth, hidden) bucket
+    with no measurements; selection only trusts the model when EVERY
+    legal candidate is covered (µs and static preference ints are not
+    comparable units).
+    """
+
+    def __init__(self, table: Dict[tuple, List[tuple]], source: str = "",
+                 error: Optional[str] = None):
+        self._table = table
+        self.source = source
+        self.error = error
+
+    def __len__(self) -> int:
+        return sum(len(v) for v in self._table.values())
+
+    @classmethod
+    def from_entries(cls, entries, source: str = "") -> "CostModel":
+        table: Dict[tuple, List[tuple]] = {}
+        for e in entries:
+            key = (str(e["backend"]), str(e.get("op", "decode")),
+                   int(e["depth"]), int(e["hidden_dim"]))
+            table.setdefault(key, []).append(
+                (int(e["batch"]), float(e["p50_us"])))
+        for v in table.values():
+            v.sort()
+        return cls(table, source=source)
+
+    @classmethod
+    def load(cls, path) -> "CostModel":
+        """Tolerant load: a missing, unreadable, or schema-mismatched file
+        yields an EMPTY model (every lookup misses -> static fallback)."""
+        try:
+            with open(path) as f:
+                data = json.load(f)
+            if data.get("bench") != "gru_backend_costs":
+                raise ValueError("not a gru_backend_costs artifact")
+            return cls.from_entries(data["entries"], source=str(path))
+        except Exception as e:  # noqa: BLE001 - degrade, never break dispatch
+            return cls({}, source=str(path),
+                       error=f"{type(e).__name__}: {e}")
+
+    def lookup(self, backend: str, op: str, *, depth: int, batch: int,
+               hidden: int) -> Optional[float]:
+        pts = self._table.get((backend, op, int(depth), int(hidden)))
+        if not pts:
+            return None
+        if batch <= pts[0][0]:
+            return pts[0][1]
+        if batch >= pts[-1][0]:
+            return pts[-1][1]
+        for (b0, c0), (b1, c1) in zip(pts, pts[1:]):
+            if b0 <= batch <= b1:
+                return c0 + (batch - b0) / (b1 - b0) * (c1 - c0)
+        return None  # pragma: no cover - unreachable on a sorted table
+
+
+_COST_MODEL: Optional[CostModel] = None
+_COST_MODEL_LOADED = False
+_COST_EPOCH = 0  # part of the executable cache key: new model, new plans
+
+
+def set_cost_model(model: Optional[CostModel]) -> None:
+    """Install a calibration model (None re-arms the lazy default load).
+    Bumps the cost epoch, so already-memoized executables are not reused
+    with stale costs — and evicts them: keys from older epochs can never
+    be returned again, so keeping them would only leak in a long-lived
+    server that periodically reloads calibration."""
+    global _COST_MODEL, _COST_MODEL_LOADED, _COST_EPOCH
+    _COST_MODEL = model
+    _COST_MODEL_LOADED = model is not None
+    _COST_EPOCH += 1
+    _EXEC_CACHE.clear()
+
+
+def load_cost_model(path) -> CostModel:
+    """Load ``path`` (tolerantly) and install it. Returns the model."""
+    model = CostModel.load(path)
+    set_cost_model(model)
+    return model
+
+
+def cost_model() -> CostModel:
+    """The active calibration model. On first use, loads
+    ``$REPRO_GRU_COSTS`` (default ``./BENCH_backend_costs.json``) if
+    present; otherwise an empty model (pure static dispatch)."""
+    global _COST_MODEL, _COST_MODEL_LOADED
+    if not _COST_MODEL_LOADED:
+        path = os.environ.get("REPRO_GRU_COSTS", "BENCH_backend_costs.json")
+        _COST_MODEL = (CostModel.load(path) if os.path.exists(path)
+                       else CostModel({}, source=path))
+        _COST_MODEL_LOADED = True
+    return _COST_MODEL
 
 
 # ---------------------------------------------------------------------------
 # built-in backends: xla scan + sharded shard_map programs
 # ---------------------------------------------------------------------------
 
-def _xla_sequence(sp, h0s, xs, *, cfg, return_all, mask, mesh):
+def _xla_sequence(sp, h0s, xs, *, cfg, return_all, mask, placement):
     return gru_core.gru_stack_sequence_xla(sp.cells, h0s, xs, cfg=cfg,
                                            return_all=return_all, mask=mask)
 
 
-def _xla_decode(sp, hs, x, *, cfg):
+def _xla_decode(sp, hs, x, *, cfg, placement):
     return gru_core.gru_stack_decode_xla(sp.cells, hs, x, cfg=cfg)
 
 
-def _sharded_sequence(sp, h0s, xs, *, cfg, return_all, mask, mesh):
+def _sharded_sequence(sp, h0s, xs, *, cfg, return_all, mask, placement):
     from repro.core import rowparallel
-    out = rowparallel.gru_stack_sequence_sharded_impl(
-        sp.cells, h0s, xs, mesh=mesh, cfg=cfg, return_all=return_all,
-        mask=mask)
+    sp = prepare(sp, cfg, placement, want_stacked=False)
+    out = rowparallel.gru_stack_sequence_sharded_prepared(
+        sp.placed, h0s, xs, mesh=placement.mesh, cfg=cfg,
+        axis=placement.axis, return_all=return_all, mask=mask)
     if return_all:
         return out
     return out, None
+
+
+def _sharded_decode(sp, hs, x, *, cfg, placement):
+    from repro.core import rowparallel
+    sp = prepare(sp, cfg, placement, want_stacked=False)
+    return rowparallel.gru_stack_decode_sharded_prepared(
+        sp.placed, hs, x, mesh=placement.mesh, cfg=cfg, axis=placement.axis)
 
 
 register_backend(BackendSpec(
@@ -216,9 +436,20 @@ register_backend(BackendSpec(
     cost=5,
     sequence_fn=_sharded_sequence, decode_fn=None))
 
+register_backend(BackendSpec(
+    name="sharded_decode",
+    caps=Capabilities(supports_mask=False, supports_hetero_dims=True,
+                      supports_mesh=True, return_all=False, decode=True,
+                      sequence=False),
+    # statically DISpreferred: one recurrent step is latency-bound and its
+    # per-step collectives usually dominate — replicated decode wins unless
+    # a calibration file MEASURES the sharded step faster at this shape.
+    cost=200,
+    sequence_fn=None, decode_fn=_sharded_decode))
+
 
 # ---------------------------------------------------------------------------
-# plan(): capability filtering + cost choice
+# compile(): capability filtering + (measured | static) cost choice
 # ---------------------------------------------------------------------------
 
 class NoCapableBackend(ValueError):
@@ -226,34 +457,55 @@ class NoCapableBackend(ValueError):
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
-class ExecPlan:
-    """A resolved execution plan: metadata + jit-stable callables.
+class GRUExecutable:
+    """A compiled GRU workload: resolved placement + backends + jit-stable
+    callables.
 
     ``sequence(params, h0s, xs, *, return_all=False, mask=None)`` returns
     ``(per-layer finals, last-layer states | None)``; ``prefill`` is the
     finals-only view of the same backend; ``decode(params, hs, x)`` returns
     the per-layer new states. ``params`` may be any layout ``prepare``
-    accepts (pass a prepared ``StackParams`` on hot paths).
+    accepts — pass ``executable.prepare(params)`` output on hot paths so
+    the traced calls are pure compute against placement-resident weights.
+    ``cost_source`` records whether backend choice came from measured
+    calibration (``"measured"``) or the static table (``"static"``).
     """
     cfg: GRUConfig
     batch: Optional[int]
     seq: Optional[int]
     masked: bool
-    mesh: object
+    placement: Placement
     mode: str
     sequence_backend: Optional[str]
     decode_backend: Optional[str]
     mask_exact: bool
+    cost_source: str = "static"
     sequence: Callable = dataclasses.field(repr=False, default=None)
     prefill: Callable = dataclasses.field(repr=False, default=None)
     decode: Callable = dataclasses.field(repr=False, default=None)
+
+    @property
+    def mesh(self):
+        return self.placement.mesh
+
+    def prepare(self, params) -> StackParams:
+        """Placement-resident params for THIS executable: device placement
+        and weight stacking happen now, never inside the traced calls."""
+        names = {self.sequence_backend, self.decode_backend}
+        needs_mesh = any(s is not None and s.caps.supports_mesh
+                         for s in (_REGISTRY.get(n) for n in names if n))
+        return prepare(params, self.cfg,
+                       self.placement if needs_mesh else None,
+                       want_stacked="pallas_fused" in names)
 
     def describe(self) -> dict:
         return {"sequence_backend": self.sequence_backend,
                 "decode_backend": self.decode_backend,
                 "masked": self.masked, "mask_exact": self.mask_exact,
-                "mesh": self.mesh is not None, "mode": self.mode,
-                "batch": self.batch, "seq": self.seq}
+                "mesh": self.placement.mesh is not None,
+                "axis": self.placement.axis, "mode": self.mode,
+                "batch": self.batch, "seq": self.seq,
+                "cost_source": self.cost_source}
 
 
 def _hetero(cfg: GRUConfig) -> bool:
@@ -281,131 +533,211 @@ def _legal(spec: BackendSpec, *, op: str, masked: bool, hetero: bool,
     return True
 
 
-def _cost(spec: BackendSpec, cfg: GRUConfig, *, op: str, mesh) -> int:
-    cost = spec.cost
+def _measured_costs(legal, cfg: GRUConfig, *, op: str,
+                    batch: Optional[int]) -> Optional[Dict[str, float]]:
+    """Measured µs per candidate, or None when the model cannot cover the
+    call (unknown batch, heterogeneous dims, or ANY uncovered candidate —
+    µs and static ints are not comparable, so it is all or nothing)."""
+    if batch is None or _hetero(cfg):
+        return None
+    model = cost_model()
+    if not len(model):
+        return None
+    dims = cfg.resolved_layer_dims
+    out = {}
+    for s in legal:
+        us = model.lookup(s.name, op, depth=len(dims), batch=batch,
+                          hidden=dims[0])
+        if us is None:
+            return None
+        out[s.name] = us
+    return out
+
+
+def _rank(spec: BackendSpec, cfg: GRUConfig, *, op: str, mesh,
+          measured: Optional[float]) -> tuple:
+    """Selection key, lexicographic: platform legality > mesh request
+    (sequence ops: a provided mesh is an explicit ask for shard_map) >
+    ``cfg.backend`` preference (family or exact name) > cost (measured µs
+    when available, else the static table) > name (determinism)."""
+    plat = 0
     if spec.name.startswith("pallas") and jax.default_backend() not in (
             "cpu", "tpu"):
         # the Pallas kernels target TPU (pltpu VMEM scratch) and run
         # interpret-mode on CPU; on any other platform they cannot lower,
-        # so "auto" must never pick them over the XLA scan.
-        cost += 1_000_000
-    if mesh is not None:
-        # a mesh was explicitly provided: backends that actually use it win
-        # sequence work outright; the rest run replicated (penalized evenly,
-        # so relative single-host preference is preserved for decode).
-        cost += -10_000 if spec.caps.supports_mesh else 100
+        # so dispatch must never pick them over the XLA scan.
+        plat = 1
+    mesh_rank = 0
+    if mesh is not None and op != "decode":
+        mesh_rank = 0 if spec.caps.supports_mesh else 1
     pref = getattr(cfg, "backend", "xla")
-    if pref == "xla" and spec.name == "xla":
-        cost -= 1_000
+    fam = 1
+    if pref == spec.name:
+        fam = 0                          # exact backend-name pin
+    elif pref == "xla" and spec.name == "xla":
+        fam = 0
     elif pref == "pallas" and spec.name.startswith("pallas"):
-        cost -= 1_000
-    return cost
+        fam = 0
+    cost = float(spec.cost) if measured is None else measured
+    return (plat, mesh_rank, fam, cost, spec.name)
 
 
-def _select(op: str, cfg: GRUConfig, *, masked: bool, mesh,
-            need_return_all: bool = False) -> Optional[BackendSpec]:
+def _select(op: str, cfg: GRUConfig, *, masked: bool, placement: Placement,
+            batch: Optional[int] = None,
+            need_return_all: bool = False):
+    """-> (winning spec | None, "measured" | "static")."""
     hetero = _hetero(cfg)
+    mesh = placement.mesh
     legal = [s for s in _REGISTRY.values()
              if _legal(s, op=op, masked=masked, hetero=hetero, mesh=mesh,
                        need_return_all=need_return_all)]
     if not legal:
-        return None
-    return min(legal, key=lambda s: (_cost(s, cfg, op=op, mesh=mesh), s.name))
+        return None, "static"
+    measured = _measured_costs(legal, cfg, op=op, batch=batch)
+    spec = min(legal, key=lambda s: _rank(
+        s, cfg, op=op, mesh=mesh,
+        measured=None if measured is None else measured[s.name]))
+    return spec, ("measured" if measured is not None else "static")
 
 
-_PLAN_CACHE: Dict[tuple, ExecPlan] = {}
+_EXEC_CACHE: Dict[tuple, GRUExecutable] = {}
 
 
-def plan(cfg: GRUConfig, *, batch: Optional[int] = None,
-         seq: Optional[int] = None, mesh=None, mask: bool = False,
-         mode: str = "serve") -> ExecPlan:
-    """Resolve the fastest legal backend(s) for a GRU workload.
+def compile(cfg: GRUConfig, *, batch: Optional[int] = None,
+            seq: Optional[int] = None, placement=None, mask: bool = False,
+            mode: str = "serve") -> GRUExecutable:
+    """Ahead-of-time resolve: the fastest legal backend(s) for a GRU
+    workload at these shapes, on this placement.
 
-    ``mask`` declares whether calls will carry a (B, T) length mask (the
-    array itself is a run-time argument). ``mode``: ``"prefill"`` /
-    ``"sequence"`` require a sequence backend, ``"decode"`` a decode
-    backend, ``"serve"`` both. Plans are memoized — the same key returns
-    the SAME ExecPlan object, so its callables are stable across calls and
-    jit caches keyed on them never retrace.
+    ``placement``: a :class:`Placement`, a raw mesh (wrapped with the
+    default axis), or None (host). ``mask`` declares whether calls will
+    carry a (B, T) length mask (the array itself is a run-time argument).
+    ``mode``: ``"prefill"`` / ``"sequence"`` require a sequence backend,
+    ``"decode"`` a decode backend, ``"serve"`` both. Executables are
+    memoized — the same key (cfg, shapes, placement, cost epoch) returns
+    the SAME object, so its callables are stable across calls and jit
+    caches keyed on them never retrace; distinct placements (e.g. two
+    different meshes) compile distinct executables.
     """
     _ensure_backends()
-    key = (cfg, batch, seq, mesh, bool(mask), mode)
-    hit = _PLAN_CACHE.get(key)
+    pl_ = _as_placement(placement)
+    masked = bool(mask)
+    key = (cfg, batch, seq, pl_, masked, mode, _COST_EPOCH)
+    hit = _EXEC_CACHE.get(key)
     if hit is not None:
         return hit
 
-    seq_spec = _select("sequence", cfg, masked=bool(mask), mesh=mesh)
+    seq_spec, seq_src = _select("sequence", cfg, masked=masked,
+                                placement=pl_, batch=batch)
     # a finals-only backend may win the primary selection; return_all=True
     # calls then fall through to the cheapest fully-capable backend instead
     # of failing inside the backend (the silent-capability-gap failure mode
-    # this module exists to eliminate). Both specs are fixed at plan time,
-    # so the callables stay jit-stable.
-    seq_spec_ra = (seq_spec if seq_spec is not None
-                   and seq_spec.caps.return_all
-                   else _select("sequence", cfg, masked=bool(mask),
-                                mesh=mesh, need_return_all=True))
-    dec_spec = _select("decode", cfg, masked=False, mesh=mesh)
+    # this module exists to eliminate). Both specs are fixed at compile
+    # time, so the callables stay jit-stable.
+    if seq_spec is not None and seq_spec.caps.return_all:
+        seq_spec_ra = seq_spec
+    else:
+        seq_spec_ra, _ = _select("sequence", cfg, masked=masked,
+                                 placement=pl_, batch=batch,
+                                 need_return_all=True)
+    dec_spec, dec_src = _select("decode", cfg, masked=False, placement=pl_,
+                                batch=batch)
     if mode in ("prefill", "sequence", "serve") and seq_spec is None:
         raise NoCapableBackend(
             f"no sequence backend for cfg.backend={cfg.backend!r} "
-            f"mask={mask} dims={cfg.resolved_layer_dims} mesh={mesh}")
+            f"mask={mask} dims={cfg.resolved_layer_dims} mesh={pl_.mesh}")
     if mode in ("decode", "serve") and dec_spec is None:
         raise NoCapableBackend(
             f"no decode backend for cfg.backend={cfg.backend!r} "
             f"dims={cfg.resolved_layer_dims}")
 
     def run_sequence(params, h0s, xs, *, return_all=False, mask=None):
-        if mask is not None and not key[4]:
-            raise ValueError("plan was built with mask=False; re-plan with "
-                             "mask=True to pass a length mask")
+        if mask is not None and not masked:
+            raise ValueError("executable was compiled with mask=False; "
+                             "re-compile with mask=True to pass a length "
+                             "mask")
         spec = seq_spec if not return_all else seq_spec_ra
         if spec is None:
             raise NoCapableBackend(
                 f"no return_all-capable sequence backend for "
                 f"cfg.backend={cfg.backend!r} mask={mask is not None} "
-                f"dims={cfg.resolved_layer_dims} mesh={mesh}")
+                f"dims={cfg.resolved_layer_dims} mesh={pl_.mesh}")
         sp = prepare(params, cfg,
+                     pl_ if spec.caps.supports_mesh else None,
                      want_stacked=spec.name == "pallas_fused")
         return spec.sequence_fn(sp, tuple(h0s), xs, cfg=cfg,
                                 return_all=return_all, mask=mask,
-                                mesh=mesh)
+                                placement=pl_)
 
     def run_prefill(params, h0s, xs, *, mask=None):
         return run_sequence(params, h0s, xs, mask=mask)[0]
 
     def run_decode(params, hs, x):
         sp = prepare(params, cfg,
+                     pl_ if dec_spec.caps.supports_mesh else None,
                      want_stacked=dec_spec.name == "pallas_fused")
-        return dec_spec.decode_fn(sp, tuple(hs), x, cfg=cfg)
+        return dec_spec.decode_fn(sp, tuple(hs), x, cfg=cfg, placement=pl_)
 
-    p = ExecPlan(
-        cfg=cfg, batch=batch, seq=seq, masked=bool(mask), mesh=mesh,
+    relevant = ([seq_src] if mode in ("prefill", "sequence") else
+                [dec_src] if mode == "decode" else [seq_src, dec_src])
+    exe = GRUExecutable(
+        cfg=cfg, batch=batch, seq=seq, masked=masked, placement=pl_,
         mode=mode,
         sequence_backend=seq_spec.name if seq_spec else None,
         decode_backend=dec_spec.name if dec_spec else None,
         mask_exact=seq_spec.caps.mask_exact if seq_spec else True,
+        cost_source="measured" if "measured" in relevant else "static",
         sequence=run_sequence, prefill=run_prefill,
         decode=run_decode if dec_spec else None)
-    _PLAN_CACHE[key] = p
-    return p
+    _EXEC_CACHE[key] = exe
+    return exe
+
+
+def clear_cache() -> None:
+    """Drop all memoized executables (tests; not needed in serving)."""
+    _EXEC_CACHE.clear()
 
 
 # ---------------------------------------------------------------------------
-# plan-and-run conveniences (the legacy entry points shim onto these)
+# compile-and-run conveniences (the legacy entry points shim onto these)
 # ---------------------------------------------------------------------------
 
 def sequence(params, h0s, xs, *, cfg: GRUConfig, return_all: bool = False,
              mask=None, mesh=None):
-    """Run a depth-L stack over xs (B,T,X) with the planned backend.
+    """Run a depth-L stack over xs (B,T,X) with the compiled backend.
     Returns (per-layer finals, last-layer states | None)."""
-    p = plan(cfg, batch=xs.shape[0] if xs.ndim >= 3 else None,
-             seq=xs.shape[-2], mesh=mesh, mask=mask is not None,
-             mode="sequence")
-    return p.sequence(params, h0s, xs, return_all=return_all, mask=mask)
+    exe = compile(cfg, batch=xs.shape[0] if xs.ndim >= 3 else None,
+                  seq=xs.shape[-2], placement=mesh, mask=mask is not None,
+                  mode="sequence")
+    return exe.sequence(params, h0s, xs, return_all=return_all, mask=mask)
 
 
 def decode(params, hs, x, *, cfg: GRUConfig, mesh=None):
-    """One serve step through the stack with the planned backend.
+    """One serve step through the stack with the compiled backend.
     Returns the per-layer new hidden states."""
-    p = plan(cfg, batch=x.shape[0], mesh=mesh, mode="decode")
-    return p.decode(params, hs, x)
+    exe = compile(cfg, batch=x.shape[0], placement=mesh, mode="decode")
+    return exe.decode(params, hs, x)
+
+
+# ---------------------------------------------------------------------------
+# deprecated one-shot surface: plan() / ExecPlan
+# ---------------------------------------------------------------------------
+
+def plan(cfg: GRUConfig, *, batch: Optional[int] = None,
+         seq: Optional[int] = None, mesh=None, mask: bool = False,
+         mode: str = "serve") -> GRUExecutable:
+    """DEPRECATED one-shot resolve — thin shim over :func:`compile` (the
+    two-stage compile/execute API). Returns the SAME memoized executable
+    ``compile`` would, so results are bitwise-identical; warns once per
+    process."""
+    gru_core._warn_deprecated("runtime.plan")
+    return compile(cfg, batch=batch, seq=seq, placement=mesh, mask=mask,
+                   mode=mode)
+
+
+def __getattr__(name: str):
+    if name == "ExecPlan":
+        # deprecated class name: plans ARE executables now
+        gru_core._warn_deprecated("runtime.ExecPlan")
+        return GRUExecutable
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -4,7 +4,7 @@ from repro.kernels.gru_sequence.kernel import (gru_sequence_kernel,
                                                gru_stack_sequence_kernel)
 
 # Plug the Pallas backends into the GRU executor's capability registry
-# (repro.core.runtime); runtime.plan() also triggers this lazily.
+# (repro.core.runtime); runtime.compile() also triggers this lazily.
 ops.register_runtime_backends()
 
 __all__ = ["ops", "ref", "gru_sequence_kernel", "gru_stack_sequence_kernel",

@@ -24,9 +24,14 @@ grid step of the same fused-stack structure, advancing a whole batch of
 per-layer hidden states through all L layers for ONE token. The grid axis
 is the BATCH (tiled), not time — weights stay pinned via constant
 index_maps while successive batch tiles stream through, so wave size
-scales past a single VMEM block without re-fetching a byte of U/W. This
-is the paper's figure of merit (single-step latency) with the AIE
-weight-residency story intact on TPU.
+scales past a single VMEM block without re-fetching a byte of U/W. The
+batch tiles are mutually independent, so the grid axis is declared
+``dimension_semantics=("parallel",)``: on a megacore TPU the Mosaic
+compiler may split the tiles across both cores instead of iterating them
+sequentially (time grids, by contrast, are ``"arbitrary"`` — the hidden
+state carried in scratch makes them order-dependent). This is the paper's
+figure of merit (single-step latency) with the AIE weight-residency story
+intact on TPU.
 
 Both sequence kernels take an optional (T, B) length MASK, streamed
 through the grid one (1, B) slice per step next to the input projection:
@@ -283,7 +288,9 @@ def gru_stack_decode_kernel(h: jax.Array, x_proj: jax.Array, u: jax.Array,
 
     Grid = batch tiles (``batch_block`` rows each, 0 = auto): all weights
     use constant index_maps so the Pallas pipeline fetches them from HBM
-    once regardless of how many tiles stream through.
+    once regardless of how many tiles stream through. The tiles carry no
+    cross-tile state, so the axis is marked ``parallel`` (megacore: big
+    waves may run tiles on both TPU cores per chip).
     """
     L, B, H = h.shape
     Bt = batch_block or _pick_batch_block(B)
@@ -292,6 +299,8 @@ def gru_stack_decode_kernel(h: jax.Array, x_proj: jax.Array, u: jax.Array,
     return pl.pallas_call(
         functools.partial(_decode_kernel, variant=variant, num_layers=L),
         grid=(B // Bt,),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel",)),
         in_specs=[
             pl.BlockSpec((L, Bt, H), lambda i: (0, i, 0)),     # this batch tile
             pl.BlockSpec((Bt, 3 * H), lambda i: (i, 0)),       # its Wx slab

@@ -4,7 +4,7 @@ These wrappers are the implementation of the ``pallas_fused`` and
 ``pallas_chain`` backends of :mod:`repro.core.runtime` — registered via
 :func:`register_runtime_backends` (called on package import). Nothing
 outside ``repro.core`` / ``repro.kernels`` should import them directly
-(CI enforces the boundary); go through ``runtime.plan()``.
+(CI enforces the boundary); go through ``runtime.compile()``.
 
 The layer-0 input projection (decoupled W.x) is one MXU GEMM outside the
 kernel; the kernel owns the recurrent path — for the fused variant, ALL
@@ -176,28 +176,28 @@ _REGISTERED = False
 def register_runtime_backends() -> None:
     """Idempotently register ``pallas_fused`` / ``pallas_chain`` with the
     GRU executor. Called on ``repro.kernels.gru_sequence`` import and by
-    ``runtime.plan()`` on first use (whichever happens first)."""
+    ``runtime.compile()`` on first use (whichever happens first)."""
     global _REGISTERED
     if _REGISTERED:
         return
     from repro.core import runtime
 
-    def fused_seq(sp, h0s, xs, *, cfg, return_all, mask, mesh):
+    def fused_seq(sp, h0s, xs, *, cfg, return_all, mask, placement):
         return gru_stack_sequence_pallas(sp.cells, tuple(h0s), xs, cfg=cfg,
                                          return_all=return_all, mask=mask,
                                          stacked=sp.stacked)
 
-    def fused_dec(sp, hs, x, *, cfg):
+    def fused_dec(sp, hs, x, *, cfg, placement):
         return gru_stack_decode_pallas(sp.cells, tuple(hs), x, cfg=cfg,
                                        stacked=sp.stacked)
 
-    def chain_seq(sp, h0s, xs, *, cfg, return_all, mask, mesh):
+    def chain_seq(sp, h0s, xs, *, cfg, return_all, mask, placement):
         return gru_stack_sequence_pallas_chain(sp.cells, tuple(h0s), xs,
                                                cfg=cfg,
                                                return_all=return_all,
                                                mask=mask)
 
-    def chain_dec(sp, hs, x, *, cfg):
+    def chain_dec(sp, hs, x, *, cfg, placement):
         return gru_stack_decode_pallas_chain(sp.cells, tuple(hs), x, cfg=cfg)
 
     runtime.register_backend(runtime.BackendSpec(

@@ -38,10 +38,15 @@ def main(argv=None):
     p.add_argument("--vary-prompt", action="store_true",
                    help="gru: ragged prompt lengths (exercises buckets+mask)")
     p.add_argument("--max-new", type=int, default=16)
-    p.add_argument("--gru-backend", choices=("xla", "pallas", "auto"),
+    p.add_argument("--gru-backend",
+                   choices=("xla", "pallas", "auto", "pallas_fused",
+                            "pallas_chain"),
                    default=None,
                    help="executor backend preference (pallas = fused "
-                        "kernels; auto = cheapest legal backend)")
+                        "kernel family; an exact name pins that backend; "
+                        "auto = cheapest legal backend — measured per-"
+                        "shape costs when BENCH_backend_costs.json is "
+                        "loaded, the static table otherwise)")
     p.add_argument("--bucket-min", type=int, default=8)
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
@@ -84,8 +89,11 @@ def main(argv=None):
           f"{len(engine._prefill_jit)} bucket jits)")
     if cfg.family == "gru":
         pf = sorted(set(engine.prefill_backends))
-        print(f"executor plan: prefill={'/'.join(pf) or '-'} "
-              f"decode={engine.decode_backend}")
+        steps = stats.get("decode_backend_steps", {})
+        attributed = ",".join(f"{k}:{v}" for k, v in sorted(steps.items()))
+        print(f"executor: prefill={'/'.join(pf) or '-'} "
+              f"decode={engine.decode_backend} "
+              f"decode_steps=[{attributed or '-'}]")
     return done
 
 

@@ -83,7 +83,7 @@ def _gru_api():
     return SimpleNamespace(
         specs=gru_lm.lm_specs,
         prepare_params=gru_lm.prepare_params,      # one-time serving prep
-        plan=gru_lm.serve_plan,                    # executor plan introspection
+        executable=gru_lm.serve_executable,        # compiled-plan introspection
         loss_fn=lambda p, cfg, batch, ctx: gru_lm.loss_fn(p, cfg, batch, ctx=ctx),
         forward=lambda p, cfg, batch, ctx: gru_lm.forward(p, cfg, batch, ctx=ctx),
         prefill=lambda p, cfg, batch, ctx: gru_lm.prefill(p, cfg, batch, ctx=ctx),

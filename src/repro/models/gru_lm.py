@@ -8,12 +8,14 @@ the paper's latency-measurement path; the cache carries one hidden state
 per layer.
 
 All GRU execution routes through the capability-dispatched executor
-(``repro.core.runtime``): ``prefill``/``decode_step`` ask ``plan()`` for
-the fastest legal backend (fused Pallas stack, per-layer Pallas chain,
-XLA scan, or the sharded shard_map program when a mesh is given), and
-``serve_plan`` exposes the resolved plan's metadata so the serving engine
-can record which backend actually runs (e.g. that a masked bucketed
-prefill executes the Pallas kernel, not an XLA fallback).
+(``repro.core.runtime``) via its two-stage compile/execute API:
+``prefill``/``decode_step`` ask ``compile()`` for a memoized
+``GRUExecutable`` (fused Pallas stack, per-layer Pallas chain, XLA scan,
+or the sharded shard_map programs when the ``ShardCtx`` carries a mesh —
+the ctx mesh becomes the executable's ``Placement``), and
+``serve_executable`` exposes the resolved executable so the serving
+engine can record which backend actually runs (e.g. that a masked
+bucketed prefill executes the Pallas kernel, not an XLA fallback).
 """
 from __future__ import annotations
 
@@ -50,27 +52,38 @@ def loss_fn(params: dict, cfg: ModelConfig, batch: dict, *,
 
 # --- serving: the paper's latency path ---------------------------------------
 
-def prepare_params(params: dict, cfg: ModelConfig) -> dict:
-    """One-time serving prep, delegated to ``runtime.prepare``: attach the
-    stacked-weight views the fused kernels consume (``"stacked_cells"``)
-    so the per-step decode trace never restacks U/W/b. No-op for
-    heterogeneous layer sizes (the fused path doesn't apply) or
-    already-prepared params."""
-    sp = runtime.prepare(params, cfg.gru)
+def _placement(ctx: ShardCtx) -> runtime.Placement:
+    """The ctx mesh resolved to an executor Placement (host if none)."""
+    return (runtime.HOST if ctx.mesh is None
+            else runtime.Placement(mesh=ctx.mesh))
+
+
+def prepare_params(params: dict, cfg: ModelConfig,
+                   ctx: ShardCtx = ShardCtx()) -> dict:
+    """One-time serving prep, delegated to ``runtime.prepare`` with the
+    ctx's placement: attach the stacked-weight views the fused kernels
+    consume (``"stacked_cells"``) so the per-step decode trace never
+    restacks U/W/b, and — under a mesh — perform the sharded backends'
+    gate-major reshapes and ``device_put``s up front
+    (``"placed_cells"``), so traced execute calls do no weight placement.
+    No-op for already-prepared params."""
+    sp = runtime.prepare(params, cfg.gru, _placement(ctx))
     out = {"cells": sp.cells, "head": params["head"]}
     if sp.stacked is not None:
         out["stacked_cells"] = sp.stacked
+    if sp.placed is not None:
+        out["placed_cells"] = sp.placed
     return out
 
 
-def serve_plan(cfg: ModelConfig, *, batch: int, seq: int = None,
-               masked: bool = False, mode: str = "serve",
-               mesh=None) -> runtime.ExecPlan:
-    """The executor plan a serving call with these shapes will use (same
+def serve_executable(cfg: ModelConfig, *, batch: int, seq: int = None,
+                     masked: bool = False, mode: str = "serve",
+                     mesh=None) -> runtime.GRUExecutable:
+    """The executable a serving call with these shapes will use (same
     memoized object ``prefill``/``decode_step`` resolve internally) —
-    lets the engine assert/record backend choices without re-planning."""
-    return runtime.plan(cfg.gru, batch=batch, seq=seq, mesh=mesh,
-                        mask=masked, mode=mode)
+    lets the engine assert/record backend choices without re-compiling."""
+    return runtime.compile(cfg.gru, batch=batch, seq=seq, placement=mesh,
+                           mask=masked, mode=mode)
 
 
 def cache_specs(cfg: ModelConfig, batch: int, capacity: int = 0) -> dict:
@@ -98,9 +111,10 @@ def decode_step(params: dict, cfg: ModelConfig, cache: dict, x: jax.Array, *,
     per-layer cache states are stacked device-side and fed straight to the
     kernel, no host round trips on the latency-critical path; hetero
     stacks run the per-layer Pallas chain. Params prepared by
-    ``prepare_params`` carry pre-stacked weights so the step also does no
-    per-token weight restacking."""
-    p = runtime.plan(cfg.gru, batch=x.shape[0], mode="decode")
+    ``prepare_params`` carry pre-stacked (and, under a mesh, pre-placed)
+    weights so the step also does no per-token weight restacking."""
+    p = runtime.compile(cfg.gru, batch=x.shape[0], mode="decode",
+                        placement=_placement(ctx))
     hs = p.decode(params, cache["h"], x)
     hs = tuple(constrain(h, ("batch", "act_gates"), ctx) for h in hs)
     logits = hs[-1] @ params["head"]["w"] + params["head"]["b"]
@@ -120,8 +134,9 @@ def prefill(params: dict, cfg: ModelConfig, batch: dict, *,
     B = xs.shape[0]
     mask = batch.get("mask")
     h0s = gru_core.stack_h0(cfg.gru, B, xs.dtype)
-    p = runtime.plan(cfg.gru, batch=B, seq=xs.shape[1],
-                     mask=mask is not None, mode="prefill")
+    p = runtime.compile(cfg.gru, batch=B, seq=xs.shape[1],
+                        mask=mask is not None, mode="prefill",
+                        placement=_placement(ctx))
     finals = p.prefill(params, h0s, xs, mask=mask)
     logits = (finals[-1] @ params["head"]["w"]
               + params["head"]["b"]).astype(jnp.float32)

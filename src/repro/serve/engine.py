@@ -31,12 +31,18 @@ cost stays one prefill, not one per request. Finished streams therefore
 free capacity immediately instead of padding the wave to the slowest
 request.
 
-GRU execution dispatches through the executor (``repro.core.runtime``):
-the engine records the plan's chosen backend per prefill
-(``prefill_backends``) and for the wave's decode loop
-(``decode_backend``), so tests/operators can assert e.g. that a masked
-bucketed prefill ran the fused Pallas kernel rather than an XLA
-fallback.
+GRU execution dispatches through the executor (``repro.core.runtime``)
+via its compile/execute API: params are prepared ONCE against the ctx's
+placement (weight stacking and — under a mesh — device placement happen
+at engine construction, never on the hot path), and the engine records
+the compiled executable's chosen backend per prefill
+(``prefill_backends``) and PER DECODE STEP (``decode_backends``, aligned
+with ``step_times``). Decode attribution is keyed by the decode jit each
+step ran under and frozen at that jit's trace time (the trace embeds the
+backend; later cost-model changes don't retrace it), so ``latency_stats``
+attributes every step to the backend that ACTUALLY ran — including when
+continuous-batching admits change the decode key — rather than the one
+resolved once at wave start.
 
 The GRU family (the paper's own model) serves FEATURE VECTORS instead of
 tokens: a request's ``prompt`` is a float (S, X) feature window, and each
@@ -99,15 +105,19 @@ class ServeEngine:
         self.bucket_min = bucket_min
         self.api = mapi.get_api(cfg)
         prep = getattr(self.api, "prepare_params", None)
-        self.params = prep(params, cfg) if prep else params
+        self.params = prep(params, cfg, ctx) if prep else params
         self._prefill_jit = {}           # keyed by prompt-length bucket
         self._decode_jit = {}            # keyed by decode batch shape
+        self._decode_plan_backends = {}  # backend traced into each decode
+                                         # jit (frozen at trace time)
         self._decode_warm = set()        # keys whose compile step has passed
         self._scatter_jit = {}           # keyed by admit-batch size
         self.step_times: List[float] = []
         self.prefill_times: List[float] = []
         self.prefill_backends: List[str] = []   # executor choice per prefill
-        self.decode_backend: Optional[str] = None
+        self.decode_backend: Optional[str] = None    # latest resolved
+        self.decode_backends: List[str] = []    # per recorded step (aligned
+                                                # with step_times)
 
     # -- jit caches ---------------------------------------------------------
 
@@ -208,14 +218,15 @@ class ServeEngine:
         """One bucketed prefill of up to max_batch prompts; returns cache."""
         Sb = bucket_len(max(p.shape[0] for p in prompts), self.bucket_min)
         feats, mask = self._gru_prefill_batch(prompts, Sb)
-        planner = getattr(self.api, "plan", None)
-        if planner is not None:          # record the executor's choice
-            # mirrors the plan key gru_lm.prefill resolves for this call:
-            # the engine always sends the slot-shaped batch WITH a mask,
-            # so (batch, seq, masked=True) is the key the model call uses
-            plan = planner(self.cfg, batch=self.max_batch, seq=Sb,
-                           masked=True, mode="prefill")
-            self.prefill_backends.append(plan.sequence_backend)
+        compiler = getattr(self.api, "executable", None)
+        if compiler is not None:         # record the executor's choice
+            # mirrors the compile key gru_lm.prefill resolves for this
+            # call: the engine always sends the slot-shaped batch WITH a
+            # mask, so (batch, seq, masked=True) is the key the model uses
+            exe = compiler(self.cfg, batch=self.max_batch, seq=Sb,
+                           masked=True, mode="prefill",
+                           mesh=self.ctx.mesh)
+            self.prefill_backends.append(exe.sequence_backend)
         prefill = self._get_prefill(Sb)
         t0 = time.perf_counter()
         logits, cache = prefill(self.params, {"features": jnp.asarray(feats),
@@ -245,12 +256,15 @@ class ServeEngine:
         for i, s in enumerate(cohort):
             slots[i] = s
 
-        planner = getattr(self.api, "plan", None)
-        if planner is not None:
-            self.decode_backend = planner(self.cfg, batch=Bs,
-                                          mode="decode").decode_backend
         key = (Bs, X)
         decode = self._get_decode(key)
+        # attribution is frozen per decode-jit key AT TRACE TIME (below,
+        # _decode_backend_for): the jitted step embeds whichever backend
+        # the executor resolved when it first traced, and later cost-model
+        # epoch bumps do NOT retrace it — so a fresh compile() mid-wave
+        # could only MIS-attribute. Steps are recorded under the key they
+        # ran with; if admits ever change the decode key (live-batch
+        # resizing), the new key resolves its own backend on first use.
         nxt = np.zeros((Bs, X), np.float32)
         while any(s is not None for s in slots):
             for j, s in enumerate(slots):
@@ -263,7 +277,8 @@ class ServeEngine:
             t0 = time.perf_counter()
             logits, cache = decode(self.params, cache, jnp.asarray(nxt))
             logits.block_until_ready()
-            self._record_step(key, time.perf_counter() - t0)
+            self._record_step(key, time.perf_counter() - t0,
+                              self._decode_backend_for(key))
             cls = np.asarray(jnp.argmax(logits, -1))
             freed = []
             for j, s in enumerate(slots):
@@ -295,25 +310,56 @@ class ServeEngine:
 
     # -- stats --------------------------------------------------------------
 
-    def _record_step(self, key: tuple, dt: float) -> None:
+    def _decode_backend_for(self, key: tuple) -> Optional[str]:
+        """The executor backend the decode jit for ``key`` traced with —
+        resolved ONCE per key at first use (i.e. at trace time, in the
+        same cost-model epoch) and frozen thereafter, because the jitted
+        step itself never retraces on epoch bumps. This is what makes
+        ``decode_backends`` attribution reflect the backend that ACTUALLY
+        ran, not whatever a fresh compile() would pick today. Also tracks
+        the latest choice on ``self.decode_backend``."""
+        if key not in self._decode_plan_backends:
+            compiler = getattr(self.api, "executable", None)
+            self._decode_plan_backends[key] = (
+                None if compiler is None
+                else compiler(self.cfg, batch=key[0], mode="decode",
+                              mesh=self.ctx.mesh).decode_backend)
+        backend = self._decode_plan_backends[key]
+        if backend is not None:
+            self.decode_backend = backend
+        return backend
+
+    def _record_step(self, key: tuple, dt: float,
+                     backend: Optional[str] = None) -> None:
         """Record one decode-step latency, excluding each decode jit's
         FIRST call (its compile) so the tail percentiles reflect steady
         state, not compilation — per key, since every batch shape compiles
-        separately."""
+        separately. ``backend`` attributes the step to the executor
+        backend that actually ran it (``decode_backends`` stays aligned
+        with ``step_times``)."""
         if key in self._decode_warm:
             self.step_times.append(dt)
+            self.decode_backends.append(backend)
         else:
             self._decode_warm.add(key)
 
     def latency_stats(self) -> Dict[str, float]:
         """Per-step decode latency distribution (tail-bound view: the
         paper's constraint is a deadline, not an average) plus prefill
-        timings. Compile steps are excluded per decode-jit key at record
-        time; prefill timings INCLUDE each bucket's compile (cold-start
-        cost is part of the prefill story)."""
+        timings and ``decode_backend_steps`` (recorded steps per executor
+        backend — attribution follows the backend each step's decode jit
+        actually traced with). Compile
+        steps are excluded per decode-jit key at record time; prefill
+        timings INCLUDE each bucket's compile (cold-start cost is part of
+        the prefill story)."""
         ts = np.array(self.step_times or [0.0])
         pf = np.array(self.prefill_times or [0.0])
-        return {"mean_s": float(ts.mean()),
+        per_backend: Dict[str, int] = {}
+        for b in self.decode_backends:
+            if b is not None:
+                per_backend[b] = per_backend.get(b, 0) + 1
+        return {"decode_backend_steps": per_backend,
+                "mean_s": float(ts.mean()),
                 "p50_s": float(np.percentile(ts, 50)),
                 "p90_s": float(np.percentile(ts, 90)),
                 "p99_s": float(np.percentile(ts, 99)),

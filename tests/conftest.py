@@ -29,3 +29,14 @@ def run_multidev(body: str, n_devices: int = 4, timeout: int = 420) -> str:
 @pytest.fixture(scope="session")
 def multidev():
     return run_multidev
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _hermetic_gru_costs():
+    """Pin the GRU executor to the STATIC cost table for the whole suite:
+    a stray BENCH_backend_costs.json in the cwd (e.g. from a local
+    benchmark run) must not flip backend choices under test. Tests that
+    exercise calibration install their own model via set_cost_model."""
+    from repro.core import runtime
+    runtime.set_cost_model(runtime.CostModel({}, source="<tests: static>"))
+    yield

@@ -196,6 +196,34 @@ def test_serve_engine_gru_continuous_batching():
     assert stats["steps"] >= max(budgets)
 
 
+def test_serve_engine_decode_backend_attribution():
+    """latency_stats attributes every recorded decode step to the backend
+    that actually ran it: attribution is keyed by the decode jit the step
+    ran under (frozen at that jit's trace time — the trace embeds the
+    backend) instead of trusting a wave-start snapshot, and
+    ``decode_backends`` stays aligned with ``step_times`` across
+    continuous-batching admits."""
+    cfg = get_smoke_config("gru-jet-deep")
+    A = mapi.get_api(cfg)
+    params = init_params(A.specs(cfg), jax.random.key(0), cfg.param_dtype)
+    engine = ServeEngine(cfg, params, ShardCtx(), max_batch=2, bucket_min=8)
+    rng = np.random.default_rng(0)
+    reqs = [Request(prompt=rng.normal(size=(3, 5)).astype(np.float32),
+                    max_new_tokens=n) for n in (2, 5, 3, 4)]
+    done = engine.generate(reqs)
+    assert all(r.done for r in done)
+    stats = engine.latency_stats()
+    # one attribution per recorded step, consistent with the executor's
+    # resolved decode backend for the (fixed-slot) batch shape
+    assert len(engine.decode_backends) == stats["steps"]
+    from repro.models import gru_lm
+    expect = gru_lm.serve_executable(cfg, batch=2,
+                                     mode="decode").decode_backend
+    assert engine.decode_backend == expect
+    assert set(engine.decode_backends) == {expect}
+    assert stats["decode_backend_steps"] == {expect: stats["steps"]}
+
+
 def test_serve_engine_gru_batched_admits():
     """When several slots free on the SAME decode step, the engine runs
     ONE bucketed prefill for all admitted requests (ROADMAP item): equal

@@ -1,11 +1,13 @@
 """The GRU executor (repro.core.runtime): dispatch matrix, prepare(),
-deprecation shims, and plan metadata.
+deprecation shims, and executable metadata.
 
 The dispatch-matrix suite is the redesign's contract: every
 (mask on/off x depth 1-3 x hetero/uniform dims x mesh/none x
 prefill/decode) combination must resolve to a backend and match
 ``gru_stack_reference`` to tolerance — bitwise (padded+masked vs
-unpadded) wherever the plan claims ``mask_exact``.
+unpadded) wherever the executable claims ``mask_exact``. Compile/execute
+(Placement, CostModel, executable caching) specifics live in
+``test_gru_compile.py``.
 """
 import dataclasses
 import warnings
@@ -56,7 +58,7 @@ def test_dispatch_matrix(depth, hetero, masked, mode):
     params = init_params(gru.gru_stack_specs(cfg), jax.random.key(0))
     xs, h0s = _data(cfg)
     ref, _ = gru.gru_stack_reference(params, h0s, xs)
-    p = runtime.plan(cfg, batch=2, seq=6, mask=masked, mode=mode)
+    p = runtime.compile(cfg, batch=2, seq=6, mask=masked, mode=mode)
     if mode == "decode":
         assert p.decode_backend is not None
         hs = h0s
@@ -74,7 +76,7 @@ def test_dispatch_matrix(depth, hetero, masked, mode):
         finals, _ = p.sequence(params, h0s, xs_pad, mask=mask)
         if p.mask_exact:
             # the plan CLAIMS padding invariance: hold it to bitwise
-            un = runtime.plan(cfg, batch=2, seq=6, mode=mode)
+            un = runtime.compile(cfg, batch=2, seq=6, mode=mode)
             f_un, _ = un.sequence(params, h0s, xs)
             for a, b in zip(f_un, finals):
                 np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
@@ -85,14 +87,17 @@ def test_dispatch_matrix(depth, hetero, masked, mode):
 def test_dispatch_matrix_mesh(multidev):
     """The mesh column of the matrix: sequence work dispatches to the
     shard_map backend (mask and hetero dims included, both bitwise
-    padding-invariant); decode under a mesh resolves to a replicated
-    single-host backend instead of failing."""
+    padding-invariant); decode under a mesh statically resolves to a
+    replicated single-host backend, while the ``sharded_decode``
+    candidate (persistent shard_map step) is reference-exact and becomes
+    selectable when a calibration measures it faster."""
     multidev("""
 import jax, jax.numpy as jnp, numpy as np
 from repro.configs.base import GRUConfig
 from repro.core import gru, runtime
 from repro.core.params import init_params
 mesh = jax.make_mesh((4,), ("model",))
+placement = runtime.Placement(mesh=mesh)
 X, B, T, P = 6, 2, 7, 3
 xs = jax.random.normal(jax.random.key(1), (B, T, X))
 xs_pad = jnp.pad(xs, ((0, 0), (P, 0), (0, 0)))
@@ -103,12 +108,13 @@ for dims in ((16, 16), (16, 8)):
                         layer_matvec_modes=("rowwise", "cascade"))
         params = init_params(gru.gru_stack_specs(cfg), jax.random.key(0))
         h0s = gru.stack_h0(cfg, B)
-        p = runtime.plan(cfg, batch=B, seq=T, mesh=mesh, mask=masked,
-                         mode="prefill")
+        p = runtime.compile(cfg, batch=B, seq=T, placement=placement,
+                            mask=masked, mode="prefill")
         assert p.sequence_backend == "sharded", p.sequence_backend
         if masked:
             finals, _ = p.sequence(params, h0s, xs_pad, mask=mask)
-            un = runtime.plan(cfg, batch=B, seq=T, mesh=mesh, mode="prefill")
+            un = runtime.compile(cfg, batch=B, seq=T, placement=placement,
+                                 mode="prefill")
             f_un, _ = un.sequence(params, h0s, xs)
             for a, b in zip(f_un, finals):
                 np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
@@ -118,8 +124,43 @@ for dims in ((16, 16), (16, 8)):
         for a, b in zip(finals, ref):
             np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                        rtol=3e-5, atol=3e-6)
-        pd = runtime.plan(cfg, batch=B, mesh=mesh, mode="decode")
+        # decode column: static costs keep decode replicated ...
+        pd = runtime.compile(cfg, batch=B, placement=placement, mode="decode")
         assert pd.decode_backend in ("xla", "pallas_fused", "pallas_chain")
+        # ... and the sharded_decode candidate is reference-exact (runs
+        # the per-shape-calibratable persistent shard_map step, hetero
+        # dims and mixed modes included)
+        sp = runtime.prepare(params, cfg, placement, want_stacked=False)
+        spec = runtime.backends()["sharded_decode"]
+        hs = h0s
+        for t in range(T):
+            hs = spec.decode_fn(sp, tuple(hs), xs[:, t], cfg=cfg,
+                                placement=placement)
+        for a, b in zip(hs, ref):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-4, atol=1e-5)
+# a calibration that measures the sharded step fastest flips the decode
+# choice (per shape) — and the flipped executable matches the replicated
+# one numerically
+cfg = GRUConfig(input_dim=X, layer_dims=(16, 16), backend="auto",
+                layer_matvec_modes=("rowwise", "cascade"))
+params = init_params(gru.gru_stack_specs(cfg), jax.random.key(0))
+h0s = gru.stack_h0(cfg, B)
+runtime.set_cost_model(runtime.CostModel.from_entries(
+    [{"backend": b, "op": "decode", "depth": 2, "batch": B,
+      "hidden_dim": 16, "p50_us": 5.0 if b == "sharded_decode" else 50.0}
+     for b in ("xla", "pallas_fused", "pallas_chain", "sharded_decode")]))
+pd = runtime.compile(cfg, batch=B, placement=placement, mode="decode")
+assert pd.decode_backend == "sharded_decode", pd.decode_backend
+assert pd.cost_source == "measured"
+got = pd.decode(params, h0s, xs[:, 0])
+runtime.set_cost_model(None)
+rep = runtime.compile(cfg, batch=B, placement=placement, mode="decode")
+assert rep.decode_backend != "sharded_decode"
+want = rep.decode(params, h0s, xs[:, 0])
+for a, b in zip(got, want):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-4, atol=1e-5)
 print("PASS")
 """, timeout=560)
 
@@ -128,35 +169,39 @@ print("PASS")
 # plan semantics
 # ---------------------------------------------------------------------------
 
-def test_plan_picks_expected_backends():
+def test_compile_picks_expected_backends():
     """Cost/preference dispatch: auto picks the fused kernel when legal,
-    the chain for hetero dims; explicit prefs pin their family; masked
-    calls no longer push pallas configs onto the XLA scan."""
+    the chain for hetero dims; explicit prefs pin their family (or, for an
+    exact backend name, that one backend); masked calls no longer push
+    pallas configs onto the XLA scan."""
     u3 = _cfg(3, hetero=False)
     h3 = _cfg(3, hetero=True)
-    assert runtime.plan(u3, mode="serve").sequence_backend == "pallas_fused"
-    assert runtime.plan(u3, mode="serve").decode_backend == "pallas_fused"
-    assert runtime.plan(h3, mode="serve").sequence_backend == "pallas_chain"
-    assert runtime.plan(h3, mode="serve").decode_backend == "pallas_chain"
-    assert runtime.plan(u3, mask=True,
-                        mode="prefill").sequence_backend == "pallas_fused"
+    assert runtime.compile(u3, mode="serve").sequence_backend == "pallas_fused"
+    assert runtime.compile(u3, mode="serve").decode_backend == "pallas_fused"
+    assert runtime.compile(h3, mode="serve").sequence_backend == "pallas_chain"
+    assert runtime.compile(h3, mode="serve").decode_backend == "pallas_chain"
+    assert runtime.compile(u3, mask=True,
+                           mode="prefill").sequence_backend == "pallas_fused"
     x3 = _cfg(3, hetero=False, backend="xla")
-    assert runtime.plan(x3, mode="serve").sequence_backend == "xla"
+    assert runtime.compile(x3, mode="serve").sequence_backend == "xla"
     p3 = _cfg(3, hetero=False, backend="pallas")
-    assert runtime.plan(p3, mask=True,
-                        mode="prefill").sequence_backend == "pallas_fused"
+    assert runtime.compile(p3, mask=True,
+                           mode="prefill").sequence_backend == "pallas_fused"
+    # an exact backend name pins that backend, overriding cost order
+    c3 = _cfg(3, hetero=False, backend="pallas_chain")
+    assert runtime.compile(c3, mode="serve").decode_backend == "pallas_chain"
     # a pallas preference with hetero dims falls through to the chain
     # (historically: silent XLA decode / a raise) instead of erroring
     ph = _cfg(3, hetero=True, backend="pallas")
-    assert runtime.plan(ph, mode="decode").decode_backend == "pallas_chain"
+    assert runtime.compile(ph, mode="decode").decode_backend == "pallas_chain"
 
 
-def test_plan_is_memoized_and_jit_stable():
-    """The same plan key returns the SAME ExecPlan object (stable
+def test_compile_is_memoized_and_jit_stable():
+    """The same compile key returns the SAME GRUExecutable object (stable
     callables -> jit caches keyed on them never retrace)."""
     cfg = _cfg(2, hetero=False)
-    a = runtime.plan(cfg, batch=2, seq=6, mode="serve")
-    b = runtime.plan(cfg, batch=2, seq=6, mode="serve")
+    a = runtime.compile(cfg, batch=2, seq=6, mode="serve")
+    b = runtime.compile(cfg, batch=2, seq=6, mode="serve")
     assert a is b and a.sequence is b.sequence and a.decode is b.decode
     params = runtime.prepare(
         init_params(gru.gru_stack_specs(cfg), jax.random.key(0)), cfg)
@@ -177,7 +222,7 @@ def test_plan_return_all_falls_through_to_capable_backend():
 
     calls = []
 
-    def finals_only(sp, h0s_, xs_, *, cfg, return_all, mask, mesh):
+    def finals_only(sp, h0s_, xs_, *, cfg, return_all, mask, placement):
         assert not return_all
         calls.append("finals_only")
         return gru.gru_stack_sequence_xla(sp.cells, h0s_, xs_, cfg=cfg,
@@ -191,7 +236,7 @@ def test_plan_return_all_falls_through_to_capable_backend():
                                   sequence=True),
         cost=-50, sequence_fn=finals_only))
     try:
-        p = runtime.plan(cfg, batch=2, seq=6, mode="sequence")
+        p = runtime.compile(cfg, batch=2, seq=6, mode="sequence")
         assert p.sequence_backend == "_test_finals_only"
         f1, s1 = p.sequence(params, h0s, xs)
         assert calls == ["finals_only"] and s1 is None
@@ -202,13 +247,14 @@ def test_plan_return_all_falls_through_to_capable_backend():
             np.testing.assert_allclose(np.asarray(a), np.asarray(b), **TOL)
     finally:
         runtime._REGISTRY.pop("_test_finals_only", None)
-        runtime._PLAN_CACHE.clear()
+        runtime.clear_cache()
 
 
-def test_plan_capability_registry():
+def test_compile_capability_registry():
     """Every registered backend exposes the ISSUE's capability surface."""
     regs = runtime.backends()
-    assert {"xla", "sharded", "pallas_fused", "pallas_chain"} <= set(regs)
+    assert {"xla", "sharded", "pallas_fused", "pallas_chain",
+            "sharded_decode"} <= set(regs)
     for spec in regs.values():
         caps = spec.caps
         for field in ("supports_mask", "supports_hetero_dims",
@@ -219,6 +265,9 @@ def test_plan_capability_registry():
     assert regs["pallas_chain"].caps.supports_hetero_dims
     assert regs["sharded"].caps.supports_mesh
     assert not regs["sharded"].caps.decode
+    assert regs["sharded_decode"].caps.supports_mesh
+    assert regs["sharded_decode"].caps.decode
+    assert not regs["sharded_decode"].caps.sequence
 
 
 # ---------------------------------------------------------------------------
@@ -336,9 +385,9 @@ def test_masked_pallas_sequence_bitwise_vs_unpadded(depth, variant):
     cfg = _cfg(depth, hetero=False, backend="pallas", variant=variant)
     params = init_params(gru.gru_stack_specs(cfg), jax.random.key(0))
     xs, h0s = _data(cfg, B=2, T=5)
-    p = runtime.plan(cfg, batch=2, seq=8, mask=True, mode="prefill")
+    p = runtime.compile(cfg, batch=2, seq=8, mask=True, mode="prefill")
     assert p.sequence_backend == "pallas_fused"
-    un = runtime.plan(cfg, batch=2, seq=5, mode="prefill")
+    un = runtime.compile(cfg, batch=2, seq=5, mode="prefill")
     f_un, _ = un.sequence(params, h0s, xs)
     # uniform left-pad: bitwise at the same batch shape
     xs_pad, mask = _padded(xs)
@@ -354,7 +403,7 @@ def test_masked_pallas_sequence_bitwise_vs_unpadded(depth, variant):
     mask_r = jnp.asarray(np.arange(5)[None, :] >= (5 - lens)[:, None])
     f_r, states = p.sequence(params, h0s, jnp.asarray(xs_r), mask=mask_r,
                              return_all=True)
-    solo = runtime.plan(cfg, batch=1, seq=5, mode="prefill")
+    solo = runtime.compile(cfg, batch=1, seq=5, mode="prefill")
     f0, _ = solo.sequence(params, tuple(h[:1] for h in h0s), xs[:1])
     f1, _ = solo.sequence(params, tuple(h[1:2] for h in h0s), xs[1:2, :3])
     for l in range(depth):
@@ -367,7 +416,7 @@ def test_masked_pallas_sequence_bitwise_vs_unpadded(depth, variant):
     # the return_all stream carries the gated (frozen-then-live) states:
     # compare against the masked XLA backend (variant-aware oracle)
     xcfg = dataclasses.replace(cfg, backend="xla")
-    px = runtime.plan(xcfg, batch=2, seq=5, mask=True, mode="prefill")
+    px = runtime.compile(xcfg, batch=2, seq=5, mask=True, mode="prefill")
     _, states_x = px.sequence(params, h0s, jnp.asarray(xs_r), mask=mask_r,
                               return_all=True)
     np.testing.assert_allclose(np.asarray(states), np.asarray(states_x),

@@ -105,6 +105,32 @@ def test_stack_decode_kernel_parity(depth, variant):
 
 
 @pytest.mark.parametrize("variant", ["v1", "v3"])
+def test_stack_decode_kernel_megacore_tiles_bitwise(variant):
+    """The decode grid's batch-tile axis is declared
+    ``dimension_semantics=("parallel",)`` (megacore): tiles are mutually
+    independent, so each tile of a multi-tile wave must compute BITWISE
+    the same rows as a standalone one-tile launch at the tile shape (same
+    GEMM shapes -> bitwise is a fair bar; cross-shape comparisons are
+    only held to tolerance elsewhere)."""
+    from repro.kernels.gru_sequence.kernel import gru_stack_decode_kernel
+    B, H, L, Bt = 8, 16, 2, 2
+    ks = jax.random.split(jax.random.key(23), 5)
+    h = jax.random.normal(ks[0], (L, B, H))
+    xp = jax.random.normal(ks[1], (B, 3 * H))
+    u = jax.random.normal(ks[2], (L, H, 3 * H)) / np.sqrt(H)
+    wd = jax.random.normal(ks[3], (L - 1, H, 3 * H)) / np.sqrt(H)
+    b = jax.random.normal(ks[4], (L, 3 * H)) * 0.1
+    wave = gru_stack_decode_kernel(h, xp, u, wd, b, variant=variant,
+                                   batch_block=Bt, interpret=True)
+    for i in range(B // Bt):
+        sl = slice(i * Bt, (i + 1) * Bt)
+        solo = gru_stack_decode_kernel(h[:, sl], xp[sl], u, wd, b,
+                                       variant=variant, interpret=True)
+        np.testing.assert_array_equal(np.asarray(wave[:, sl]),
+                                      np.asarray(solo))
+
+
+@pytest.mark.parametrize("variant", ["v1", "v3"])
 def test_decode_kernel_depth1_bitwise_single_layer(variant):
     """The depth-1 fused decode kernel IS one step of the single-layer
     sequence kernel (same gate math, same dtypes -> bitwise)."""
