@@ -30,6 +30,14 @@ that turns ``backend="auto"`` into measured per-shape dispatch. It forces
 ``--via runtime`` (cost entries are keyed by executor backend names) and
 adds the ``chain`` impl so every single-host decode candidate is covered
 (the CostModel only trusts calibrations that cover ALL legal candidates).
+It also measures whole-SEQUENCE (prefill) latency per backend and emits
+``op="sequence"`` rows next to the decode ones, so ``auto`` can pick the
+prefill backend per shape too (``--seq-len`` sets the measured T).
+
+``--mesh N`` extends both sweeps with the shard_map backends: the
+``sharded`` decode step (``sharded_decode``), and — for sequences AND
+decode — ``pallas_sharded``, the fused shard kernels inside the
+shard_map.
 
 Sweeps depth x batch and reports the per-step latency DISTRIBUTION
 (p50/p99 — the paper's constraint is a tail bound, not an average), each
@@ -61,9 +69,15 @@ from repro.core.params import init_params
 # pins one backend, so measurements are hermetic even when a stale
 # calibration artifact sits in the cwd (a family pref like "pallas" would
 # let measured costs from a previous run pick pallas_chain for the
-# "fused" rows and drop pallas_fused from the emitted coverage).
+# "fused" rows and drop pallas_fused from the emitted coverage). The
+# "sharded" label pins the op-matching shard_map backend (sharded_decode
+# for decode steps, sharded for sequences); pallas_sharded serves both.
 _IMPL_PREF = {"xla": "xla", "fused": "pallas_fused", "chain": "pallas_chain",
-              "sharded": "sharded_decode"}
+              "sharded": "sharded_decode", "pallas_sharded": "pallas_sharded"}
+_SEQ_IMPL_PREF = {"xla": "xla", "fused": "pallas_fused",
+                  "chain": "pallas_chain", "sharded": "sharded",
+                  "pallas_sharded": "pallas_sharded"}
+_MESH_IMPLS = ("sharded", "pallas_sharded")
 
 
 def _make_step(cfg: GRUConfig, impl: str, batch: int, via: str = "direct",
@@ -110,7 +124,7 @@ def _per_step_times(cfg: GRUConfig, batch: int, iters: int, via: str,
     for impl in impls:
         f, params, out, x, backend, src = _make_step(
             cfg, impl, batch, via,
-            placement=placement if impl == "sharded" else None)
+            placement=placement if impl in _MESH_IMPLS else None)
         bench[impl] = (f, params, out, x)
         backends[impl] = backend
         sources[impl] = src
@@ -132,24 +146,71 @@ def _per_step_times(cfg: GRUConfig, batch: int, iters: int, via: str,
     return {impl: np.array(v) for impl, v in ts.items()}, backends, sources
 
 
+def _make_seq(cfg: GRUConfig, impl: str, batch: int, seq_len: int,
+              placement=None):
+    """(jitted prefill fn, prepared params, h0s, xs, backend, cost_source)
+    for one sequence impl, always via the compiled executable (sequence
+    cost rows are keyed by executor backend names)."""
+    raw = init_params(gru.gru_stack_specs(cfg), jax.random.key(0))
+    rcfg = dataclasses.replace(cfg, backend=_SEQ_IMPL_PREF[impl])
+    params = runtime.prepare(raw, rcfg, placement)
+    h0s = gru.stack_h0(cfg, batch)
+    xs = jnp.ones((batch, seq_len, cfg.input_dim))
+    exe = runtime.compile(rcfg, batch=batch, seq=seq_len,
+                          placement=placement, mode="prefill")
+    f = jax.jit(lambda p, h, x: exe.prefill(p, h, x))
+    out = f(params, h0s, xs)
+    out[-1].block_until_ready()
+    return f, params, h0s, xs, exe.sequence_backend, exe.cost_source
+
+
+def _per_seq_times(cfg: GRUConfig, batch: int, seq_len: int, iters: int,
+                   impls=("xla", "fused"), placement=None, warmup: int = 3,
+                   rounds: int = 5):
+    """Whole-sequence (prefill) latencies for ALL impls, interleaved in
+    alternating rounds like the decode sweep (same drift-bias rule)."""
+    bench, backends, sources = {}, {}, {}
+    for impl in impls:
+        f, params, h0s, xs, backend, src = _make_seq(
+            cfg, impl, batch, seq_len,
+            placement=placement if impl in _MESH_IMPLS else None)
+        bench[impl] = (f, params, h0s, xs)
+        backends[impl] = backend
+        sources[impl] = src
+    ts = {impl: [] for impl in bench}
+    for impl, (f, params, h0s, xs) in bench.items():
+        for _ in range(warmup):
+            f(params, h0s, xs)[-1].block_until_ready()
+    per_round = max(iters // rounds, 1)
+    for _ in range(rounds):
+        for impl, (f, params, h0s, xs) in bench.items():
+            for _ in range(per_round):
+                t0 = time.perf_counter()
+                f(params, h0s, xs)[-1].block_until_ready()
+                ts[impl].append(time.perf_counter() - t0)
+    return {impl: np.array(v) for impl, v in ts.items()}, backends, sources
+
+
 def emit_costs(rows, json_path: str = "BENCH_backend_costs.json",
                csv: bool = True) -> dict:
     """Convert measured rows into the CostModel calibration artifact.
 
     Schema (``repro.core.runtime.CostModel.load``): one entry per
-    (backend, op, depth, batch, hidden_dim) with the measured ``p50_us``.
-    Rows must come from ``--via runtime`` so ``backend`` holds executor
-    backend names (the keys dispatch ranks by)."""
+    (backend, op, depth, batch, hidden_dim) with the measured ``p50_us``
+    — ``op`` is ``"decode"`` or ``"sequence"`` (rows without an ``op``
+    field are decode rows from older sweeps). Rows must come from
+    ``--via runtime`` so ``backend`` holds executor backend names (the
+    keys dispatch ranks by)."""
     seen, entries = set(), []
     for r in rows:
         if r.get("via") != "runtime":
             continue
-        key = (r["backend"], "decode", r["depth"], r["batch"],
-               r["hidden_dim"])
+        op = r.get("op", "decode")
+        key = (r["backend"], op, r["depth"], r["batch"], r["hidden_dim"])
         if key in seen:
             continue
         seen.add(key)
-        entries.append({"backend": r["backend"], "op": "decode",
+        entries.append({"backend": r["backend"], "op": op,
                         "depth": r["depth"], "batch": r["batch"],
                         "hidden_dim": r["hidden_dim"],
                         "p50_us": r["p50_us"]})
@@ -167,9 +228,11 @@ def run(depths=(1, 2, 3), batches=(1, 8, 32), H: int = 32, X: int = 5,
         iters: int = 300, json_path: str = "BENCH_gru_decode.json",
         csv: bool = True, via: str = "direct",
         impls=("xla", "fused"), mesh_axis: int = 0,
-        costs_path: str = None):
+        costs_path: str = None, seq_len: int = 0, seq_iters: int = None):
     """Depth x batch x impl sweep; emits the BENCH_gru_decode.json artifact
-    (and, with ``costs_path``, the CostModel calibration)."""
+    (and, with ``costs_path``, the CostModel calibration). ``seq_len`` > 0
+    additionally measures whole-sequence prefill latency per impl at that
+    T (``op="sequence"`` rows — the prefill half of the calibration)."""
     placement = None
     if mesh_axis:
         assert len(jax.devices()) >= mesh_axis, (
@@ -178,7 +241,7 @@ def run(depths=(1, 2, 3), batches=(1, 8, 32), H: int = 32, X: int = 5,
         from repro.compat import make_mesh
         placement = runtime.Placement(mesh=make_mesh((mesh_axis,),
                                                      ("model",)))
-        impls = tuple(impls) + ("sharded",)
+        impls = tuple(impls) + _MESH_IMPLS
     rows = []
     for L in depths:
         for B in batches:
@@ -186,7 +249,8 @@ def run(depths=(1, 2, 3), batches=(1, 8, 32), H: int = 32, X: int = 5,
             series, backends, sources = _per_step_times(
                 cfg, B, iters, via, impls=impls, placement=placement)
             for impl, ts in series.items():
-                row = {"depth": L, "batch": B, "impl": impl, "hidden_dim": H,
+                row = {"op": "decode", "depth": L, "batch": B, "impl": impl,
+                       "hidden_dim": H,
                        "input_dim": X, "steps": len(ts),
                        "via": via, "backend": backends[impl],
                        "cost_source": sources[impl],
@@ -198,10 +262,31 @@ def run(depths=(1, 2, 3), batches=(1, 8, 32), H: int = 32, X: int = 5,
                 if csv:
                     print(f"decode_L{L}_B{B}_{impl},{row['p50_us']:.2f},"
                           f"p99={row['p99_us']:.2f}us;backend={row['backend']}")
+            if seq_len:
+                seq_impls = tuple(i for i in impls if i in _SEQ_IMPL_PREF)
+                series, backends, sources = _per_seq_times(
+                    cfg, B, seq_len, seq_iters or max(iters // 4, 20),
+                    impls=seq_impls, placement=placement)
+                for impl, ts in series.items():
+                    row = {"op": "sequence", "depth": L, "batch": B,
+                           "impl": impl, "hidden_dim": H, "input_dim": X,
+                           "seq_len": seq_len, "steps": len(ts),
+                           "via": "runtime", "backend": backends[impl],
+                           "cost_source": sources[impl],
+                           "p50_us": round(float(np.percentile(ts, 50)) * 1e6, 2),
+                           "p99_us": round(float(np.percentile(ts, 99)) * 1e6, 2),
+                           "mean_us": round(float(ts.mean()) * 1e6, 2)}
+                    rows.append(row)
+                    if csv:
+                        print(f"seq_L{L}_B{B}_T{seq_len}_{impl},"
+                              f"{row['p50_us']:.2f},"
+                              f"p99={row['p99_us']:.2f}us;"
+                              f"backend={row['backend']}")
     summary = {}
     for L in depths:
         pair = {r["impl"]: r for r in rows
-                if r["depth"] == L and r["batch"] == min(batches)}
+                if r.get("op", "decode") == "decode"
+                and r["depth"] == L and r["batch"] == min(batches)}
         if {"xla", "fused"} <= pair.keys():
             summary[f"p50_speedup_depth{L}"] = round(
                 pair["xla"]["p50_us"] / max(pair["fused"]["p50_us"], 1e-9), 3)
@@ -233,8 +318,15 @@ if __name__ == "__main__":
                          "(forces --via runtime and adds the chain impl so "
                          "every single-host decode candidate is covered)")
     ap.add_argument("--mesh", type=int, default=0, metavar="N",
-                    help="also measure the sharded decode step on an "
-                         "N-device mesh (needs N host devices via XLA_FLAGS)")
+                    help="also measure the shard_map backends (the sharded "
+                         "decode step and pallas_sharded sequence+decode) "
+                         "on an N-device mesh (needs N host devices via "
+                         "XLA_FLAGS)")
+    ap.add_argument("--seq-len", type=int, default=0, metavar="T",
+                    help="also measure whole-sequence prefill latency at "
+                         "this T per impl (op=\"sequence\" rows; "
+                         "--emit-costs defaults it to 16 so the "
+                         "calibration covers prefill dispatch too)")
     ap.add_argument("--depths", type=int, nargs="+", default=None)
     ap.add_argument("--batches", type=int, nargs="+", default=None)
     ap.add_argument("--iters", type=int, default=None)
@@ -242,18 +334,22 @@ if __name__ == "__main__":
     args = ap.parse_args()
     via = args.via
     impls = ("xla", "fused")
+    seq_len = args.seq_len
     if args.emit_costs:
         via = "runtime"                 # cost entries need backend names
         impls = ("xla", "fused", "chain")
+        seq_len = seq_len or 16         # calibrate prefill dispatch too
     if args.mesh:
-        via = "runtime"                 # the sharded impl is executor-only
+        via = "runtime"                 # the sharded impls are executor-only
     if args.smoke:
         run(depths=tuple(args.depths or (1, 3)),
             batches=tuple(args.batches or (1, 8)),
             iters=args.iters or 120, json_path=args.json, via=via,
-            impls=impls, mesh_axis=args.mesh, costs_path=args.emit_costs)
+            impls=impls, mesh_axis=args.mesh, costs_path=args.emit_costs,
+            seq_len=seq_len)
     else:
         run(depths=tuple(args.depths or (1, 2, 3)),
             batches=tuple(args.batches or (1, 8, 32)),
             iters=args.iters or 300, json_path=args.json, via=via,
-            impls=impls, mesh_axis=args.mesh, costs_path=args.emit_costs)
+            impls=impls, mesh_axis=args.mesh, costs_path=args.emit_costs,
+            seq_len=seq_len)

@@ -29,6 +29,16 @@ their hidden state sharded through the whole sequence and pay ONE
 all-gather per layer (amortized over all T steps) to republish their
 output sequence for the layer above. The two modes compose freely
 per layer (``cfg.layer_matvec_modes``).
+
+Kernel-fused shard bodies: the shard_map programs here are parametric in
+their per-shard STEP implementation (``_STEP_IMPLS``). ``"xla"`` scans
+plain ops (the ``sharded`` / ``sharded_decode`` backends); ``"pallas"``
+invokes the shard-shaped Pallas kernels of ``repro.kernels.gru_sequence``
+between the SAME collectives (the ``pallas_sharded`` backend) — the
+repro's two parallel axes finally combined: the paper's row-parallel
+workload distribution across the mesh, with each shard's per-tile compute
+fused into whole-block kernels, the way AIE4ML nests per-tile kernels
+under a global dataflow partition.
 """
 from __future__ import annotations
 
@@ -108,6 +118,39 @@ def _rowwise_step(h_full, xp_shard, u_shard, b_shard, shard_idx, *,
     return jax.lax.all_gather(h_new_local, axis, axis=1, tiled=True)  # agg #2
 
 
+def _rowwise_step_pallas(h_full, xp_shard, u_shard, b_shard, shard_idx, *,
+                         axis: str, n: int, variant: str):
+    """`_rowwise_step` with the per-shard compute in Pallas kernels (the
+    ``pallas_sharded`` backend's step): same signature, same collectives in
+    the same places — v3 runs ONE shard kernel then the trailing gather,
+    v1 splits at the mid-step ``r*h`` aggregation into the z/r kernel and
+    the candidate kernel. The kernel bodies repeat the XLA expressions op
+    for op, so results are bitwise-equal to `_rowwise_step` at the same
+    shard shapes (interpret mode on CPU)."""
+    from repro.kernels import on_cpu
+    from repro.kernels.gru_sequence import kernel as shard_kernels
+    B, H = h_full.shape
+    Hl = H // n
+    h32 = h_full.astype(jnp.float32)
+    h_local = jax.lax.dynamic_slice_in_dim(h32, shard_idx * Hl, Hl, axis=1)
+    interp = on_cpu()
+
+    if variant == "v3":
+        h_new_local = shard_kernels.gru_rowwise_shard_step(
+            h32, h_local, xp_shard, u_shard, b_shard, interpret=interp)
+        return jax.lax.all_gather(h_new_local, axis, axis=1, tiled=True)
+
+    # paper math: z/r kernel -> aggregate r*h -> candidate kernel -> agg h'
+    z, rh_local = shard_kernels.gru_rowwise_shard_zr(
+        h32, h_local, xp_shard[..., :2 * Hl], u_shard[:, :2 * Hl],
+        b_shard[:2 * Hl], interpret=interp)
+    rh_full = jax.lax.all_gather(rh_local, axis, axis=1, tiled=True)  # agg #1
+    h_new_local = shard_kernels.gru_rowwise_shard_candidate(
+        rh_full, h_local, z, xp_shard[..., 2 * Hl:], u_shard[:, 2 * Hl:],
+        b_shard[2 * Hl:], interpret=interp)
+    return jax.lax.all_gather(h_new_local, axis, axis=1, tiled=True)  # agg #2
+
+
 def _cascade_step(h_shard, xp_full, u_rows, b_full, *, axis: str, variant: str):
     """Contraction-parallel step: h sharded (B,H/n), u_rows (H/n,3H) this
     shard's contraction slice; partial sums psum'd; h' kept sharded."""
@@ -130,6 +173,55 @@ def _cascade_step(h_shard, xp_full, u_rows, b_full, *, axis: str, variant: str):
     z_l = jax.lax.dynamic_slice_in_dim(z, idx * Hl, Hl, 1)
     ht_l = jax.lax.dynamic_slice_in_dim(ht, idx * Hl, Hl, 1)
     return (1 - z_l) * h32 + z_l * ht_l
+
+
+def _cascade_step_pallas(h_shard, xp_full, u_rows, b_full, *, axis: str,
+                         variant: str):
+    """`_cascade_step` with the per-shard compute in Pallas kernels: the
+    partial-product matvec(s) and the gate epilogues run in-kernel, the
+    psum(s) between them stay where the XLA step has them. The epilogues
+    work on the LOCAL gate slices (the XLA step computes full-width gates
+    then slices; both phases are elementwise, so slicing first is
+    bitwise-identical)."""
+    from repro.kernels import on_cpu
+    from repro.kernels.gru_sequence import kernel as shard_kernels
+    B, Hl = h_shard.shape
+    H = xp_full.shape[-1] // 3
+    h32 = h_shard.astype(jnp.float32)
+    idx = jax.lax.axis_index(axis)
+    interp = on_cpu()
+
+    def local_gates(a, gates):
+        """This shard's (B, gates*Hl) slice of stacked (B, gates*H) gates."""
+        return jnp.concatenate(
+            [jax.lax.dynamic_slice_in_dim(a, g * H + idx * Hl, Hl, 1)
+             for g in range(gates)], axis=1)
+
+    if variant == "v3":
+        g = jax.lax.psum(shard_kernels.gru_shard_matvec(
+            h32, u_rows, interpret=interp), axis) + b_full       # psum #1
+        return shard_kernels.gru_cascade_shard_gates(
+            local_gates(g, 3), local_gates(xp_full, 3), h32, interpret=interp)
+
+    zr = jax.lax.psum(shard_kernels.gru_shard_matvec(
+        h32, u_rows[:, :2 * H], interpret=interp), axis) + b_full[:2 * H]
+    z_l, ht_p = shard_kernels.gru_cascade_shard_zr(
+        local_gates(zr, 2), local_gates(xp_full, 2), h32,
+        u_rows[:, 2 * H:], interpret=interp)
+    ht_p = jax.lax.psum(ht_p, axis)                              # psum #2
+    ht_in = (jax.lax.dynamic_slice_in_dim(xp_full, 2 * H + idx * Hl, Hl, 1)
+             + jax.lax.dynamic_slice_in_dim(ht_p, idx * Hl, Hl, 1)
+             + jax.lax.dynamic_slice_in_dim(b_full, 2 * H + idx * Hl, Hl, 0))
+    return shard_kernels.gru_cascade_shard_update(z_l, ht_in, h32,
+                                                  interpret=interp)
+
+
+# step_impl -> (rowwise step, cascade step): the shard bodies of the
+# sharded backends are IMPL-parametric — "xla" scans plain ops (`sharded` /
+# `sharded_decode`), "pallas" invokes the shard kernels between the same
+# collectives (`pallas_sharded`).
+_STEP_IMPLS = {"xla": (_rowwise_step, _cascade_step),
+               "pallas": (_rowwise_step_pallas, _cascade_step_pallas)}
 
 
 def gru_sequence_sharded(params: dict, h0: jax.Array, xs: jax.Array, *,
@@ -300,11 +392,20 @@ def gru_stack_sequence_sharded_impl(params, h0s, xs, *, mesh: Mesh,
 
 def gru_stack_sequence_sharded_prepared(layer_args, h0s, xs, *, mesh: Mesh,
                                         cfg: GRUConfig, axis: str = "model",
-                                        return_all: bool = False, mask=None):
-    """The execute stage of the sharded sequence backend: ONE shard_map
+                                        return_all: bool = False, mask=None,
+                                        step_impl: str = "xla"):
+    """The execute stage of the sharded sequence backends: ONE shard_map
     over PRE-PLACED per-layer weight views (``prepare_sharded_layers``
     output, i.e. ``StackParams.placed``). Contains no gate-major restacking
-    and no ``device_put`` — placement already happened at prepare time."""
+    and no ``device_put`` — placement already happened at prepare time.
+
+    ``step_impl`` selects the per-shard step bodies: ``"xla"`` (the
+    ``sharded`` backend — plain ops in the scan) or ``"pallas"`` (the
+    ``pallas_sharded`` backend — the shard kernels of
+    ``repro.kernels.gru_sequence`` between the SAME collectives, bitwise-
+    equal at the same shard shapes). Everything else — the layer loop, the
+    gather-reuse across layer boundaries, the mask gating, return_all —
+    is shared."""
     n = mesh.shape[axis]
     B, T, X = xs.shape
     L = len(layer_args)
@@ -313,6 +414,7 @@ def gru_stack_sequence_sharded_prepared(layer_args, h0s, xs, *, mesh: Mesh,
     for H in dims:
         assert H % n == 0 and 3 * H % n == 0, (H, n)
     layer_specs = sharded_layer_specs(cfg, L, axis)
+    rowwise_step, cascade_step = _STEP_IMPLS[step_impl]
 
     def f(xs_full, h0s_full, largs, *margs):
         idx = jax.lax.axis_index(axis)
@@ -332,7 +434,7 @@ def gru_stack_sequence_sharded_prepared(layer_args, h0s, xs, *, mesh: Mesh,
                 xp = jnp.einsum("btx,xgh->btgh", cur, a["w3"]).reshape(B, T, -1)
                 u_flat = a["u3"].reshape(H, -1)
                 b_flat = a["b3"].reshape(-1)
-                step = functools.partial(_rowwise_step, axis=axis, n=n,
+                step = functools.partial(rowwise_step, axis=axis, n=n,
                                          variant=cfg.variant)
 
                 def body(h, op, step=step, u=u_flat, b=b_flat, emit=emit):
@@ -360,7 +462,7 @@ def gru_stack_sequence_sharded_prepared(layer_args, h0s, xs, *, mesh: Mesh,
                 Hl = H // n
                 h_shard = jax.lax.dynamic_slice_in_dim(
                     h0s_full[l].astype(jnp.float32), idx * Hl, Hl, 1)
-                step = functools.partial(_cascade_step, axis=axis,
+                step = functools.partial(cascade_step, axis=axis,
                                          variant=cfg.variant)
 
                 def body(h_l, op, step=step, u=a["u"], b=a["b"], emit=emit):
@@ -410,9 +512,13 @@ def gru_stack_sequence_sharded_prepared(layer_args, h0s, xs, *, mesh: Mesh,
 # ---------------------------------------------------------------------------
 
 def gru_stack_decode_sharded_prepared(layer_args, hs, x, *, mesh: Mesh,
-                                      cfg: GRUConfig, axis: str = "model"):
+                                      cfg: GRUConfig, axis: str = "model",
+                                      step_impl: str = "xla"):
     """One serve step through the whole stack inside ONE shard_map, against
-    pre-placed weights (the executor's ``sharded_decode`` backend).
+    pre-placed weights (the executor's ``sharded_decode`` backend;
+    ``step_impl="pallas"`` swaps the per-shard bodies for the shard
+    kernels — the ``pallas_sharded`` decode path, bitwise-equal at the
+    same shard shapes).
 
     ``hs``: per-layer (B, H) replicated states; ``x``: (B, X) the new
     token's features. Returns the per-layer new states, replicated — the
@@ -433,6 +539,7 @@ def gru_stack_decode_sharded_prepared(layer_args, hs, x, *, mesh: Mesh,
     for H in dims:
         assert H % n == 0 and 3 * H % n == 0, (H, n)
     layer_specs = sharded_layer_specs(cfg, L, axis)
+    rowwise_step, cascade_step = _STEP_IMPLS[step_impl]
 
     def f(x_full, hs_full, largs):
         idx = jax.lax.axis_index(axis)
@@ -444,17 +551,17 @@ def gru_stack_decode_sharded_prepared(layer_args, hs, x, *, mesh: Mesh,
                 B = cur.shape[0]
                 xp = jnp.einsum("bx,xgh->bgh", cur,
                                 a["w3"].astype(jnp.float32)).reshape(B, -1)
-                h2 = _rowwise_step(hs_full[l].astype(jnp.float32), xp,
-                                   a["u3"].reshape(H, -1),
-                                   a["b3"].reshape(-1), idx,
-                                   axis=axis, n=n, variant=cfg.variant)
+                h2 = rowwise_step(hs_full[l].astype(jnp.float32), xp,
+                                  a["u3"].reshape(H, -1),
+                                  a["b3"].reshape(-1), idx,
+                                  axis=axis, n=n, variant=cfg.variant)
             else:
                 xp = cur @ a["w"].astype(jnp.float32)  # (B, 3H) replicated
                 Hl = H // n
                 h_shard = jax.lax.dynamic_slice_in_dim(
                     hs_full[l].astype(jnp.float32), idx * Hl, Hl, 1)
-                h2_l = _cascade_step(h_shard, xp, a["u"], a["b"],
-                                     axis=axis, variant=cfg.variant)
+                h2_l = cascade_step(h_shard, xp, a["u"], a["b"],
+                                    axis=axis, variant=cfg.variant)
                 h2 = jax.lax.all_gather(h2_l, axis, axis=1, tiled=True)
             outs.append(h2)
             cur = h2                                   # same-token threading

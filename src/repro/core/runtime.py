@@ -27,15 +27,23 @@ fallback, lower = faster; a loaded :class:`CostModel` replaces these
 numbers with measured per-(depth, batch, H) latency whenever every legal
 candidate is covered):
 
-==============  ====  ======  ====  ==========  ======  ========  ====
+==============  ====  ======  ====  ==========  ======  ========  ========
 backend         mask  hetero  mesh  return_all  decode  sequence  cost
-==============  ====  ======  ====  ==========  ======  ========  ====
+==============  ====  ======  ====  ==========  ======  ========  ========
 pallas_fused    yes   no      no    yes         yes     yes       10
 pallas_chain    yes   yes     no    yes         yes     yes       20
 xla             yes   yes     no    yes         yes     yes       30
 sharded         yes   yes     REQ   yes         no      yes       5
+pallas_sharded  yes   yes     REQ   yes         yes     yes       4 / 190*
 sharded_decode  n/a   yes     REQ   n/a         yes     no        200
-==============  ====  ======  ====  ==========  ======  ========  ====
+==============  ====  ======  ====  ==========  ======  ========  ========
+
+(*) ``pallas_sharded`` carries a per-op static cost (``cost`` for
+sequence work, ``decode_cost`` for decode): under a mesh it is the
+statically PREFERRED sequence backend (the fused shard kernels beat the
+XLA scan between the same collectives), while its decode — like
+``sharded_decode`` — stays statically dispreferred behind the replicated
+single-host backends until a calibration measures it faster per shape.
 
 * ``mask``: a (B, T) length mask streams through the backend (bucketed
   left-padded prefill stays bitwise-identical to unpadded — every sequence
@@ -74,6 +82,7 @@ objects, bitwise-equal results, one DeprecationWarning per process.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import json
 import os
 from typing import Callable, Dict, List, Optional, Tuple
@@ -143,13 +152,22 @@ class BackendSpec:
     returns ``(per-layer finals tuple, last-layer states | None)``;
     ``decode_fn(sp, hs, x, *, cfg, placement)`` returns the per-layer new
     states. ``cost`` is the STATIC relative dispatch hint (lower =
-    preferred), used whenever no measured cost covers the call.
+    preferred), used whenever no measured cost covers the call;
+    ``decode_cost`` optionally overrides it for decode selection (a
+    backend may be the cheapest way to run a sequence yet the wrong
+    default for a single latency-bound step — ``pallas_sharded``).
     """
     name: str
     caps: Capabilities
     cost: int
     sequence_fn: Optional[Callable] = None
     decode_fn: Optional[Callable] = None
+    decode_cost: Optional[int] = None
+
+    def static_cost(self, op: str) -> int:
+        if op == "decode" and self.decode_cost is not None:
+            return self.decode_cost
+        return self.cost
 
 
 _REGISTRY: Dict[str, BackendSpec] = {}
@@ -402,22 +420,35 @@ def _xla_decode(sp, hs, x, *, cfg, placement):
     return gru_core.gru_stack_decode_xla(sp.cells, hs, x, cfg=cfg)
 
 
-def _sharded_sequence(sp, h0s, xs, *, cfg, return_all, mask, placement):
+def _sharded_sequence(sp, h0s, xs, *, cfg, return_all, mask, placement,
+                      step_impl: str = "xla"):
+    """The shard_map sequence program; ``step_impl="pallas"`` is the
+    `pallas_sharded` backend — same placed weight views, same collectives,
+    per-shard step bodies swapped for the Pallas shard kernels
+    (bitwise-equal to `sharded` at identical shard shapes)."""
     from repro.core import rowparallel
     sp = prepare(sp, cfg, placement, want_stacked=False)
     out = rowparallel.gru_stack_sequence_sharded_prepared(
         sp.placed, h0s, xs, mesh=placement.mesh, cfg=cfg,
-        axis=placement.axis, return_all=return_all, mask=mask)
+        axis=placement.axis, return_all=return_all, mask=mask,
+        step_impl=step_impl)
     if return_all:
         return out
     return out, None
 
 
-def _sharded_decode(sp, hs, x, *, cfg, placement):
+def _sharded_decode(sp, hs, x, *, cfg, placement, step_impl: str = "xla"):
     from repro.core import rowparallel
     sp = prepare(sp, cfg, placement, want_stacked=False)
     return rowparallel.gru_stack_decode_sharded_prepared(
-        sp.placed, hs, x, mesh=placement.mesh, cfg=cfg, axis=placement.axis)
+        sp.placed, hs, x, mesh=placement.mesh, cfg=cfg, axis=placement.axis,
+        step_impl=step_impl)
+
+
+_pallas_sharded_sequence = functools.partial(_sharded_sequence,
+                                             step_impl="pallas")
+_pallas_sharded_decode = functools.partial(_sharded_decode,
+                                           step_impl="pallas")
 
 
 register_backend(BackendSpec(
@@ -435,6 +466,21 @@ register_backend(BackendSpec(
                       sequence=True),
     cost=5,
     sequence_fn=_sharded_sequence, decode_fn=None))
+
+register_backend(BackendSpec(
+    name="pallas_sharded",
+    caps=Capabilities(supports_mask=True, supports_hetero_dims=True,
+                      supports_mesh=True, return_all=True, decode=True,
+                      sequence=True),
+    # statically the PREFERRED mesh sequence backend (cost 4 < sharded's
+    # 5): between the same collectives, the per-shard compute runs as
+    # fused whole-block kernels instead of an XLA op soup. Its decode is
+    # per-op dispreferred (decode_cost) for the same reason sharded_decode
+    # is: one recurrent step is latency-bound and its collectives usually
+    # dominate, so replicated decode wins unless a calibration measures
+    # the kernel-in-shard_map step faster at this shape.
+    cost=4, decode_cost=190,
+    sequence_fn=_pallas_sharded_sequence, decode_fn=_pallas_sharded_decode))
 
 register_backend(BackendSpec(
     name="sharded_decode",
@@ -578,7 +624,7 @@ def _rank(spec: BackendSpec, cfg: GRUConfig, *, op: str, mesh,
         fam = 0
     elif pref == "pallas" and spec.name.startswith("pallas"):
         fam = 0
-    cost = float(spec.cost) if measured is None else measured
+    cost = float(spec.static_cost(op)) if measured is None else measured
     return (plat, mesh_rank, fam, cost, spec.name)
 
 

@@ -38,6 +38,19 @@ through the grid one (1, B) slice per step next to the input projection:
 False steps freeze the hidden state (every layer's, for the stack) with an
 in-kernel select, so bucketed left-padded prefill runs the fused kernels
 — unmasked rows execute bit-identical arithmetic to unpadded prompts.
+
+SHARD-SHAPED entry points (``gru_rowwise_shard_*`` / ``gru_cascade_shard_*``
+/ ``gru_shard_matvec``) are the ``pallas_sharded`` backend's kernels: each
+one computes exactly the per-shard segment of a GRU step that fits BETWEEN
+two collectives of the row-parallel / cascade shard_map programs in
+``repro.core.rowparallel`` — the AIE4ML pattern of a per-tile kernel nested
+under a global dataflow partition. A rowwise v3 step is ONE kernel per
+layer (trailing all-gather outside); paper-math v1 splits at the mid-step
+``r*h`` aggregation into a z/r kernel and a candidate kernel; cascade
+steps split at their psum(s). The kernel bodies mirror the XLA shard-step
+expressions op for op (and elementwise phases commute with the local gate
+slicing), so on the same shard shapes the ``pallas_sharded`` backend is
+bitwise-equal to the XLA ``sharded`` shard bodies.
 """
 from __future__ import annotations
 
@@ -312,3 +325,160 @@ def gru_stack_decode_kernel(h: jax.Array, x_proj: jax.Array, u: jax.Array,
         out_shape=jax.ShapeDtypeStruct((L, B, H), h.dtype),
         interpret=interpret,
     )(h, x_proj, u, w_deep, b)
+
+
+# ---------------------------------------------------------------------------
+# shard-shaped step kernels (the pallas_sharded backend's per-tile programs)
+# ---------------------------------------------------------------------------
+#
+# Each kernel is the largest contiguous per-shard compute segment between
+# two collectives of the shard_map GRU step; no grid (one whole-block
+# invocation per call — the operands already ARE one shard's working set,
+# and they live in VMEM for the duration of the kernel). The bodies repeat
+# the XLA shard-step expressions verbatim so interpret-mode results are
+# bitwise-identical to the `sharded` backend at the same shard shapes.
+
+
+def _shard_call(body, out_shape, *args, interpret: bool):
+    """One whole-block pallas_call: every operand is a full (already
+    shard-local) block; TPU places them in VMEM, CPU runs interpreted."""
+    return pl.pallas_call(body, out_shape=out_shape,
+                          interpret=interpret)(*args)
+
+
+def _rowwise_shard_step_body(hf_ref, hl_ref, xp_ref, u_ref, b_ref, o_ref):
+    """v3 rowwise step, one shard: all three gate matvecs contract the FULL
+    (replicated) h against this shard's output rows; finished local rows
+    out (the trailing all-gather runs outside, between kernel calls)."""
+    Hl = o_ref.shape[-1]
+    hf = hf_ref[...]                                       # (B, H) replicated
+    xp, u, b = xp_ref[...], u_ref[...], b_ref[...][0]
+    z = jax.nn.sigmoid(xp[:, :Hl] + hf @ u[:, :Hl] + b[:Hl])
+    r = jax.nn.sigmoid(xp[:, Hl:2 * Hl] + hf @ u[:, Hl:2 * Hl]
+                       + b[Hl:2 * Hl])
+    ht = jnp.tanh(xp[:, 2 * Hl:] + r * (hf @ u[:, 2 * Hl:] + b[2 * Hl:]))
+    o_ref[...] = (1 - z) * hl_ref[...] + z * ht
+
+
+def _rowwise_shard_zr_body(hf_ref, hl_ref, xp_ref, u_ref, b_ref, z_ref,
+                           rh_ref):
+    """v1 rowwise phase 1, one shard: z and r for this shard's rows plus
+    the local ``r*h`` contribution the mid-step aggregation gathers."""
+    Hl = z_ref.shape[-1]
+    hf = hf_ref[...]
+    xp, u, b = xp_ref[...], u_ref[...], b_ref[...][0]
+    z = jax.nn.sigmoid(xp[:, :Hl] + hf @ u[:, :Hl] + b[:Hl])
+    r = jax.nn.sigmoid(xp[:, Hl:] + hf @ u[:, Hl:] + b[Hl:])
+    z_ref[...] = z
+    rh_ref[...] = r * hl_ref[...]
+
+
+def _rowwise_shard_candidate_body(rhf_ref, hl_ref, z_ref, xp_ref, u_ref,
+                                  b_ref, o_ref):
+    """v1 rowwise phase 2, one shard: candidate gate against the gathered
+    full ``r*h``, then the convex state update on the local rows."""
+    ht = jnp.tanh(xp_ref[...] + rhf_ref[...] @ u_ref[...] + b_ref[...][0])
+    z = z_ref[...]
+    o_ref[...] = (1 - z) * hl_ref[...] + z * ht
+
+
+def _shard_matvec_body(x_ref, w_ref, o_ref):
+    """Partial-product matvec: this shard's contraction slice (the cascade
+    MAC segment; the psum combining shards runs outside)."""
+    o_ref[...] = x_ref[...] @ w_ref[...]
+
+
+def _cascade_shard_gates_body(g_ref, xp_ref, h_ref, o_ref):
+    """v3 cascade epilogue, one shard: gate nonlinearities + state update
+    on the LOCAL gate slices of the psum'd pre-activations (elementwise,
+    so slicing before the kernel is bitwise-free)."""
+    Hl = o_ref.shape[-1]
+    g, xp = g_ref[...], xp_ref[...]
+    z = jax.nn.sigmoid(xp[:, :Hl] + g[:, :Hl])
+    r = jax.nn.sigmoid(xp[:, Hl:2 * Hl] + g[:, Hl:2 * Hl])
+    ht = jnp.tanh(xp[:, 2 * Hl:] + r * g[:, 2 * Hl:])
+    o_ref[...] = (1 - z) * h_ref[...] + z * ht
+
+
+def _cascade_shard_zr_body(zr_ref, xp_ref, h_ref, u_ref, z_ref, p_ref):
+    """v1 cascade mid-phase, one shard: z/r on the local slices of the
+    psum'd z,r pre-activations, then this shard's candidate partial
+    product ``(r_local * h_local) @ Uh_rows`` (psum'd outside)."""
+    Hl = z_ref.shape[-1]
+    zr, xp = zr_ref[...], xp_ref[...]
+    z = jax.nn.sigmoid(xp[:, :Hl] + zr[:, :Hl])
+    r = jax.nn.sigmoid(xp[:, Hl:] + zr[:, Hl:])
+    z_ref[...] = z
+    p_ref[...] = (r * h_ref[...]) @ u_ref[...]
+
+
+def _cascade_shard_update_body(z_ref, ht_ref, h_ref, o_ref):
+    """v1 cascade epilogue, one shard: candidate tanh on the local slice of
+    the psum'd pre-activation, then the convex state update."""
+    z = z_ref[...]
+    o_ref[...] = (1 - z) * h_ref[...] + z * jnp.tanh(ht_ref[...])
+
+
+def gru_rowwise_shard_step(h_full, h_local, xp, u, b, *,
+                           interpret: bool = False):
+    """v3 rowwise shard step. h_full (B,H) replicated f32, h_local (B,Hl)
+    this shard's rows, xp (B,3Hl) / u (H,3Hl) / b (3Hl,) this shard's
+    gate-major slices -> new local rows (B,Hl)."""
+    B, Hl = h_local.shape
+    return _shard_call(_rowwise_shard_step_body,
+                       jax.ShapeDtypeStruct((B, Hl), jnp.float32),
+                       h_full, h_local, xp, u, b[None, :],
+                       interpret=interpret)
+
+
+def gru_rowwise_shard_zr(h_full, h_local, xp_zr, u_zr, b_zr, *,
+                         interpret: bool = False):
+    """v1 rowwise phase 1 -> (z_local (B,Hl), rh_local (B,Hl))."""
+    B, Hl = h_local.shape
+    out = [jax.ShapeDtypeStruct((B, Hl), jnp.float32)] * 2
+    return _shard_call(_rowwise_shard_zr_body, out, h_full, h_local, xp_zr,
+                       u_zr, b_zr[None, :], interpret=interpret)
+
+
+def gru_rowwise_shard_candidate(rh_full, h_local, z_local, xp_h, u_h, b_h, *,
+                                interpret: bool = False):
+    """v1 rowwise phase 2: gathered rh_full (B,H) -> new local rows."""
+    B, Hl = h_local.shape
+    return _shard_call(_rowwise_shard_candidate_body,
+                       jax.ShapeDtypeStruct((B, Hl), jnp.float32),
+                       rh_full, h_local, z_local, xp_h, u_h, b_h[None, :],
+                       interpret=interpret)
+
+
+def gru_shard_matvec(x, w, *, interpret: bool = False):
+    """Cascade partial product: x (B,Hl) @ w (Hl,N) -> (B,N) f32."""
+    return _shard_call(_shard_matvec_body,
+                       jax.ShapeDtypeStruct((x.shape[0], w.shape[1]),
+                                            jnp.float32),
+                       x, w, interpret=interpret)
+
+
+def gru_cascade_shard_gates(g_local, xp_local, h_shard, *,
+                            interpret: bool = False):
+    """v3 cascade epilogue: local (B,3Hl) gate slices -> new h shard."""
+    return _shard_call(_cascade_shard_gates_body,
+                       jax.ShapeDtypeStruct(h_shard.shape, jnp.float32),
+                       g_local, xp_local, h_shard, interpret=interpret)
+
+
+def gru_cascade_shard_zr(zr_local, xp_local, h_shard, u_h_rows, *,
+                         interpret: bool = False):
+    """v1 cascade mid-phase -> (z_local (B,Hl), ht_partial (B,H))."""
+    B, Hl = h_shard.shape
+    out = [jax.ShapeDtypeStruct((B, Hl), jnp.float32),
+           jax.ShapeDtypeStruct((B, u_h_rows.shape[1]), jnp.float32)]
+    return _shard_call(_cascade_shard_zr_body, out, zr_local, xp_local,
+                       h_shard, u_h_rows, interpret=interpret)
+
+
+def gru_cascade_shard_update(z_local, ht_in_local, h_shard, *,
+                             interpret: bool = False):
+    """v1 cascade epilogue: pre-activated local candidate -> new h shard."""
+    return _shard_call(_cascade_shard_update_body,
+                       jax.ShapeDtypeStruct(h_shard.shape, jnp.float32),
+                       z_local, ht_in_local, h_shard, interpret=interpret)

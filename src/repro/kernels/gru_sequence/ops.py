@@ -12,6 +12,14 @@ layers of it in one ``pallas_call``. A (B, T) length mask, when given, is
 streamed through the kernels per step (no XLA fallback for bucketed
 prefill). The chain variant runs one kernel per layer and therefore also
 serves heterogeneous ``layer_dims``.
+
+The ``pallas_sharded`` backend (registered by ``repro.core.runtime``,
+implemented by ``repro.core.rowparallel``'s kernel-invoking shard bodies)
+does NOT go through these wrappers: its per-shard step programs are the
+shard-shaped entry points in :mod:`repro.kernels.gru_sequence.kernel`
+(``gru_rowwise_shard_*`` / ``gru_cascade_shard_*`` / ``gru_shard_matvec``),
+each computing the per-shard segment of a GRU step between two shard_map
+collectives.
 """
 from __future__ import annotations
 

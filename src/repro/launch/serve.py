@@ -40,13 +40,17 @@ def main(argv=None):
     p.add_argument("--max-new", type=int, default=16)
     p.add_argument("--gru-backend",
                    choices=("xla", "pallas", "auto", "pallas_fused",
-                            "pallas_chain"),
+                            "pallas_chain", "sharded", "pallas_sharded",
+                            "sharded_decode"),
                    default=None,
                    help="executor backend preference (pallas = fused "
-                        "kernel family; an exact name pins that backend; "
-                        "auto = cheapest legal backend — measured per-"
-                        "shape costs when BENCH_backend_costs.json is "
-                        "loaded, the static table otherwise)")
+                        "kernel family; an exact name pins that backend — "
+                        "the mesh-requiring ones [sharded, pallas_sharded, "
+                        "sharded_decode] need a sharded launch and fall "
+                        "through otherwise; auto = cheapest legal backend "
+                        "— measured per-shape costs when "
+                        "BENCH_backend_costs.json is loaded, the static "
+                        "table otherwise)")
     p.add_argument("--bucket-min", type=int, default=8)
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)

@@ -11,11 +11,13 @@ All GRU execution routes through the capability-dispatched executor
 (``repro.core.runtime``) via its two-stage compile/execute API:
 ``prefill``/``decode_step`` ask ``compile()`` for a memoized
 ``GRUExecutable`` (fused Pallas stack, per-layer Pallas chain, XLA scan,
-or the sharded shard_map programs when the ``ShardCtx`` carries a mesh —
-the ctx mesh becomes the executable's ``Placement``), and
-``serve_executable`` exposes the resolved executable so the serving
-engine can record which backend actually runs (e.g. that a masked
-bucketed prefill executes the Pallas kernel, not an XLA fallback).
+or the shard_map programs when the ``ShardCtx`` carries a mesh — the ctx
+mesh becomes the executable's ``Placement``, and mesh prefill resolves
+to ``pallas_sharded``, the fused shard kernels INSIDE the shard_map,
+unless pinned or calibrated otherwise), and ``serve_executable`` exposes
+the resolved executable so the serving engine can record which backend
+actually runs (e.g. that a masked bucketed prefill executes the Pallas
+kernel, not an XLA fallback).
 """
 from __future__ import annotations
 

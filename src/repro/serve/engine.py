@@ -42,7 +42,10 @@ step ran under and frozen at that jit's trace time (the trace embeds the
 backend; later cost-model changes don't retrace it), so ``latency_stats``
 attributes every step to the backend that ACTUALLY ran — including when
 continuous-batching admits change the decode key — rather than the one
-resolved once at wave start.
+resolved once at wave start. The attribution strings are executor
+backend names, the ``pallas_sharded`` family (fused shard kernels inside
+the shard_map, selectable per shape once a calibration measures the
+sharded step faster) included.
 
 The GRU family (the paper's own model) serves FEATURE VECTORS instead of
 tokens: a request's ``prompt`` is a float (S, X) feature window, and each

@@ -88,8 +88,8 @@ def test_distinct_placements_compile_distinct_executables():
     assert len({id(host), id(ea), id(eb)}) == 3
     assert ea is runtime.compile(cfg, batch=2, seq=6, placement=pa,
                                  mode="prefill")
-    assert ea.sequence_backend == "sharded" and host.sequence_backend != \
-        "sharded"
+    assert ea.sequence_backend == "pallas_sharded"      # mesh: kernel-fused
+    assert host.sequence_backend not in ("sharded", "pallas_sharded")
     # the 1-device mesh placements execute correctly, axis naming included
     params = init_params(gru.gru_stack_specs(cfg), jax.random.key(0))
     xs, h0s = _data(cfg)
@@ -136,6 +136,49 @@ def test_calibration_selects_per_shape_inverting_static_order():
     e_other = runtime.compile(_cfg(2), batch=1, mode="decode")
     assert e_other.cost_source == "static"
     assert e_other.decode_backend == "pallas_fused"
+
+
+def test_sequence_calibration_flips_prefill_choice_per_shape():
+    """The sequence half of the calibration (op="sequence" rows, emitted
+    by decode_latency.py --emit-costs): two shapes whose measured SEQUENCE
+    costs invert the static order pick different prefill backends, while
+    decode selection is untouched (stays static: no decode rows here)."""
+    cfg = _cfg(3)
+    entries = (_calib(3, 16, {"xla": 40.0, "pallas_fused": 200.0,
+                              "pallas_chain": 250.0}, batch=1, op="sequence")
+               + _calib(3, 16, {"xla": 400.0, "pallas_fused": 80.0,
+                                "pallas_chain": 90.0}, batch=8,
+                        op="sequence"))
+    runtime.set_cost_model(runtime.CostModel.from_entries(entries))
+    e1 = runtime.compile(cfg, batch=1, seq=12, mode="prefill")
+    e8 = runtime.compile(cfg, batch=8, seq=12, mode="prefill")
+    assert e1.sequence_backend == "xla"          # inverts the static order
+    assert e8.sequence_backend == "pallas_fused"
+    assert e1.cost_source == e8.cost_source == "measured"
+    # decode at the same shapes has no measured rows -> static order
+    ed = runtime.compile(cfg, batch=1, mode="decode")
+    assert ed.cost_source == "static"
+    assert ed.decode_backend == "pallas_fused"
+
+
+def test_decode_only_calibration_degrades_sequence_to_static_only():
+    """A calibration that covers decode but NOT sequence must degrade to
+    the static order for sequence selection ONLY — decode keeps its
+    measured choice (per-op fallback, not global)."""
+    cfg = _cfg(3)
+    runtime.set_cost_model(runtime.CostModel.from_entries(_calib(
+        3, 16, {"xla": 1.0, "pallas_fused": 50.0, "pallas_chain": 60.0},
+        batch=1, op="decode")))
+    es = runtime.compile(cfg, batch=1, seq=8, mode="prefill")
+    assert es.cost_source == "static"            # sequence: no coverage
+    assert es.sequence_backend == "pallas_fused"     # the static winner
+    ed = runtime.compile(cfg, batch=1, mode="decode")
+    assert ed.cost_source == "measured"          # decode: fully covered
+    assert ed.decode_backend == "xla"            # inverts the static order
+    # one executable carrying both ops keeps the per-op split
+    eb = runtime.compile(cfg, batch=1, seq=8, mode="serve")
+    assert eb.sequence_backend == "pallas_fused"
+    assert eb.decode_backend == "xla"
 
 
 def test_calibration_interpolates_and_clamps_batch():
@@ -204,19 +247,25 @@ def test_emit_costs_schema_loads():
     mod = importlib.util.module_from_spec(spec)
     spec.loader.exec_module(mod)
     rows = [{"via": "runtime", "backend": "xla", "depth": 1, "batch": 1,
-             "hidden_dim": 32, "p50_us": 12.5},
+             "hidden_dim": 32, "p50_us": 12.5},       # no op field: decode
             {"via": "runtime", "backend": "pallas_fused", "depth": 1,
-             "batch": 1, "hidden_dim": 32, "p50_us": 8.0},
+             "batch": 1, "hidden_dim": 32, "p50_us": 8.0, "op": "decode"},
+            {"via": "runtime", "backend": "xla", "depth": 1, "batch": 1,
+             "hidden_dim": 32, "p50_us": 95.0, "op": "sequence",
+             "seq_len": 16},                          # same key, other op
             {"via": "direct", "backend": "fused", "depth": 1, "batch": 8,
              "hidden_dim": 32, "p50_us": 9.0}]      # non-runtime: dropped
     import tempfile, os
     with tempfile.TemporaryDirectory() as d:
         path = os.path.join(d, "BENCH_backend_costs.json")
         out = mod.emit_costs(rows, path, csv=False)
-        assert len(out["entries"]) == 2
+        assert len(out["entries"]) == 3
         m = runtime.CostModel.load(path)
-    assert len(m) == 2
+    assert len(m) == 3
     assert m.lookup("xla", "decode", depth=1, batch=1, hidden=32) == 12.5
+    assert m.lookup("xla", "sequence", depth=1, batch=1, hidden=32) == 95.0
+    assert m.lookup("pallas_fused", "sequence", depth=1, batch=1,
+                    hidden=32) is None
     assert m.lookup("fused", "decode", depth=1, batch=8, hidden=32) is None
 
 
@@ -357,7 +406,7 @@ xs = jax.random.normal(jax.random.key(1), (2, 7, 6))
 h0s = gru.stack_h0(cfg, 2)
 exe = runtime.compile(cfg, batch=2, seq=7, placement=placement,
                       mode="prefill")
-assert exe.sequence_backend == "sharded"
+assert exe.sequence_backend == "pallas_sharded"
 sp = exe.prepare(params)
 assert sp.placed is not None
 for arr in sp.placed[0].values():      # placement happened eagerly
@@ -380,7 +429,8 @@ assert exe is runtime.compile(cfg, batch=2, seq=7, placement=placement,
 runtime.set_cost_model(runtime.CostModel.from_entries(
     [{"backend": b, "op": "decode", "depth": 2, "batch": 2,
       "hidden_dim": 16, "p50_us": 5.0 if b == "sharded_decode" else 50.0}
-     for b in ("xla", "pallas_fused", "pallas_chain", "sharded_decode")]))
+     for b in ("xla", "pallas_fused", "pallas_chain", "sharded_decode",
+               "pallas_sharded")]))
 ed = runtime.compile(cfg, batch=2, placement=placement, mode="decode")
 assert ed.decode_backend == "sharded_decode"
 nd_prep = prim_names(lambda p, h, x: ed.decode(p, h, x), sp, h0s, xs[:, 0])

@@ -1,0 +1,186 @@
+"""Property-based fuzz of the GRU executor's dispatch matrix.
+
+Random draws over the FULL request space — depth 1-4, uniform/hetero
+``layer_dims``, rowwise/cascade mode mixes, mask on/off, mesh/none,
+backend pin vs auto, prefill vs decode — must always:
+
+* resolve (``compile()`` never raises: ``xla`` is universally legal, so
+  an illegal preference falls through instead of erroring),
+* resolve LEGALLY (the chosen backend's declared ``Capabilities`` cover
+  the request — the silent-capability-gap failure mode the executor
+  exists to eliminate),
+* run correctly (``allclose`` vs ``gru_stack_reference``), and
+* honor the bitwise mask contract wherever the executable CLAIMS
+  ``mask_exact`` (padded+masked == unpadded at identical batch shapes).
+
+Runs under the optional-``hypothesis`` shim (``tests/_hyp.py``): with
+hypothesis installed (CI) the draws are derandomized — a fixed seed
+profile, so CI is deterministic; without it the property tests skip and
+the pinned ``test_dispatch_case_pinned`` corners still run.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+from repro.configs.base import GRUConfig
+from repro.core import gru, runtime
+from repro.core.params import init_params
+
+TOL = dict(rtol=3e-5, atol=3e-6)
+DEC_TOL = dict(rtol=1e-4, atol=1e-5)
+B, T, X, PAD = 2, 5, 5, 3
+DIM_POOL = (8, 12, 16)
+BACKENDS = ("auto", "xla", "pallas", "pallas_fused", "pallas_chain",
+            "sharded", "pallas_sharded", "sharded_decode")
+
+
+@functools.lru_cache(maxsize=None)
+def _mesh_placement():
+    """One shared single-device mesh: a stable Placement so executables
+    memoize across examples (multi-device dispatch runs in the multidev
+    suites; the capability/dispatch logic is device-count-agnostic)."""
+    from jax.sharding import Mesh
+    return runtime.Placement(mesh=Mesh(np.array(jax.devices()[:1]),
+                                       ("model",)))
+
+
+@functools.lru_cache(maxsize=None)
+def _case_params(dims: tuple, modes: tuple, backend: str):
+    cfg = GRUConfig(input_dim=X, layer_dims=dims, backend=backend,
+                    layer_matvec_modes=modes)
+    params = init_params(gru.gru_stack_specs(cfg), jax.random.key(0))
+    return cfg, params
+
+
+@functools.lru_cache(maxsize=None)
+def _data():
+    xs = jax.random.normal(jax.random.key(1), (B, T, X))
+    xs_pad = jnp.pad(xs, ((0, 0), (PAD, 0), (0, 0)))
+    mask = jnp.broadcast_to(jnp.arange(T + PAD)[None, :] >= PAD,
+                            (B, T + PAD))
+    return xs, xs_pad, mask
+
+
+def _assert_capabilities_cover(backend_name: str, *, op: str, masked: bool,
+                               hetero: bool, mesh) -> None:
+    """The dispatch contract: the resolved backend's declared caps cover
+    the request."""
+    spec = runtime.backends()[backend_name]
+    c = spec.caps
+    if op == "decode":
+        assert c.decode and spec.decode_fn is not None, backend_name
+    else:
+        assert c.sequence and spec.sequence_fn is not None, backend_name
+        assert not masked or c.supports_mask, backend_name
+    assert not hetero or c.supports_hetero_dims, backend_name
+    # a mesh-REQUIRING backend must never resolve without a mesh
+    assert not (c.supports_mesh and mesh is None), backend_name
+
+
+def check_dispatch_case(depth: int, dims: tuple, modes: tuple, masked: bool,
+                        mesh_on: bool, backend: str, mode: str) -> None:
+    """One cell of the dispatch matrix, end to end."""
+    assert len(dims) == len(modes) == depth
+    cfg, params = _case_params(dims, modes, backend)
+    xs, xs_pad, mask = _data()
+    h0s = gru.stack_h0(cfg, B)
+    hetero = any(d != dims[0] for d in dims)
+    placement = _mesh_placement() if mesh_on else None
+    mesh = placement.mesh if mesh_on else None
+    ref, _ = gru.gru_stack_reference(params, h0s, xs)
+
+    # 1. always resolves, and resolves legally
+    p = runtime.compile(cfg, batch=B, seq=T + PAD if masked else T,
+                        placement=placement, mask=masked, mode=mode)
+    if mode == "decode":
+        assert p.decode_backend is not None
+        _assert_capabilities_cover(p.decode_backend, op="decode",
+                                   masked=False, hetero=hetero, mesh=mesh)
+        hs = h0s
+        for t in range(T):
+            hs = p.decode(params, hs, xs[:, t])
+        for a, b in zip(hs, ref):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       **DEC_TOL)
+        return
+    assert p.sequence_backend is not None
+    _assert_capabilities_cover(p.sequence_backend, op="sequence",
+                               masked=masked, hetero=hetero, mesh=mesh)
+
+    # 2. runs correctly against the dense oracle
+    if not masked:
+        finals, _ = p.sequence(params, h0s, xs)
+    else:
+        finals, _ = p.sequence(params, h0s, xs_pad, mask=mask)
+        if p.mask_exact:
+            # 3. the claimed bitwise mask contract, held to bitwise
+            un = runtime.compile(cfg, batch=B, seq=T, placement=placement,
+                                 mode=mode)
+            f_un, _ = un.sequence(params, h0s, xs)
+            for a, b in zip(f_un, finals):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(finals, ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), **TOL)
+
+
+# ---------------------------------------------------------------------------
+# the property: random draws over the whole request space
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None, derandomize=True)
+@given(st.data())
+def test_dispatch_matrix_property(data):
+    """Any (depth, dims, modes, mask, mesh, backend, mode) draw resolves
+    legally and matches the oracle (bitwise where mask-exactness is
+    claimed). ``derandomize=True`` pins the example sequence — the CI
+    run is deterministic."""
+    depth = data.draw(st.integers(min_value=1, max_value=4), label="depth")
+    uniform = data.draw(st.booleans(), label="uniform")
+    if uniform:
+        h = data.draw(st.sampled_from(DIM_POOL), label="hidden")
+        dims = (h,) * depth
+    else:
+        dims = tuple(data.draw(
+            st.lists(st.sampled_from(DIM_POOL), min_size=depth,
+                     max_size=depth), label="dims"))
+    modes = tuple(data.draw(
+        st.lists(st.sampled_from(("rowwise", "cascade")), min_size=depth,
+                 max_size=depth), label="modes"))
+    masked = data.draw(st.booleans(), label="masked")
+    mesh_on = data.draw(st.booleans(), label="mesh")
+    backend = data.draw(st.sampled_from(BACKENDS), label="backend")
+    mode = data.draw(st.sampled_from(("prefill", "decode")), label="mode")
+    check_dispatch_case(depth, dims, modes, masked, mesh_on, backend, mode)
+
+
+# ---------------------------------------------------------------------------
+# pinned corners: run even without hypothesis (the shim skips the property)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("depth,dims,modes,masked,mesh_on,backend,mode", [
+    # the new backend family, pinned by exact name, with and without mesh
+    (2, (16, 16), ("rowwise", "cascade"), False, True, "pallas_sharded",
+     "prefill"),
+    (2, (16, 8), ("cascade", "rowwise"), True, True, "pallas_sharded",
+     "prefill"),
+    (3, (16, 8, 12), ("rowwise", "cascade", "rowwise"), False, True,
+     "pallas_sharded", "decode"),
+    (1, (16,), ("rowwise",), False, False, "pallas_sharded", "prefill"),
+    # mesh-requiring pins without a mesh fall through, never error
+    (2, (12, 12), ("cascade", "cascade"), True, False, "sharded", "prefill"),
+    (2, (12, 12), ("rowwise", "rowwise"), False, False, "sharded_decode",
+     "decode"),
+    # hetero + pallas family falls to the chain; depth-4 uniform + mesh
+    (3, (16, 8, 12), ("rowwise", "rowwise", "cascade"), True, False,
+     "pallas", "prefill"),
+    (4, (8, 8, 8, 8), ("rowwise", "cascade", "rowwise", "cascade"), True,
+     True, "auto", "prefill"),
+    (4, (8, 12, 16, 8), ("cascade",) * 4, False, True, "auto", "decode"),
+])
+def test_dispatch_case_pinned(depth, dims, modes, masked, mesh_on, backend,
+                              mode):
+    check_dispatch_case(depth, dims, modes, masked, mesh_on, backend, mode)

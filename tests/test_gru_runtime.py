@@ -86,11 +86,13 @@ def test_dispatch_matrix(depth, hetero, masked, mode):
 
 def test_dispatch_matrix_mesh(multidev):
     """The mesh column of the matrix: sequence work dispatches to the
-    shard_map backend (mask and hetero dims included, both bitwise
-    padding-invariant); decode under a mesh statically resolves to a
-    replicated single-host backend, while the ``sharded_decode``
-    candidate (persistent shard_map step) is reference-exact and becomes
-    selectable when a calibration measures it faster."""
+    kernel-fused shard_map backend ``pallas_sharded`` (statically cheaper
+    than ``sharded``; mask and hetero dims included, both bitwise
+    padding-invariant), with ``sharded`` still pinnable by exact name;
+    decode under a mesh statically resolves to a replicated single-host
+    backend, while the ``sharded_decode`` candidate (persistent shard_map
+    step) is reference-exact and becomes selectable when a calibration
+    measures it faster."""
     multidev("""
 import jax, jax.numpy as jnp, numpy as np
 from repro.configs.base import GRUConfig
@@ -110,7 +112,12 @@ for dims in ((16, 16), (16, 8)):
         h0s = gru.stack_h0(cfg, B)
         p = runtime.compile(cfg, batch=B, seq=T, placement=placement,
                             mask=masked, mode="prefill")
-        assert p.sequence_backend == "sharded", p.sequence_backend
+        assert p.sequence_backend == "pallas_sharded", p.sequence_backend
+        import dataclasses
+        pin = runtime.compile(dataclasses.replace(cfg, backend="sharded"),
+                              batch=B, seq=T, placement=placement,
+                              mask=masked, mode="prefill")
+        assert pin.sequence_backend == "sharded", pin.sequence_backend
         if masked:
             finals, _ = p.sequence(params, h0s, xs_pad, mask=mask)
             un = runtime.compile(cfg, batch=B, seq=T, placement=placement,
@@ -149,7 +156,8 @@ h0s = gru.stack_h0(cfg, B)
 runtime.set_cost_model(runtime.CostModel.from_entries(
     [{"backend": b, "op": "decode", "depth": 2, "batch": B,
       "hidden_dim": 16, "p50_us": 5.0 if b == "sharded_decode" else 50.0}
-     for b in ("xla", "pallas_fused", "pallas_chain", "sharded_decode")]))
+     for b in ("xla", "pallas_fused", "pallas_chain", "sharded_decode",
+               "pallas_sharded")]))
 pd = runtime.compile(cfg, batch=B, placement=placement, mode="decode")
 assert pd.decode_backend == "sharded_decode", pd.decode_backend
 assert pd.cost_source == "measured"
@@ -254,7 +262,7 @@ def test_compile_capability_registry():
     """Every registered backend exposes the ISSUE's capability surface."""
     regs = runtime.backends()
     assert {"xla", "sharded", "pallas_fused", "pallas_chain",
-            "sharded_decode"} <= set(regs)
+            "sharded_decode", "pallas_sharded"} <= set(regs)
     for spec in regs.values():
         caps = spec.caps
         for field in ("supports_mask", "supports_hetero_dims",
@@ -268,6 +276,16 @@ def test_compile_capability_registry():
     assert regs["sharded_decode"].caps.supports_mesh
     assert regs["sharded_decode"].caps.decode
     assert not regs["sharded_decode"].caps.sequence
+    # pallas_sharded: the combined axes — full sequence+decode surface,
+    # mesh-requiring, statically cheaper than sharded for sequence work
+    # but per-op dispreferred for decode (the latency-bound step)
+    psh = regs["pallas_sharded"]
+    assert psh.caps.supports_mesh and psh.caps.decode and psh.caps.sequence
+    assert psh.caps.supports_hetero_dims and psh.caps.supports_mask
+    assert psh.cost < regs["sharded"].cost
+    assert psh.static_cost("sequence") == psh.cost
+    assert psh.static_cost("decode") > regs["pallas_fused"].cost
+    assert psh.static_cost("decode") < regs["sharded_decode"].cost
 
 
 # ---------------------------------------------------------------------------
