@@ -13,6 +13,10 @@ benchmark tracks it per PR for the serving implementations:
   hetero-capable backend, measured so the cost model can rank it).
 * ``sharded`` — ONE persistent shard_map step over pre-sharded weights
   (``--mesh N``; requires N host devices, e.g. via XLA_FLAGS).
+* ``fused_q8`` / ``chain_q8`` — the int8-weight-row twins (``--q8``,
+  implied by ``--emit-costs``): exact-name pins, so they are measured
+  regardless of the accuracy gate; every row carries a ``dtype`` column
+  (``int8`` vs ``float32``) naming the served datapath.
 
 ``--via`` picks how the step is obtained:
 
@@ -73,11 +77,14 @@ from repro.core.params import init_params
 # "sharded" label pins the op-matching shard_map backend (sharded_decode
 # for decode steps, sharded for sequences); pallas_sharded serves both.
 _IMPL_PREF = {"xla": "xla", "fused": "pallas_fused", "chain": "pallas_chain",
-              "sharded": "sharded_decode", "pallas_sharded": "pallas_sharded"}
+              "sharded": "sharded_decode", "pallas_sharded": "pallas_sharded",
+              "fused_q8": "pallas_fused_q8", "chain_q8": "pallas_chain_q8"}
 _SEQ_IMPL_PREF = {"xla": "xla", "fused": "pallas_fused",
                   "chain": "pallas_chain", "sharded": "sharded",
-                  "pallas_sharded": "pallas_sharded"}
+                  "pallas_sharded": "pallas_sharded",
+                  "fused_q8": "pallas_fused_q8", "chain_q8": "pallas_chain_q8"}
 _MESH_IMPLS = ("sharded", "pallas_sharded")
+_Q8_IMPLS = ("fused_q8", "chain_q8")
 
 
 def _make_step(cfg: GRUConfig, impl: str, batch: int, via: str = "direct",
@@ -224,15 +231,18 @@ def emit_costs(rows, json_path: str = "BENCH_backend_costs.json",
     return out
 
 
-def run(depths=(1, 2, 3), batches=(1, 8, 32), H: int = 32, X: int = 5,
+def run(depths=(1, 2, 3), batches=(1, 8, 32), H=32, X: int = 5,
         iters: int = 300, json_path: str = "BENCH_gru_decode.json",
         csv: bool = True, via: str = "direct",
         impls=("xla", "fused"), mesh_axis: int = 0,
         costs_path: str = None, seq_len: int = 0, seq_iters: int = None):
-    """Depth x batch x impl sweep; emits the BENCH_gru_decode.json artifact
-    (and, with ``costs_path``, the CostModel calibration). ``seq_len`` > 0
-    additionally measures whole-sequence prefill latency per impl at that
-    T (``op="sequence"`` rows — the prefill half of the calibration)."""
+    """Depth x batch x hidden x impl sweep; emits the BENCH_gru_decode.json
+    artifact (and, with ``costs_path``, the CostModel calibration).
+    ``seq_len`` > 0 additionally measures whole-sequence prefill latency
+    per impl at that T (``op="sequence"`` rows — the prefill half of the
+    calibration). ``H`` may be one hidden size or a tuple — the q8 rows
+    only become interesting at serving widths (the int8 working-set win is
+    a bandwidth effect: B=1, H >= 256)."""
     placement = None
     if mesh_axis:
         assert len(jax.devices()) >= mesh_axis, (
@@ -242,54 +252,14 @@ def run(depths=(1, 2, 3), batches=(1, 8, 32), H: int = 32, X: int = 5,
         placement = runtime.Placement(mesh=make_mesh((mesh_axis,),
                                                      ("model",)))
         impls = tuple(impls) + _MESH_IMPLS
+    hiddens = (H,) if isinstance(H, int) else tuple(H)
     rows = []
-    for L in depths:
-        for B in batches:
-            cfg = GRUConfig(input_dim=X, hidden_dim=H, num_layers=L)
-            series, backends, sources = _per_step_times(
-                cfg, B, iters, via, impls=impls, placement=placement)
-            for impl, ts in series.items():
-                row = {"op": "decode", "depth": L, "batch": B, "impl": impl,
-                       "hidden_dim": H,
-                       "input_dim": X, "steps": len(ts),
-                       "via": via, "backend": backends[impl],
-                       "cost_source": sources[impl],
-                       "p50_us": round(float(np.percentile(ts, 50)) * 1e6, 2),
-                       "p90_us": round(float(np.percentile(ts, 90)) * 1e6, 2),
-                       "p99_us": round(float(np.percentile(ts, 99)) * 1e6, 2),
-                       "mean_us": round(float(ts.mean()) * 1e6, 2)}
-                rows.append(row)
-                if csv:
-                    print(f"decode_L{L}_B{B}_{impl},{row['p50_us']:.2f},"
-                          f"p99={row['p99_us']:.2f}us;backend={row['backend']}")
-            if seq_len:
-                seq_impls = tuple(i for i in impls if i in _SEQ_IMPL_PREF)
-                series, backends, sources = _per_seq_times(
-                    cfg, B, seq_len, seq_iters or max(iters // 4, 20),
-                    impls=seq_impls, placement=placement)
-                for impl, ts in series.items():
-                    row = {"op": "sequence", "depth": L, "batch": B,
-                           "impl": impl, "hidden_dim": H, "input_dim": X,
-                           "seq_len": seq_len, "steps": len(ts),
-                           "via": "runtime", "backend": backends[impl],
-                           "cost_source": sources[impl],
-                           "p50_us": round(float(np.percentile(ts, 50)) * 1e6, 2),
-                           "p99_us": round(float(np.percentile(ts, 99)) * 1e6, 2),
-                           "mean_us": round(float(ts.mean()) * 1e6, 2)}
-                    rows.append(row)
-                    if csv:
-                        print(f"seq_L{L}_B{B}_T{seq_len}_{impl},"
-                              f"{row['p50_us']:.2f},"
-                              f"p99={row['p99_us']:.2f}us;"
-                              f"backend={row['backend']}")
-    summary = {}
-    for L in depths:
-        pair = {r["impl"]: r for r in rows
-                if r.get("op", "decode") == "decode"
-                and r["depth"] == L and r["batch"] == min(batches)}
-        if {"xla", "fused"} <= pair.keys():
-            summary[f"p50_speedup_depth{L}"] = round(
-                pair["xla"]["p50_us"] / max(pair["fused"]["p50_us"], 1e-9), 3)
+    for H in hiddens:
+        for L in depths:
+            for B in batches:
+                _sweep_one(rows, L, B, H, X, iters, via, impls, placement,
+                           seq_len, seq_iters, csv)
+    summary = _summarize(rows, depths, batches, hiddens)
     out = {"bench": "gru_decode_step_latency",
            "backend": jax.default_backend(), "via": via,
            "rows": rows, "summary": summary}
@@ -297,11 +267,81 @@ def run(depths=(1, 2, 3), batches=(1, 8, 32), H: int = 32, X: int = 5,
         json.dump(out, f, indent=2)
     if csv:
         for k, v in summary.items():
-            print(f"decode_{k},{v:.3f},fused_vs_xla")
+            print(f"decode_{k},{v:.3f},speedup")
         print(f"decode_artifact,0.00,{json_path}")
     if costs_path:
         emit_costs(rows, costs_path, csv=csv)
     return out
+
+
+def _sweep_one(rows, L, B, H, X, iters, via, impls, placement, seq_len,
+               seq_iters, csv):
+    cfg = GRUConfig(input_dim=X, hidden_dim=H, num_layers=L)
+    series, backends, sources = _per_step_times(
+        cfg, B, iters, via, impls=impls, placement=placement)
+    for impl, ts in series.items():
+        row = {"op": "decode", "depth": L, "batch": B, "impl": impl,
+               "hidden_dim": H,
+               "input_dim": X, "steps": len(ts),
+               "via": via, "backend": backends[impl],
+               "dtype": runtime.backend_dtype(backends[impl]),
+               "cost_source": sources[impl],
+               "p50_us": round(float(np.percentile(ts, 50)) * 1e6, 2),
+               "p90_us": round(float(np.percentile(ts, 90)) * 1e6, 2),
+               "p99_us": round(float(np.percentile(ts, 99)) * 1e6, 2),
+               "mean_us": round(float(ts.mean()) * 1e6, 2)}
+        rows.append(row)
+        if csv:
+            print(f"decode_L{L}_B{B}_H{H}_{impl},{row['p50_us']:.2f},"
+                  f"p99={row['p99_us']:.2f}us;backend={row['backend']}")
+    if seq_len:
+        seq_impls = tuple(i for i in impls if i in _SEQ_IMPL_PREF)
+        series, backends, sources = _per_seq_times(
+            cfg, B, seq_len, seq_iters or max(iters // 4, 20),
+            impls=seq_impls, placement=placement)
+        for impl, ts in series.items():
+            row = {"op": "sequence", "depth": L, "batch": B,
+                   "impl": impl, "hidden_dim": H, "input_dim": X,
+                   "seq_len": seq_len, "steps": len(ts),
+                   "via": "runtime", "backend": backends[impl],
+                   "dtype": runtime.backend_dtype(backends[impl]),
+                   "cost_source": sources[impl],
+                   "p50_us": round(float(np.percentile(ts, 50)) * 1e6, 2),
+                   "p99_us": round(float(np.percentile(ts, 99)) * 1e6, 2),
+                   "mean_us": round(float(ts.mean()) * 1e6, 2)}
+            rows.append(row)
+            if csv:
+                print(f"seq_L{L}_B{B}_H{H}_T{seq_len}_{impl},"
+                      f"{row['p50_us']:.2f},"
+                      f"p99={row['p99_us']:.2f}us;"
+                      f"backend={row['backend']}")
+
+
+def _summarize(rows, depths, batches, hiddens):
+    """Per-depth fused-vs-xla speedups (legacy keys, at the smallest swept
+    hidden/batch) plus per-shape q8-vs-f32 speedups wherever both the f32
+    and the int8 fused rows were measured."""
+    summary = {}
+    for L in depths:
+        pair = {r["impl"]: r for r in rows
+                if r.get("op", "decode") == "decode"
+                and r["depth"] == L and r["batch"] == min(batches)
+                and r["hidden_dim"] == min(hiddens)}
+        if {"xla", "fused"} <= pair.keys():
+            summary[f"p50_speedup_depth{L}"] = round(
+                pair["xla"]["p50_us"] / max(pair["fused"]["p50_us"], 1e-9), 3)
+    for H in hiddens:
+        for L in depths:
+            for B in batches:
+                pair = {r["impl"]: r for r in rows
+                        if r.get("op", "decode") == "decode"
+                        and r["depth"] == L and r["batch"] == B
+                        and r["hidden_dim"] == H}
+                if {"fused", "fused_q8"} <= pair.keys():
+                    summary[f"q8_p50_speedup_L{L}_B{B}_H{H}"] = round(
+                        pair["fused"]["p50_us"]
+                        / max(pair["fused_q8"]["p50_us"], 1e-9), 3)
+    return summary
 
 
 if __name__ == "__main__":
@@ -329,6 +369,16 @@ if __name__ == "__main__":
                          "calibration covers prefill dispatch too)")
     ap.add_argument("--depths", type=int, nargs="+", default=None)
     ap.add_argument("--batches", type=int, nargs="+", default=None)
+    ap.add_argument("--hidden", type=int, nargs="+", default=None,
+                    metavar="H",
+                    help="hidden sizes to sweep (default 32; the q8 rows "
+                         "want serving widths too, e.g. --hidden 32 512)")
+    ap.add_argument("--q8", action="store_true",
+                    help="also measure the int8 backends (fused_q8 + "
+                         "chain_q8 rows, exact-name pins — no accuracy "
+                         "artifact needed to MEASURE them); --emit-costs "
+                         "implies it so the calibration carries their "
+                         "CostModel rows")
     ap.add_argument("--iters", type=int, default=None)
     ap.add_argument("--json", default="BENCH_gru_decode.json")
     args = ap.parse_args()
@@ -339,17 +389,22 @@ if __name__ == "__main__":
         via = "runtime"                 # cost entries need backend names
         impls = ("xla", "fused", "chain")
         seq_len = seq_len or 16         # calibrate prefill dispatch too
+    if args.q8 or args.emit_costs:
+        via = "runtime"                 # q8 impls are executor-only
+        impls = tuple(impls) + _Q8_IMPLS
     if args.mesh:
         via = "runtime"                 # the sharded impls are executor-only
     if args.smoke:
         run(depths=tuple(args.depths or (1, 3)),
             batches=tuple(args.batches or (1, 8)),
+            H=tuple(args.hidden or (32,)),
             iters=args.iters or 120, json_path=args.json, via=via,
             impls=impls, mesh_axis=args.mesh, costs_path=args.emit_costs,
             seq_len=seq_len)
     else:
         run(depths=tuple(args.depths or (1, 2, 3)),
             batches=tuple(args.batches or (1, 8, 32)),
+            H=tuple(args.hidden or (32,)),
             iters=args.iters or 300, json_path=args.json, via=via,
             impls=impls, mesh_axis=args.mesh, costs_path=args.emit_costs,
             seq_len=seq_len)

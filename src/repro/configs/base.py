@@ -84,6 +84,14 @@ class GRUConfig:
                                      # see repro.core.runtime)
     row_block: int = 0               # rows per block (0 = auto)
     unroll: int = 1                  # scan unroll for short-seq latency mode
+    quant: str = ""                  # "" (f32 everywhere) | "int8": make the
+                                     # q8 backends (pallas_fused_q8 /
+                                     # pallas_chain_q8) dispatch candidates —
+                                     # selected by "auto" only when the quant
+                                     # accuracy gate is open AND a calibration
+                                     # measures them faster (exact backend-name
+                                     # pins bypass the gate; see
+                                     # repro.core.runtime)
     # --- deep stacks ---
     num_layers: int = 1              # stack depth (ignored if layer_dims set)
     layer_dims: Tuple[int, ...] = ()     # per-layer hidden sizes; () -> uniform

@@ -151,3 +151,97 @@ def cast_tree(tree, dtype):
     dt = _canon_dtype(dtype)
     return jax.tree_util.tree_map(
         lambda x: x.astype(dt) if jnp.issubdtype(x.dtype, jnp.floating) else x, tree)
+
+
+# ---------------------------------------------------------------------------
+# int8 GRU weight quantization (the q8 datapath's placement-stage half)
+# ---------------------------------------------------------------------------
+#
+# The paper's AIE datapath is fixed-point: each vector lane MACs int8 weight
+# ROWS against the incoming activation vector. The TPU/CPU translation keeps
+# that per-row layout literally: a (K, 3H) gate matrix is stored TRANSPOSED,
+# (3H, K) int8, one contiguous weight row per output element, quantized
+# symmetrically per output row (``scale_j = max|row_j| / 127``).
+#
+# Activations need no calibration at all: a GRU hidden state is a convex
+# combination of its initial state and tanh outputs, so with ``|h0| <= 1``
+# every ``h`` (and ``r*h``) stays in (-1, 1) — a FIXED activation scale of
+# 127 is exact-range. That is what makes the q8 datapath a pure
+# placement-stage transform: the execute path contains no reduce_max or
+# dynamic rescale anywhere, only the in-kernel ``round(h*127)``.
+#
+# Dequant is one multiply folded next to the bias add: an int32 accumulator
+# ``acc = h_q . u_q_row`` represents ``(h*127) . (row/scale_j)``, so
+# ``float = acc * (scale_j / 127)`` — ``eff_j = scale_j / 127`` is
+# precomputed here, at prepare() time, like the gate-major reshapes.
+
+ACT_SCALE = 127.0   # fixed activation quantization scale (h in (-1,1))
+
+
+def quantize_rows_int8(w) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-output-channel int8 quantization of a (K, N) matrix.
+
+    Returns ``(q, eff)``: ``q`` is the TRANSPOSED (N, K) int8 matrix (one
+    contiguous row per output channel — the paper's per-lane row layout,
+    and the layout whose int8 reduction vectorizes), ``eff`` the (N,) f32
+    dequant scale per output channel with the fixed activation scale
+    already folded in (``max|col| / 127 / 127``).
+    """
+    wt = jnp.asarray(w, jnp.float32).T                     # (N, K) row-major
+    scale = jnp.max(jnp.abs(wt), axis=-1, keepdims=True) / 127.0
+    scale = jnp.where(scale > 0, scale, 1.0)               # all-zero rows
+    q = jnp.round(wt / scale).astype(jnp.int8)
+    return q, (scale[:, 0] / ACT_SCALE).astype(jnp.float32)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class QuantStackParams:
+    """The q8 datapath's placement-resident weight views.
+
+    ``cells``: per-layer ``{"u_q" (3H,H) int8, "u_eff" (3H,)}`` — every
+    layer's recurrent matrix, usable at any ``layer_dims`` (the chain
+    backend's working set). ``stacked``: the fused kernels' whole-stack
+    views (``{"u_q" (L,3H,H), "u_eff" (L,3H), "wd_q", "wd_eff", "b"}``,
+    deep-layer input projections int8 too) — ``None`` for heterogeneous
+    stacks, exactly like ``StackParams.stacked``.
+    """
+    cells: tuple
+    stacked: Optional[dict] = None
+
+    def tree_flatten(self):
+        return (self.cells, self.stacked), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def quantize_gru_cells(cells) -> QuantStackParams:
+    """One-time quantization of a GRU stack's recurrent weights (and, for
+    uniform stacks, the fused kernels' stacked views). Runs at prepare()
+    time — scale computation, rounding, and int8 casting are placement
+    costs, never part of a traced execute call (jaxpr-asserted by the test
+    suite)."""
+    cells = tuple(cells)
+    per_layer = []
+    for c in cells:
+        u_q, u_eff = quantize_rows_int8(c["u"])
+        per_layer.append({"u_q": u_q, "u_eff": u_eff})
+    dims = tuple(c["u"].shape[0] for c in cells)
+    stacked = None
+    if all(d == dims[0] for d in dims):
+        L, H = len(cells), dims[0]
+        u_q = jnp.stack([p["u_q"] for p in per_layer], 0)          # (L,3H,H)
+        u_eff = jnp.stack([p["u_eff"] for p in per_layer], 0)      # (L,3H)
+        if L > 1:
+            wd = [quantize_rows_int8(c["w"]) for c in cells[1:]]
+            wd_q = jnp.stack([q for q, _ in wd], 0)                # (L-1,3H,H)
+            wd_eff = jnp.stack([e for _, e in wd], 0)              # (L-1,3H)
+        else:
+            wd_q = jnp.zeros((1, 3 * H, 1), jnp.int8)
+            wd_eff = jnp.zeros((1, 3 * H), jnp.float32)
+        b = jnp.stack([jnp.asarray(c["b"], jnp.float32) for c in cells], 0)
+        stacked = {"u_q": u_q, "u_eff": u_eff, "wd_q": wd_q,
+                   "wd_eff": wd_eff, "b": b}
+    return QuantStackParams(cells=tuple(per_layer), stacked=stacked)

@@ -27,16 +27,33 @@ fallback, lower = faster; a loaded :class:`CostModel` replaces these
 numbers with measured per-(depth, batch, H) latency whenever every legal
 candidate is covered):
 
-==============  ====  ======  ====  ==========  ======  ========  ========
-backend         mask  hetero  mesh  return_all  decode  sequence  cost
-==============  ====  ======  ====  ==========  ======  ========  ========
-pallas_fused    yes   no      no    yes         yes     yes       10
-pallas_chain    yes   yes     no    yes         yes     yes       20
-xla             yes   yes     no    yes         yes     yes       30
-sharded         yes   yes     REQ   yes         no      yes       5
-pallas_sharded  yes   yes     REQ   yes         yes     yes       4 / 190*
-sharded_decode  n/a   yes     REQ   n/a         yes     no        200
-==============  ====  ======  ====  ==========  ======  ========  ========
+===============  ====  ======  ====  ==========  ======  ========  ========
+backend          mask  hetero  mesh  return_all  decode  sequence  cost
+===============  ====  ======  ====  ==========  ======  ========  ========
+pallas_fused     yes   no      no    yes         yes     yes       10
+pallas_chain     yes   yes     no    yes         yes     yes       20
+xla              yes   yes     no    yes         yes     yes       30
+sharded          yes   yes     REQ   yes         no      yes       5
+pallas_sharded   yes   yes     REQ   yes         yes     yes       4 / 190*
+sharded_decode   n/a   yes     REQ   n/a         yes     no        200
+pallas_fused_q8  yes   no      no    yes         yes     yes       150 (+)
+pallas_chain_q8  yes   yes     no    yes         yes     yes       160 (+)
+===============  ====  ======  ====  ==========  ======  ========  ========
+
+(+) the ``*_q8`` backends are the int8 datapath (int8 weight rows, int32
+accumulation, dequant folded into the bias add — see
+``repro.kernels.gru_sequence.kernel``). They are DOUBLY gated: a backend
+ending in ``_q8`` is a dispatch candidate only when ``cfg.quant ==
+"int8"`` AND the recorded accuracy-harness artifact
+(``repro/quant/accuracy.py`` -> ``BENCH_quant_accuracy.json``, installed
+like the cost model via :func:`load_quant_accuracy` /
+``$REPRO_GRU_QUANT_ACC``) reports ``passed`` — an uncalibrated or failing
+artifact means q8 is never auto-selected. An EXACT backend-name pin
+(``cfg.backend == "pallas_fused_q8"``) bypasses both gates (explicit
+opt-in, e.g. the parity tests and the calibration benchmark itself). On
+top of that their static costs sit above ``UNCALIBRATED_GATE_COST``:
+measured-only backends, picked by ``auto`` only where a calibration shows
+them faster per shape.
 
 (*) ``pallas_sharded`` carries a per-op static cost (``cost`` for
 sequence work, ``decode_cost`` for decode): under a mesh it is the
@@ -91,6 +108,7 @@ import jax
 
 from repro.configs.base import GRUConfig
 from repro.core import gru as gru_core
+from repro.core.params import QuantStackParams, quantize_gru_cells
 
 
 # ---------------------------------------------------------------------------
@@ -207,16 +225,22 @@ class StackParams:
     for heterogeneous stacks (the fused backend doesn't apply there).
     ``placed``: the sharded backends' per-layer gate-major weight views,
     ``device_put`` onto ``placement.mesh`` up front — present only for a
-    mesh placement. ``placement`` (aux data) records where ``placed``
+    mesh placement. ``quant``: the q8 backends' int8 weight views
+    (:class:`repro.core.params.QuantStackParams`) — present when the
+    config requests quantization (``cfg.quant`` / a ``*_q8`` backend pin);
+    scale computation and int8 casting happen HERE, never in a traced
+    execute call. ``placement`` (aux data) records where ``placed``
     lives, so a matching ``prepare()`` is a free passthrough.
     """
     cells: tuple
     stacked: Optional[dict] = None
     placed: Optional[tuple] = None
+    quant: Optional[QuantStackParams] = None
     placement: Placement = HOST
 
     def tree_flatten(self):
-        return (self.cells, self.stacked, self.placed), (self.placement,)
+        return (self.cells, self.stacked, self.placed, self.quant), \
+            (self.placement,)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -227,8 +251,17 @@ class StackParams:
         return tuple(c["u"].shape[0] for c in self.cells)
 
 
+def _cfg_wants_quant(cfg) -> bool:
+    """Whether this config's execution may route through a q8 backend
+    (quant flag or an exact ``*_q8`` pin) — if so, prepare() builds the
+    int8 views up front so no traced call quantizes weights."""
+    return (getattr(cfg, "quant", "") == "int8"
+            or str(getattr(cfg, "backend", "")).endswith("_q8"))
+
+
 def prepare(params, cfg: GRUConfig, placement=None, *,
-            want_stacked: bool = True) -> StackParams:
+            want_stacked: bool = True,
+            want_quant: Optional[bool] = None) -> StackParams:
     """One-time normalization of ANY accepted param layout to a
     placement-resident StackParams.
 
@@ -247,23 +280,39 @@ def prepare(params, cfg: GRUConfig, placement=None, *,
     execute call contains no weight placement (asserted by the test
     suite via jaxpr inspection). ``want_stacked=False`` skips the fused
     kernels' weight stacks (an executable whose resolved backends never
-    read them passes it).
+    read them passes it). ``want_quant`` (default: derived from
+    ``cfg.quant`` / a ``*_q8`` backend pin) additionally builds the q8
+    backends' int8 weight views — scale computation, rounding, and int8
+    casting are placement-stage costs exactly like the reshapes, so a
+    traced execute call contains no quantize ops either (jaxpr-asserted).
     """
     pl_ = _as_placement(placement)
+    if want_quant is None:
+        want_quant = _cfg_wants_quant(cfg)
     if isinstance(params, StackParams):
+        quant = params.quant
+        if want_quant and quant is None:
+            quant = quantize_gru_cells(params.cells)
         if pl_.is_host or params.placement == pl_:
-            return params
+            if quant is params.quant:
+                return params
+            return StackParams(cells=params.cells, stacked=params.stacked,
+                               placed=params.placed, quant=quant,
+                               placement=params.placement)
         placed = _place_layers(params.cells, cfg, pl_)
         return StackParams(cells=params.cells, stacked=params.stacked,
-                           placed=placed, placement=pl_)
+                           placed=placed, quant=quant, placement=pl_)
     stacked = params.get("stacked_cells") if isinstance(params, dict) else None
     placed = params.get("placed_cells") if isinstance(params, dict) else None
+    quant = params.get("quant_cells") if isinstance(params, dict) else None
     cells = gru_core.stack_cell_params(params, cfg)
     dims = tuple(c["u"].shape[0] for c in cells)
     if (want_stacked and stacked is None
             and all(d == dims[0] for d in dims)):
         from repro.kernels.gru_sequence import ops as seq_ops
         stacked = seq_ops.prepare_stacked_cells(cells)
+    if want_quant and quant is None:
+        quant = quantize_gru_cells(cells)
     if pl_.is_host:
         placed = None
     else:
@@ -275,7 +324,7 @@ def prepare(params, cfg: GRUConfig, placement=None, *,
             # into prepare())
             placed = _place_layers(cells, cfg, pl_)
     return StackParams(cells=cells, stacked=stacked, placed=placed,
-                       placement=HOST if pl_.is_host else pl_)
+                       quant=quant, placement=HOST if pl_.is_host else pl_)
 
 
 def _place_layers(cells, cfg: GRUConfig, pl_: Placement) -> tuple:
@@ -405,6 +454,92 @@ def cost_model() -> CostModel:
                        else CostModel({}, source=path))
         _COST_MODEL_LOADED = True
     return _COST_MODEL
+
+
+# ---------------------------------------------------------------------------
+# quant accuracy gate (the q8 backends' dispatch-eligibility record)
+# ---------------------------------------------------------------------------
+
+class QuantAccuracy:
+    """The recorded result of the q8 accuracy harness
+    (``python -m repro.quant.accuracy`` -> ``BENCH_quant_accuracy.json``):
+    max/mean logit error vs the f32 oracle and classification parity on
+    the jet-tagging eval set. Gates q8 auto-dispatch: only a loaded,
+    error-free artifact with ``passed: true`` opens the gate — a missing,
+    corrupt, or failing artifact means ``auto`` never selects a ``*_q8``
+    backend (exact-name pins still work: explicit opt-in)."""
+
+    def __init__(self, data: Optional[dict] = None, source: str = "",
+                 error: Optional[str] = None):
+        self.data = dict(data or {})
+        self.source = source
+        self.error = error
+
+    @property
+    def passed(self) -> bool:
+        return self.error is None and bool(self.data.get("passed"))
+
+    @classmethod
+    def load(cls, path) -> "QuantAccuracy":
+        """Tolerant load: a missing, unreadable, or schema-mismatched file
+        yields a CLOSED gate (q8 stays pin-only), never an exception."""
+        try:
+            with open(path) as f:
+                data = json.load(f)
+            if data.get("bench") != "gru_quant_accuracy":
+                raise ValueError("not a gru_quant_accuracy artifact")
+            return cls(data, source=str(path))
+        except Exception as e:  # noqa: BLE001 - degrade, never break dispatch
+            return cls({}, source=str(path), error=f"{type(e).__name__}: {e}")
+
+
+_QUANT_ACC: Optional[QuantAccuracy] = None
+_QUANT_ACC_LOADED = False
+
+
+def set_quant_accuracy(report: Optional[QuantAccuracy]) -> None:
+    """Install an accuracy report (None re-arms the lazy default load).
+    Bumps the cost epoch like :func:`set_cost_model`: gate flips change
+    which backends are legal, so memoized executables must not outlive
+    them."""
+    global _QUANT_ACC, _QUANT_ACC_LOADED, _COST_EPOCH
+    _QUANT_ACC = report
+    _QUANT_ACC_LOADED = report is not None
+    _COST_EPOCH += 1
+    _EXEC_CACHE.clear()
+
+
+def load_quant_accuracy(path) -> QuantAccuracy:
+    """Load ``path`` (tolerantly) and install it. Returns the report."""
+    report = QuantAccuracy.load(path)
+    set_quant_accuracy(report)
+    return report
+
+
+def quant_accuracy() -> QuantAccuracy:
+    """The active accuracy report. On first use, loads
+    ``$REPRO_GRU_QUANT_ACC`` (default ``./BENCH_quant_accuracy.json``) if
+    present; otherwise a closed gate."""
+    global _QUANT_ACC, _QUANT_ACC_LOADED
+    if not _QUANT_ACC_LOADED:
+        path = os.environ.get("REPRO_GRU_QUANT_ACC",
+                              "BENCH_quant_accuracy.json")
+        _QUANT_ACC = (QuantAccuracy.load(path) if os.path.exists(path)
+                      else QuantAccuracy({}, source=path,
+                                         error="missing artifact"))
+        _QUANT_ACC_LOADED = True
+    return _QUANT_ACC
+
+
+def quant_gate_open() -> bool:
+    """True when the recorded accuracy artifact admits q8 auto-dispatch."""
+    return quant_accuracy().passed
+
+
+def backend_dtype(name: Optional[str]) -> str:
+    """The numeric format a backend's recurrent matvecs run in — what a
+    server reports as its served dtype."""
+    return "int8" if name and name.endswith("_q8") else "float32"
 
 
 # ---------------------------------------------------------------------------
@@ -542,7 +677,9 @@ class GRUExecutable:
                          for s in (_REGISTRY.get(n) for n in names if n))
         return prepare(params, self.cfg,
                        self.placement if needs_mesh else None,
-                       want_stacked="pallas_fused" in names)
+                       want_stacked="pallas_fused" in names,
+                       want_quant=any(n and n.endswith("_q8")
+                                      for n in names))
 
     def describe(self) -> dict:
         return {"sequence_backend": self.sequence_backend,
@@ -560,8 +697,16 @@ def _hetero(cfg: GRUConfig) -> bool:
 
 
 def _legal(spec: BackendSpec, *, op: str, masked: bool, hetero: bool,
-           mesh, need_return_all: bool = False) -> bool:
+           mesh, need_return_all: bool = False,
+           cfg: Optional[GRUConfig] = None) -> bool:
     c = spec.caps
+    if spec.name.endswith("_q8"):
+        # the q8 datapath changes numerics: candidate only when the config
+        # asked for it AND the accuracy artifact passed — or under an
+        # exact-name pin (explicit opt-in bypasses both gates).
+        if getattr(cfg, "backend", None) != spec.name:
+            if getattr(cfg, "quant", "") != "int8" or not quant_gate_open():
+                return False
     if op == "decode":
         if not c.decode or spec.decode_fn is None:
             return False
@@ -579,11 +724,23 @@ def _legal(spec: BackendSpec, *, op: str, masked: bool, hetero: bool,
     return True
 
 
+# Static costs at or above this line mark a backend "measured-only": it is
+# DEFINED to lose dispatch unless a calibration measures it faster, so a
+# cost model that does not cover it (e.g. a q8 calibration that only ran
+# the decode op) does not force the whole selection back to the static
+# table. Candidates below the line keep PR 5's all-or-nothing contract —
+# measured µs and static preference ints are not comparable units.
+UNCALIBRATED_GATE_COST = 100
+
+
 def _measured_costs(legal, cfg: GRUConfig, *, op: str,
                     batch: Optional[int]) -> Optional[Dict[str, float]]:
     """Measured µs per candidate, or None when the model cannot cover the
-    call (unknown batch, heterogeneous dims, or ANY uncovered candidate —
-    µs and static ints are not comparable, so it is all or nothing)."""
+    call (unknown batch, heterogeneous dims, or an uncovered candidate —
+    except measured-only candidates (static cost >=
+    :data:`UNCALIBRATED_GATE_COST`), which are tolerated as uncovered and
+    simply lose: per-op calibrations, like a q8 decode-only run, must not
+    degrade every OTHER backend's measured dispatch to static)."""
     if batch is None or _hetero(cfg):
         return None
     model = cost_model()
@@ -591,12 +748,19 @@ def _measured_costs(legal, cfg: GRUConfig, *, op: str,
         return None
     dims = cfg.resolved_layer_dims
     out = {}
+    covered = 0
     for s in legal:
         us = model.lookup(s.name, op, depth=len(dims), batch=batch,
                           hidden=dims[0])
         if us is None:
+            if s.static_cost(op) >= UNCALIBRATED_GATE_COST:
+                out[s.name] = float("inf")   # measured-only, unmeasured here
+                continue
             return None
+        covered += 1
         out[s.name] = us
+    if not covered:
+        return None                          # nothing actually measured
     return out
 
 
@@ -636,7 +800,7 @@ def _select(op: str, cfg: GRUConfig, *, masked: bool, placement: Placement,
     mesh = placement.mesh
     legal = [s for s in _REGISTRY.values()
              if _legal(s, op=op, masked=masked, hetero=hetero, mesh=mesh,
-                       need_return_all=need_return_all)]
+                       need_return_all=need_return_all, cfg=cfg)]
     if not legal:
         return None, "static"
     measured = _measured_costs(legal, cfg, op=op, batch=batch)
@@ -710,7 +874,8 @@ def compile(cfg: GRUConfig, *, batch: Optional[int] = None,
                 f"dims={cfg.resolved_layer_dims} mesh={pl_.mesh}")
         sp = prepare(params, cfg,
                      pl_ if spec.caps.supports_mesh else None,
-                     want_stacked=spec.name == "pallas_fused")
+                     want_stacked=spec.name == "pallas_fused",
+                     want_quant=spec.name.endswith("_q8"))
         return spec.sequence_fn(sp, tuple(h0s), xs, cfg=cfg,
                                 return_all=return_all, mask=mask,
                                 placement=pl_)
@@ -721,7 +886,8 @@ def compile(cfg: GRUConfig, *, batch: Optional[int] = None,
     def run_decode(params, hs, x):
         sp = prepare(params, cfg,
                      pl_ if dec_spec.caps.supports_mesh else None,
-                     want_stacked=dec_spec.name == "pallas_fused")
+                     want_stacked=dec_spec.name == "pallas_fused",
+                     want_quant=dec_spec.name.endswith("_q8"))
         return dec_spec.decode_fn(sp, tuple(hs), x, cfg=cfg, placement=pl_)
 
     relevant = ([seq_src] if mode in ("prefill", "sequence") else

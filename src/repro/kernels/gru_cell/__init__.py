@@ -1,4 +1,5 @@
 from repro.kernels.gru_cell import ops, ref
-from repro.kernels.gru_cell.kernel import gru_step_blocked, gru_step_fused
+from repro.kernels.gru_cell.kernel import (gru_step_blocked, gru_step_fused,
+                                           gru_step_q8)
 
-__all__ = ["ops", "ref", "gru_step_fused", "gru_step_blocked"]
+__all__ = ["ops", "ref", "gru_step_fused", "gru_step_blocked", "gru_step_q8"]

@@ -129,3 +129,71 @@ def gru_step_blocked(h: jax.Array, x_proj: jax.Array, u: jax.Array, b: jax.Array
         ],
         interpret=interpret,
     )(h, xp3, u3, b3)
+
+
+# ---------------------------------------------------------------------------
+# q8 fused step: int8 weight rows resident, dequant folded into the bias add
+# ---------------------------------------------------------------------------
+
+def _doti(a, b):
+    """int8 x int8 -> int32, contracting the CONTIGUOUS last axes (weights
+    stored row-major per output element — the paper's per-lane layout)."""
+    return jax.lax.dot_general(a, b, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.int32)
+
+
+def _q8_act(a):
+    """Fixed-scale activation quantization: f32 in [-1, 1] -> int8 (the GRU
+    state is a convex combination of h0 and tanh outputs, so no dynamic
+    range scan is ever needed — see repro.core.params)."""
+    return jnp.clip(jnp.round(a * 127.0), -127.0, 127.0).astype(jnp.int8)
+
+
+def _q8_step_kernel(h_ref, xp_ref, uq_ref, eff_ref, b_ref, o_ref, *,
+                    variant: str):
+    H = h_ref.shape[-1]
+    h = h_ref[...].astype(jnp.float32)
+    xp = xp_ref[...].astype(jnp.float32)
+    uq = uq_ref[...]                                     # (3H, H) int8 rows
+    eff = eff_ref[...]                                   # (1, 3H)
+    b = b_ref[...].astype(jnp.float32)                   # (1, 3H)
+    xz, xr, xh = xp[:, :H], xp[:, H:2 * H], xp[:, 2 * H:]
+    hq = _q8_act(h)
+    if variant == "v3":
+        ua = _doti(hq, uq).astype(jnp.float32) * eff + b
+        z = jax.nn.sigmoid(xz + ua[:, :H])
+        r = jax.nn.sigmoid(xr + ua[:, H:2 * H])
+        ht = jnp.tanh(xh + r * ua[:, 2 * H:])
+    else:
+        zr = (_doti(hq, uq[:2 * H]).astype(jnp.float32) * eff[:, :2 * H]
+              + b[:, :2 * H])
+        z = jax.nn.sigmoid(xz + zr[:, :H])
+        r = jax.nn.sigmoid(xr + zr[:, H:])
+        cand = (_doti(_q8_act(r * h), uq[2 * H:]).astype(jnp.float32)
+                * eff[:, 2 * H:] + b[:, 2 * H:])
+        ht = jnp.tanh(xh + cand)
+    o_ref[...] = ((1.0 - z) * h + z * ht).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("variant", "interpret"))
+def gru_step_q8(h: jax.Array, x_proj: jax.Array, u_q: jax.Array,
+                u_eff: jax.Array, b: jax.Array, *, variant: str = "v1",
+                interpret: bool = False) -> jax.Array:
+    """q8 twin of :func:`gru_step_fused`: one step, everything
+    VMEM-resident, U stored as (3H, H) int8 rows (quarter footprint) with
+    per-row dequant scales ``u_eff`` (3H,) applied at the bias add.
+    h: (B,H), x_proj: (B,3H), b: (3H,)."""
+    B, H = h.shape
+    return pl.pallas_call(
+        functools.partial(_q8_step_kernel, variant=variant),
+        in_specs=[
+            pl.BlockSpec((B, H), lambda: (0, 0)),
+            pl.BlockSpec((B, 3 * H), lambda: (0, 0)),
+            pl.BlockSpec((3 * H, H), lambda: (0, 0)),
+            pl.BlockSpec((1, 3 * H), lambda: (0, 0)),
+            pl.BlockSpec((1, 3 * H), lambda: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((B, H), lambda: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H), h.dtype),
+        interpret=interpret,
+    )(h, x_proj, u_q, u_eff[None, :], b[None, :])

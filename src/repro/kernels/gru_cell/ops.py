@@ -21,3 +21,14 @@ def gru_step_pallas(h: jax.Array, x_proj: jax.Array, u: jax.Array, b: jax.Array,
         # blocked path only implements paper math -> fall back to fused.
         return gru_step_fused(h, x_proj, u, b, variant=variant, interpret=on_cpu())
     return gru_step_blocked(h, x_proj, u, b, block_n=block_n, interpret=on_cpu())
+
+
+def gru_step_q8_pallas(h: jax.Array, x_proj: jax.Array, u_q: jax.Array,
+                       u_eff: jax.Array, b: jax.Array,
+                       variant: str = "v1") -> jax.Array:
+    """Public q8 single-step entry (whole-state-resident fused kernel; at
+    int8 the (3H,H) weight block fits the single-block budget to 4x the
+    f32 hidden-size range, so no blocked variant is needed)."""
+    from repro.kernels.gru_cell.kernel import gru_step_q8
+    return gru_step_q8(h, x_proj, u_q, u_eff, b, variant=variant,
+                       interpret=on_cpu())

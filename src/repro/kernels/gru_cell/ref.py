@@ -5,6 +5,45 @@ import jax
 import jax.numpy as jnp
 
 
+def _q8_act_ref(a):
+    """Fixed-scale activation quantization kept in f32 (integer-valued):
+    the oracle's dots then accumulate EXACTLY the kernel's int32 sums
+    (products of int8 pairs and their partial sums stay below 2^24, so f32
+    represents them exactly at test sizes)."""
+    return jnp.clip(jnp.round(jnp.asarray(a, jnp.float32) * 127.0),
+                    -127.0, 127.0)
+
+
+def gru_step_q8_ref(h, x_proj, u_q, u_eff, b, variant: str = "v1"):
+    """Quantize-dequantize oracle for the q8 step kernels.
+
+    h: (B,H) f32 state, x_proj: (B,3H) f32 Wx, u_q: (3H,H) int8 weight
+    rows (transposed per-row layout of ``quantize_rows_int8``), u_eff:
+    (3H,) f32 per-row dequant scales (activation scale folded), b: (3H,).
+    Mirrors the kernel arithmetic op for op — same rounding, same dequant
+    multiply at the bias add — in plain jnp."""
+    h = jnp.asarray(h, jnp.float32)
+    xp = jnp.asarray(x_proj, jnp.float32)
+    uqf = jnp.asarray(u_q, jnp.float32)        # (3H, H) integer-valued
+    eff = jnp.asarray(u_eff, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    H = h.shape[-1]
+    xz, xr, xh = xp[..., :H], xp[..., H:2 * H], xp[..., 2 * H:]
+    hq = _q8_act_ref(h)
+    if variant == "v3":
+        ua = hq @ uqf.T * eff + b
+        z = jax.nn.sigmoid(xz + ua[..., :H])
+        r = jax.nn.sigmoid(xr + ua[..., H:2 * H])
+        ht = jnp.tanh(xh + r * ua[..., 2 * H:])
+    else:
+        zr = hq @ uqf[:2 * H].T * eff[:2 * H] + b[:2 * H]
+        z = jax.nn.sigmoid(xz + zr[..., :H])
+        r = jax.nn.sigmoid(xr + zr[..., H:])
+        ht = jnp.tanh(xh + _q8_act_ref(r * h) @ uqf[2 * H:].T * eff[2 * H:]
+                      + b[2 * H:])
+    return (1 - z) * h + z * ht
+
+
 def gru_step_ref(h, x_proj, u, b, variant: str = "v1"):
     """h: (B,H), x_proj: (B,3H) = Wx already applied, u: (H,3H), b: (3H,)."""
     h = jnp.asarray(h, jnp.float32)

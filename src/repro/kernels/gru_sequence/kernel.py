@@ -328,6 +328,286 @@ def gru_stack_decode_kernel(h: jax.Array, x_proj: jax.Array, u: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# q8 datapath: int8 weight rows, int32 accumulation, dequant at the bias add
+# ---------------------------------------------------------------------------
+#
+# The paper's AIE lanes MAC int8 weight ROWS against the activation vector;
+# these kernels keep that layout literally. U (and the deep layers' W) are
+# stored TRANSPOSED, (3H, H) int8 — one contiguous row per output element,
+# quantized per row (``repro.core.params.quantize_rows_int8``), so the int8
+# reduction runs over contiguous memory and the VMEM-resident weight
+# footprint is a quarter of f32 (the depth x H range that stays resident
+# roughly quadruples — the AIE local-memory story). Activations use the
+# FIXED scale 127 (h and r*h live in (-1,1) — see params.py): quantization
+# inside the kernel is one round+clip, no dynamic range scan, and the
+# per-row dequant is one multiply folded into the bias add
+# (``acc * eff + b`` with ``eff = scale_row / 127`` precomputed at
+# prepare() time).
+
+
+def _doti(a, b):
+    """int8 x int8 -> int32, contracting the CONTIGUOUS last axes:
+    a (B, K) against row-major weights (N, K)."""
+    return jax.lax.dot_general(a, b, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.int32)
+
+
+def _q8_act(a):
+    """Fixed-scale activation quantization: f32 in [-1, 1] -> int8."""
+    return jnp.clip(jnp.round(a * 127.0), -127.0, 127.0).astype(jnp.int8)
+
+
+def _gate_math_q8(h, xp, uq, eff, b, variant: str):
+    """One q8 cell update. h: (B,H) f32 state, xp: (B,3H) f32 input
+    projection, uq: (3H,H) int8 weight rows, eff/b: (1,3H) f32 per-row
+    dequant scales (activation scale folded) and bias."""
+    H = h.shape[-1]
+    xz, xr, xh = xp[:, :H], xp[:, H:2 * H], xp[:, 2 * H:]
+    hq = _q8_act(h)
+    if variant == "v3":
+        ua = _doti(hq, uq).astype(jnp.float32) * eff + b
+        z = jax.nn.sigmoid(xz + ua[:, :H])
+        r = jax.nn.sigmoid(xr + ua[:, H:2 * H])
+        ht = jnp.tanh(xh + r * ua[:, 2 * H:])
+    else:
+        zr = (_doti(hq, uq[:2 * H]).astype(jnp.float32) * eff[:, :2 * H]
+              + b[:, :2 * H])
+        z = jax.nn.sigmoid(xz + zr[:, :H])
+        r = jax.nn.sigmoid(xr + zr[:, H:])
+        cand = (_doti(_q8_act(r * h), uq[2 * H:]).astype(jnp.float32)
+                * eff[:, 2 * H:] + b[:, 2 * H:])
+        ht = jnp.tanh(xh + cand)
+    return (1.0 - z) * h + z * ht
+
+
+def _seq_kernel_q8(h0_ref, xp_ref, uq_ref, eff_ref, b_ref, o_ref, h_s, *,
+                   variant: str):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        h_s[...] = h0_ref[...].astype(jnp.float32)
+
+    xp = xp_ref[...][0].astype(jnp.float32)               # (B, 3H) this step
+    h_new = _gate_math_q8(h_s[...], xp, uq_ref[...], eff_ref[...],
+                          b_ref[...].astype(jnp.float32), variant)
+    h_s[...] = h_new
+    o_ref[...] = h_new[None].astype(o_ref.dtype)
+
+
+def _seq_kernel_q8_masked(h0_ref, xp_ref, uq_ref, eff_ref, b_ref, m_ref,
+                          o_ref, h_s, *, variant: str):
+    """Masked q8 sequence: identical freeze semantics to the f32 kernel
+    (``where`` selects, it does not perturb — and the quantized arithmetic
+    of live rows is independent of dead rows), so bucketed left-padded
+    prompts stay bitwise-identical to their unpadded q8 originals."""
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        h_s[...] = h0_ref[...].astype(jnp.float32)
+
+    xp = xp_ref[...][0].astype(jnp.float32)               # (B, 3H) this step
+    keep = m_ref[...][0] != 0.0                           # (B,) this step
+    h_new = _gate_math_q8(h_s[...], xp, uq_ref[...], eff_ref[...],
+                          b_ref[...].astype(jnp.float32), variant)
+    h_new = jnp.where(keep[:, None], h_new, h_s[...])     # freeze masked rows
+    h_s[...] = h_new
+    o_ref[...] = h_new[None].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("variant", "interpret"))
+def gru_sequence_q8_kernel(h0: jax.Array, x_proj: jax.Array, u_q: jax.Array,
+                           u_eff: jax.Array, b: jax.Array, mask=None, *,
+                           variant: str = "v1",
+                           interpret: bool = False) -> jax.Array:
+    """q8 twin of :func:`gru_sequence_kernel`. h0: (B,H), x_proj: (T,B,3H)
+    f32 time-major Wx, u_q: (3H,H) int8 weight rows (pinned in VMEM at a
+    quarter of the f32 footprint), u_eff: (3H,) f32 per-row dequant
+    scales, b: (3H,) -> all hidden states (T,B,H) f32."""
+    T, B, H3 = x_proj.shape
+    H = H3 // 3
+    in_specs = [
+        pl.BlockSpec((B, H), lambda t: (0, 0)),            # h0: resident
+        pl.BlockSpec((1, B, 3 * H), lambda t: (t, 0, 0)),  # stream step t
+        pl.BlockSpec((3 * H, H), lambda t: (0, 0)),        # int8 U: ONCE
+        pl.BlockSpec((1, 3 * H), lambda t: (0, 0)),
+        pl.BlockSpec((1, 3 * H), lambda t: (0, 0)),
+    ]
+    args = [h0, x_proj, u_q, u_eff[None, :], b[None, :]]
+    if mask is None:
+        kern = functools.partial(_seq_kernel_q8, variant=variant)
+    else:
+        kern = functools.partial(_seq_kernel_q8_masked, variant=variant)
+        in_specs.append(pl.BlockSpec((1, B), lambda t: (t, 0)))  # step's mask
+        args.append(mask.astype(jnp.float32))
+    return pl.pallas_call(
+        kern,
+        grid=(T,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, B, H), lambda t: (t, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((T, B, H), h0.dtype),
+        scratch_shapes=[pltpu.VMEM((B, H), jnp.float32)],
+        interpret=interpret,
+    )(*args)
+
+
+def _stack_kernel_q8(h0_ref, xp_ref, uq_ref, eff_ref, wdq_ref, wde_ref,
+                     b_ref, o_ref, hT_ref, h_s, *, variant: str,
+                     num_layers: int):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        h_s[...] = h0_ref[...].astype(jnp.float32)
+
+    b = b_ref[...].astype(jnp.float32)                    # (L, 3H)
+    eff = eff_ref[...]                                    # (L, 3H)
+    xp = xp_ref[...][0].astype(jnp.float32)               # (B, 3H): layer 0 Wx
+    for l in range(num_layers):                           # static unroll
+        h_new = _gate_math_q8(h_s[l], xp, uq_ref[l], eff[l:l + 1],
+                              b[l:l + 1], variant)
+        h_s[l] = h_new
+        if l + 1 < num_layers:
+            # deep input projection: int8 rows too (h_new is in (-1,1))
+            xp = (_doti(_q8_act(h_new), wdq_ref[l]).astype(jnp.float32)
+                  * wde_ref[l][None])
+    o_ref[...] = h_new[None].astype(o_ref.dtype)
+    hT_ref[...] = h_s[...].astype(hT_ref.dtype)
+
+
+def _stack_kernel_q8_masked(h0_ref, xp_ref, uq_ref, eff_ref, wdq_ref,
+                            wde_ref, b_ref, m_ref, o_ref, hT_ref, h_s, *,
+                            variant: str, num_layers: int):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        h_s[...] = h0_ref[...].astype(jnp.float32)
+
+    b = b_ref[...].astype(jnp.float32)                    # (L, 3H)
+    eff = eff_ref[...]                                    # (L, 3H)
+    xp = xp_ref[...][0].astype(jnp.float32)               # (B, 3H): layer 0 Wx
+    keep = m_ref[...][0] != 0.0                           # (B,) this step
+    for l in range(num_layers):                           # static unroll
+        h_new = _gate_math_q8(h_s[l], xp, uq_ref[l], eff[l:l + 1],
+                              b[l:l + 1], variant)
+        h_new = jnp.where(keep[:, None], h_new, h_s[l])   # freeze masked rows
+        h_s[l] = h_new
+        if l + 1 < num_layers:
+            xp = (_doti(_q8_act(h_new), wdq_ref[l]).astype(jnp.float32)
+                  * wde_ref[l][None])
+    o_ref[...] = h_new[None].astype(o_ref.dtype)
+    hT_ref[...] = h_s[...].astype(hT_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("variant", "interpret"))
+def gru_stack_sequence_q8_kernel(h0: jax.Array, x_proj: jax.Array,
+                                 u_q: jax.Array, u_eff: jax.Array,
+                                 wd_q: jax.Array, wd_eff: jax.Array,
+                                 b: jax.Array, mask=None, *,
+                                 variant: str = "v1",
+                                 interpret: bool = False):
+    """q8 twin of :func:`gru_stack_sequence_kernel` (uniform hidden size).
+
+    h0: (L,B,H); x_proj: (T,B,3H) f32 layer-0 Wx; u_q: (L,3H,H) int8
+    weight rows with u_eff: (L,3H) dequant scales; wd_q: (L-1,3H,H) int8
+    deep-layer input projections with wd_eff: (L-1,3H) (pass the
+    ``quantize_gru_cells`` placeholders for L=1, unused); b: (L,3H).
+    Returns (last-layer states (T,B,H), per-layer finals (L,B,H))."""
+    T, B, H3 = x_proj.shape
+    H = H3 // 3
+    L = h0.shape[0]
+    Ld = max(L - 1, 1)
+    in_specs = [
+        pl.BlockSpec((L, B, H), lambda t: (0, 0, 0)),      # h0: resident
+        pl.BlockSpec((1, B, 3 * H), lambda t: (t, 0, 0)),  # stream step t
+        pl.BlockSpec((L, 3 * H, H), lambda t: (0, 0, 0)),  # int8 U: ONCE
+        pl.BlockSpec((L, 3 * H), lambda t: (0, 0)),
+        pl.BlockSpec((Ld,) + wd_q.shape[1:], lambda t: (0, 0, 0)),
+        pl.BlockSpec((Ld, 3 * H), lambda t: (0, 0)),
+        pl.BlockSpec((L, 3 * H), lambda t: (0, 0)),
+    ]
+    args = [h0, x_proj, u_q, u_eff, wd_q, wd_eff, b]
+    if mask is None:
+        kern = functools.partial(_stack_kernel_q8, variant=variant,
+                                 num_layers=L)
+    else:
+        kern = functools.partial(_stack_kernel_q8_masked, variant=variant,
+                                 num_layers=L)
+        in_specs.append(pl.BlockSpec((1, B), lambda t: (t, 0)))  # step's mask
+        args.append(mask.astype(jnp.float32))
+    hs, hT = pl.pallas_call(
+        kern,
+        grid=(T,),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, B, H), lambda t: (t, 0, 0)),
+            pl.BlockSpec((L, B, H), lambda t: (0, 0, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((T, B, H), h0.dtype),
+                   jax.ShapeDtypeStruct((L, B, H), h0.dtype)],
+        scratch_shapes=[pltpu.VMEM((L, B, H), jnp.float32)],
+        interpret=interpret,
+    )(*args)
+    return hs, hT
+
+
+def _decode_kernel_q8(h_ref, xp_ref, uq_ref, eff_ref, wdq_ref, wde_ref,
+                      b_ref, o_ref, *, variant: str, num_layers: int):
+    """One token through all L layers for one batch tile, int8 weights
+    resident (a quarter of the f32 VMEM footprint — the paper's
+    local-memory residency at AIE precision)."""
+    b = b_ref[...].astype(jnp.float32)                    # (L, 3H)
+    eff = eff_ref[...]                                    # (L, 3H)
+    xp = xp_ref[...].astype(jnp.float32)                  # (Bt, 3H)
+    for l in range(num_layers):                           # static unroll
+        h_new = _gate_math_q8(h_ref[l].astype(jnp.float32), xp,
+                              uq_ref[l], eff[l:l + 1], b[l:l + 1], variant)
+        o_ref[l] = h_new.astype(o_ref.dtype)
+        if l + 1 < num_layers:
+            xp = (_doti(_q8_act(h_new), wdq_ref[l]).astype(jnp.float32)
+                  * wde_ref[l][None])
+
+
+@functools.partial(jax.jit, static_argnames=("variant", "batch_block",
+                                             "interpret"))
+def gru_stack_decode_q8_kernel(h: jax.Array, x_proj: jax.Array,
+                               u_q: jax.Array, u_eff: jax.Array,
+                               wd_q: jax.Array, wd_eff: jax.Array,
+                               b: jax.Array, *, variant: str = "v1",
+                               batch_block: int = 0,
+                               interpret: bool = False) -> jax.Array:
+    """q8 twin of :func:`gru_stack_decode_kernel` — the latency path at the
+    paper's precision. h: (L,B,H) f32 states; x_proj: (B,3H) f32 layer-0
+    Wx; u_q/u_eff, wd_q/wd_eff, b as in the q8 sequence kernel. Returns
+    the new per-layer states (L,B,H) f32 (the state itself stays f32: the
+    convex update accumulates full precision; only the matvecs are int8)."""
+    L, B, H = h.shape
+    Bt = batch_block or _pick_batch_block(B)
+    assert B % Bt == 0, (B, Bt)
+    Ld = max(L - 1, 1)
+    return pl.pallas_call(
+        functools.partial(_decode_kernel_q8, variant=variant, num_layers=L),
+        grid=(B // Bt,),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel",)),
+        in_specs=[
+            pl.BlockSpec((L, Bt, H), lambda i: (0, i, 0)),     # batch tile
+            pl.BlockSpec((Bt, 3 * H), lambda i: (i, 0)),       # its Wx slab
+            pl.BlockSpec((L, 3 * H, H), lambda i: (0, 0, 0)),  # int8 U: ONCE
+            pl.BlockSpec((L, 3 * H), lambda i: (0, 0)),
+            pl.BlockSpec((Ld,) + wd_q.shape[1:], lambda i: (0, 0, 0)),
+            pl.BlockSpec((Ld, 3 * H), lambda i: (0, 0)),
+            pl.BlockSpec((L, 3 * H), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((L, Bt, H), lambda i: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((L, B, H), h.dtype),
+        interpret=interpret,
+    )(h, x_proj, u_q, u_eff, wd_q, wd_eff, b)
+
+
+# ---------------------------------------------------------------------------
 # shard-shaped step kernels (the pallas_sharded backend's per-tile programs)
 # ---------------------------------------------------------------------------
 #

@@ -30,8 +30,11 @@ import jax.numpy as jnp
 
 from repro.kernels import on_cpu
 from repro.kernels.gru_sequence.kernel import (gru_sequence_kernel,
+                                               gru_sequence_q8_kernel,
                                                gru_stack_decode_kernel,
-                                               gru_stack_sequence_kernel)
+                                               gru_stack_decode_q8_kernel,
+                                               gru_stack_sequence_kernel,
+                                               gru_stack_sequence_q8_kernel)
 
 
 def _time_major_mask(mask: Optional[jax.Array]) -> Optional[jax.Array]:
@@ -173,6 +176,118 @@ def gru_stack_decode_pallas_chain(params: tuple, hs: tuple, x: jax.Array, *,
 
 
 # ---------------------------------------------------------------------------
+# q8 backends: same decoupled-GEMM split, int8 recurrent weight rows
+# ---------------------------------------------------------------------------
+#
+# The layer-0 input projection STAYS f32 (one MXU GEMM outside the kernel,
+# exactly like the f32 backends); only the latency-critical recurrent path —
+# and, for the fused variants, the deep-layer input projections — runs on
+# int8 weight rows. The int8 views come from ``StackParams.quant``
+# (built once by ``runtime.prepare``); the fallback quantization below is
+# for direct raw-param calls only and never runs on the executor path.
+
+def _quant_views(params: tuple, quant):
+    if quant is None:
+        from repro.core.params import quantize_gru_cells
+        quant = quantize_gru_cells(tuple(params))
+    return quant
+
+
+def gru_sequence_pallas_q8(params: dict, qcell: dict, h0: jax.Array,
+                           xs: jax.Array, *, cfg,
+                           return_all: bool = False, mask=None):
+    """Single-layer q8 sequence: f32 W.x GEMM + int8-row recurrent kernel.
+    ``qcell``: {"u_q" (3H,H) int8, "u_eff" (3H,)} for THIS layer."""
+    xp = xs @ params["w"]                          # (B,T,3H) decoupled, f32
+    xp_t = jnp.moveaxis(xp, -2, 0)                 # (T,B,3H)
+    hs = gru_sequence_q8_kernel(h0, xp_t, qcell["u_q"], qcell["u_eff"],
+                                params["b"], _time_major_mask(mask),
+                                variant=cfg.variant, interpret=on_cpu())
+    hT = hs[-1]
+    if return_all:
+        return hT, jnp.moveaxis(hs, 0, -2)
+    return hT, None
+
+
+def gru_stack_sequence_pallas_q8(params: tuple, h0s: tuple, xs: jax.Array,
+                                 *, cfg, return_all: bool = False,
+                                 mask=None, quant=None):
+    """Fused q8 depth-L stack (uniform hidden sizes): ONE pallas_call with
+    U and the deep-layer W pinned in VMEM as int8 rows. No L==1 special
+    case: the stacked quant views always exist for uniform dims."""
+    q = _quant_views(params, quant)
+    st = q.stacked
+    xp = xs @ params[0]["w"]                       # layer-0 decoupled GEMM
+    xp_t = jnp.moveaxis(xp, -2, 0)                 # (T,B,3H)
+    h0 = jnp.stack(tuple(h0s), 0)                  # (L,B,H)
+    hs, hT = gru_stack_sequence_q8_kernel(h0, xp_t, st["u_q"], st["u_eff"],
+                                          st["wd_q"], st["wd_eff"], st["b"],
+                                          _time_major_mask(mask),
+                                          variant=cfg.variant,
+                                          interpret=on_cpu())
+    finals = tuple(hT[l] for l in range(len(params)))
+    if return_all:
+        return finals, jnp.moveaxis(hs, 0, -2)
+    return finals, None
+
+
+def gru_stack_sequence_pallas_chain_q8(params: tuple, h0s: tuple,
+                                       xs: jax.Array, *, cfg,
+                                       return_all: bool = False, mask=None,
+                                       quant=None):
+    """Per-layer q8 chain (serves heterogeneous ``layer_dims``): one q8
+    sequence kernel per layer, inter-layer input projections kept as f32
+    GEMMs outside the kernels (so the traced call still contains no
+    activation-quantize ops outside pallas_call)."""
+    from repro.core.gru import layer_config
+    q = _quant_views(params, quant)
+    L = len(params)
+    finals, cur, hs = [], xs, None
+    for l in range(L):
+        last = l == L - 1
+        hT, hs = gru_sequence_pallas_q8(params[l], q.cells[l], h0s[l], cur,
+                                        cfg=layer_config(cfg, l),
+                                        return_all=(not last) or return_all,
+                                        mask=mask)
+        finals.append(hT)
+        if not last:
+            cur = hs
+    return tuple(finals), (hs if return_all else None)
+
+
+def gru_stack_decode_pallas_q8(params: tuple, hs: tuple, x: jax.Array, *,
+                               cfg, quant=None) -> tuple:
+    """Fused q8 decode step: ONE pallas_call, whole stack, one token —
+    the latency shape the int8 rows were laid out for (B=1 matvecs are
+    bandwidth-bound, and the int8 working set is a quarter of f32)."""
+    q = _quant_views(params, quant)
+    st = q.stacked
+    xp = x @ params[0]["w"]                        # (B,3H), f32
+    h = jnp.stack(tuple(hs), 0)                    # (L,B,H)
+    h2 = gru_stack_decode_q8_kernel(h, xp, st["u_q"], st["u_eff"],
+                                    st["wd_q"], st["wd_eff"], st["b"],
+                                    variant=cfg.variant, interpret=on_cpu())
+    return tuple(h2[l] for l in range(len(params)))
+
+
+def gru_stack_decode_pallas_chain_q8(params: tuple, hs: tuple, x: jax.Array,
+                                     *, cfg, quant=None) -> tuple:
+    """Per-layer q8 decode (heterogeneous ``layer_dims``): one q8 step
+    kernel per layer, f32 inter-layer projections."""
+    from repro.kernels.gru_cell.ops import gru_step_q8_pallas
+    q = _quant_views(params, quant)
+    cur, out = x, []
+    for l, p in enumerate(params):
+        xp = cur @ p["w"]                          # (B,3H) this layer's Wx
+        h2 = gru_step_q8_pallas(hs[l], xp, q.cells[l]["u_q"],
+                                q.cells[l]["u_eff"], p["b"],
+                                variant=cfg.variant)
+        out.append(h2)
+        cur = h2
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
 # runtime registration: the kernels package plugs its backends into the
 # executor's capability registry (see repro.core.runtime's module docstring
 # for the full table).
@@ -224,4 +339,44 @@ def register_runtime_backends() -> None:
                                   decode=True, sequence=True),
         cost=20,
         sequence_fn=chain_seq, decode_fn=chain_dec))
+
+    def fused_seq_q8(sp, h0s, xs, *, cfg, return_all, mask, placement):
+        return gru_stack_sequence_pallas_q8(sp.cells, tuple(h0s), xs,
+                                            cfg=cfg, return_all=return_all,
+                                            mask=mask, quant=sp.quant)
+
+    def fused_dec_q8(sp, hs, x, *, cfg, placement):
+        return gru_stack_decode_pallas_q8(sp.cells, tuple(hs), x, cfg=cfg,
+                                          quant=sp.quant)
+
+    def chain_seq_q8(sp, h0s, xs, *, cfg, return_all, mask, placement):
+        return gru_stack_sequence_pallas_chain_q8(sp.cells, tuple(h0s), xs,
+                                                  cfg=cfg,
+                                                  return_all=return_all,
+                                                  mask=mask, quant=sp.quant)
+
+    def chain_dec_q8(sp, hs, x, *, cfg, placement):
+        return gru_stack_decode_pallas_chain_q8(sp.cells, tuple(hs), x,
+                                                cfg=cfg, quant=sp.quant)
+
+    # the q8 twins are MEASURED-ONLY (static cost above the runtime's
+    # UNCALIBRATED_GATE_COST line): legality already requires the accuracy
+    # gate (or an exact pin), and even then `auto` only picks them where a
+    # calibration shows the int8 rows actually win at that shape.
+    runtime.register_backend(runtime.BackendSpec(
+        name="pallas_fused_q8",
+        caps=runtime.Capabilities(supports_mask=True,
+                                  supports_hetero_dims=False,
+                                  supports_mesh=False, return_all=True,
+                                  decode=True, sequence=True),
+        cost=150,
+        sequence_fn=fused_seq_q8, decode_fn=fused_dec_q8))
+    runtime.register_backend(runtime.BackendSpec(
+        name="pallas_chain_q8",
+        caps=runtime.Capabilities(supports_mask=True,
+                                  supports_hetero_dims=True,
+                                  supports_mesh=False, return_all=True,
+                                  decode=True, sequence=True),
+        cost=160,
+        sequence_fn=chain_seq_q8, decode_fn=chain_dec_q8))
     _REGISTERED = True

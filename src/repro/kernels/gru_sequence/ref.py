@@ -1,9 +1,15 @@
-"""Oracle for the whole-sequence kernel: step-by-step fp32 recurrence."""
+"""Oracle for the whole-sequence kernel: step-by-step fp32 recurrence.
+
+The ``*_q8_ref`` twins are the quantize-dequantize oracles for the q8
+kernels: same transposed int8 weight rows, same fixed-scale activation
+rounding, same dequant-at-the-bias-add — expressed step by step in plain
+jnp (see :func:`repro.kernels.gru_cell.ref.gru_step_q8_ref`)."""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.kernels.gru_cell.ref import gru_step_ref
+from repro.kernels.gru_cell.ref import (_q8_act_ref, gru_step_q8_ref,
+                                        gru_step_ref)
 
 
 def gru_sequence_ref(h0, x_proj, u, b, variant: str = "v1"):
@@ -48,4 +54,62 @@ def gru_stack_decode_ref(h, x_proj, u, w_deep, b, variant: str = "v1"):
         out.append(h_new)
         if l + 1 < L:
             xp = h_new @ jnp.asarray(w_deep[l], jnp.float32)
+    return jnp.stack(out, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# q8 quantize-dequantize oracles
+# ---------------------------------------------------------------------------
+
+def gru_sequence_q8_ref(h0, x_proj, u_q, u_eff, b, variant: str = "v1"):
+    """h0: (B,H), x_proj: (T,B,3H) f32, u_q: (3H,H) int8 rows, u_eff:
+    (3H,) -> (T,B,H)."""
+    h = jnp.asarray(h0, jnp.float32)
+    out = []
+    for t in range(x_proj.shape[0]):
+        h = gru_step_q8_ref(h, x_proj[t], u_q, u_eff, b, variant=variant)
+        out.append(h)
+    return jnp.stack(out, axis=0)
+
+
+def _deep_xp_q8(h, wd_q, wd_eff):
+    """Deep-layer q8 input projection: quantized h against int8 W rows."""
+    return (_q8_act_ref(h) @ jnp.asarray(wd_q, jnp.float32).T
+            * jnp.asarray(wd_eff, jnp.float32))
+
+
+def gru_stack_sequence_q8_ref(h0, x_proj, u_q, u_eff, wd_q, wd_eff, b,
+                              variant: str = "v1"):
+    """Oracle for the fused q8 stack kernel, same raw-array interface.
+
+    h0: (L,B,H), x_proj: (T,B,3H) f32 layer-0 Wx, u_q: (L,3H,H) int8 with
+    u_eff (L,3H), wd_q: (L-1,3H,H) int8 with wd_eff (L-1,3H), b: (L,3H)
+    -> ((T,B,H) last-layer states, (L,B,H) per-layer finals)."""
+    L = h0.shape[0]
+    hs = [jnp.asarray(h0[l], jnp.float32) for l in range(L)]
+    out = []
+    for t in range(x_proj.shape[0]):
+        xp = jnp.asarray(x_proj[t], jnp.float32)
+        for l in range(L):
+            hs[l] = gru_step_q8_ref(hs[l], xp, u_q[l], u_eff[l], b[l],
+                                    variant=variant)
+            if l + 1 < L:
+                xp = _deep_xp_q8(hs[l], wd_q[l], wd_eff[l])
+        out.append(hs[-1])
+    return jnp.stack(out, axis=0), jnp.stack(hs, axis=0)
+
+
+def gru_stack_decode_q8_ref(h, x_proj, u_q, u_eff, wd_q, wd_eff, b,
+                            variant: str = "v1"):
+    """Oracle for the fused q8 decode-step kernel: h (L,B,H), x_proj
+    (B,3H) f32 layer-0 Wx of ONE token -> new states (L,B,H)."""
+    L = h.shape[0]
+    xp = jnp.asarray(x_proj, jnp.float32)
+    out = []
+    for l in range(L):
+        h_new = gru_step_q8_ref(h[l], xp, u_q[l], u_eff[l], b[l],
+                                variant=variant)
+        out.append(h_new)
+        if l + 1 < L:
+            xp = _deep_xp_q8(h_new, wd_q[l], wd_eff[l])
     return jnp.stack(out, axis=0)

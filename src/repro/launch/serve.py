@@ -41,16 +41,21 @@ def main(argv=None):
     p.add_argument("--gru-backend",
                    choices=("xla", "pallas", "auto", "pallas_fused",
                             "pallas_chain", "sharded", "pallas_sharded",
-                            "sharded_decode"),
+                            "sharded_decode", "pallas_fused_q8",
+                            "pallas_chain_q8"),
                    default=None,
                    help="executor backend preference (pallas = fused "
                         "kernel family; an exact name pins that backend — "
                         "the mesh-requiring ones [sharded, pallas_sharded, "
                         "sharded_decode] need a sharded launch and fall "
-                        "through otherwise; auto = cheapest legal backend "
+                        "through otherwise; the *_q8 pins serve the int8 "
+                        "datapath regardless of the accuracy gate [explicit "
+                        "opt-in]; auto = cheapest legal backend "
                         "— measured per-shape costs when "
                         "BENCH_backend_costs.json is loaded, the static "
-                        "table otherwise)")
+                        "table otherwise, with the q8 backends eligible "
+                        "only when BENCH_quant_accuracy.json records a "
+                        "pass)")
     p.add_argument("--bucket-min", type=int, default=8)
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
@@ -97,6 +102,7 @@ def main(argv=None):
         attributed = ",".join(f"{k}:{v}" for k, v in sorted(steps.items()))
         print(f"executor: prefill={'/'.join(pf) or '-'} "
               f"decode={engine.decode_backend} "
+              f"dtype={stats.get('served_dtype')} "
               f"decode_steps=[{attributed or '-'}]")
     return done
 

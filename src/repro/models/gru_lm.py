@@ -68,13 +68,18 @@ def prepare_params(params: dict, cfg: ModelConfig,
     restacks U/W/b, and — under a mesh — perform the sharded backends'
     gate-major reshapes and ``device_put``s up front
     (``"placed_cells"``), so traced execute calls do no weight placement.
-    No-op for already-prepared params."""
+    When the config requests the q8 datapath (``cfg.gru.quant`` or a
+    ``*_q8`` backend pin) the int8 weight views are computed here too
+    (``"quant_cells"``) — the serve trace then contains no weight
+    quantization ops. No-op for already-prepared params."""
     sp = runtime.prepare(params, cfg.gru, _placement(ctx))
     out = {"cells": sp.cells, "head": params["head"]}
     if sp.stacked is not None:
         out["stacked_cells"] = sp.stacked
     if sp.placed is not None:
         out["placed_cells"] = sp.placed
+    if sp.quant is not None:
+        out["quant_cells"] = sp.quant
     return out
 
 

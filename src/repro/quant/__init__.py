@@ -1,0 +1,1 @@
+"""Quantized-datapath tooling: the q8 accuracy gate harness."""

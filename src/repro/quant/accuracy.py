@@ -1,0 +1,190 @@
+"""q8 accuracy gate: measure the int8 datapath against the f32 oracle.
+
+The q8 backends change numerics, so they are not allowed into ``auto``
+dispatch on speed alone: this harness quantifies the damage on the
+paper's jet-tagging task and RECORDS it — the written artifact
+(``BENCH_quant_accuracy.json``) is what opens the dispatch gate
+(``repro.core.runtime.quant_gate_open``). No artifact, a stale/failed
+one, or one from a different bench ⇒ the q8 backends stay
+pin-only. That is the intended lifecycle: **calibrate accuracy first,
+then let the cost model route to int8** — never the other way round.
+
+Protocol: train the jet-tagging classifier (short teacher-aligned run on
+the synthetic stream — enough to open real logit margins; parity on an
+untrained net is vacuous because near-tied logits flip argmax on noise),
+then compare class logits of every q8 backend against the f32 oracle on
+a held-out eval set:
+
+* ``max_abs_logit_err`` / ``mean_abs_logit_err`` — logit error bounds,
+* ``argmax_match``     — raw top-1 agreement over the whole eval set,
+* ``argmax_match_confident`` — classification parity over the example
+  eval set: examples whose f32 top-2 logit gap is at least ``tie_eps``.
+  Below that margin the oracle's own argmax is a coin flip under ANY
+  numerical perturbation (a different f32 reduction order included), so
+  a disagreement there measures the tie, not the datapath. Ties are
+  counted and reported (``ties``), never silently dropped.
+* ``passed``           — confident-set parity == 1.0 for every measured
+  backend AND max logit error within ``--bound``.
+
+    PYTHONPATH=src python -m repro.quant.accuracy [--smoke] \
+        [--json BENCH_quant_accuracy.json] [--bound 0.05] [--depth L]
+
+CSV: name,value,detail
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ShapeConfig, get_config
+from repro.core import gru as gru_core
+from repro.core.params import init_params
+from repro.data.pipeline import SyntheticStream
+from repro.models import gru_lm
+
+Q8_BACKENDS = ("pallas_fused_q8", "pallas_chain_q8")
+
+
+def _train(mcfg, batch: int, steps: int, lr: float, seed: int = 0):
+    """Short SGD run on the synthetic jet stream (linear-teacher labels:
+    learnable, so logit margins open within a few hundred steps)."""
+    params = init_params(gru_lm.lm_specs(mcfg), jax.random.key(seed))
+    params = {"head": params["head"],
+              **{k: params[k] for k in ("cell", "cells") if k in params}}
+    stream = SyntheticStream(mcfg, ShapeConfig(
+        "quant_train", seq_len=mcfg.gru.seq_len, global_batch=batch,
+        kind="train"))
+
+    @jax.jit
+    def step(p, feats, labels):
+        def loss(p):
+            l, _ = gru_lm.loss_fn(p, mcfg, {"features": feats,
+                                            "labels": labels})
+            return l
+        l, g = jax.value_and_grad(loss)(p)
+        return jax.tree_util.tree_map(lambda w, gw: w - lr * gw, p, g), l
+
+    last = float("nan")
+    for i in range(steps):
+        b = stream.batch_at(i)
+        params, l = step(params, jnp.asarray(b["features"]),
+                         jnp.asarray(b["labels"]))
+        last = float(l)
+    return params, last
+
+
+def _eval_logits(params, gcfg, xs):
+    """Class logits (B, C) under the datapath ``gcfg`` resolves to."""
+    return np.asarray(gru_core.gru_classify(params, xs, cfg=gcfg))
+
+
+def run(arch: str = "gru-jet", depth: int = None, hidden: int = None,
+        train_steps: int = 300, train_batch: int = 64, lr: float = 0.05,
+        eval_batches: int = 8, eval_batch: int = 64, bound: float = 0.05,
+        tie_eps: float = 0.02, backends=Q8_BACKENDS,
+        json_path: str = "BENCH_quant_accuracy.json",
+        csv: bool = True) -> dict:
+    mcfg = get_config(arch)
+    gcfg = mcfg.gru
+    if depth:
+        gcfg = dataclasses.replace(gcfg, num_layers=depth)
+    if hidden:
+        gcfg = dataclasses.replace(gcfg, hidden_dim=hidden)
+    mcfg = mcfg.replace(gru=gcfg)
+
+    params, final_loss = _train(mcfg, train_batch, train_steps, lr)
+
+    # held-out eval batches: a different stream seed than training
+    stream = SyntheticStream(mcfg, ShapeConfig(
+        "quant_eval", seq_len=gcfg.seq_len, global_batch=eval_batch,
+        kind="prefill"))
+    feats = [jnp.asarray(stream.batch_at(10_000 + i)["features"])
+             for i in range(eval_batches)]
+
+    f32_cfg = dataclasses.replace(gcfg, backend="xla")
+    oracle = [_eval_logits(params, f32_cfg, xs) for xs in feats]
+    # f32 top-2 logit gap per example: the confidence of the oracle's own
+    # decision. Examples under tie_eps are ties, reported separately.
+    top2 = [np.sort(ref, axis=-1)[:, -2:] for ref in oracle]
+    confident = [(t[:, 1] - t[:, 0]) >= tie_eps for t in top2]
+
+    per_backend, all_pass = {}, True
+    for name in backends:
+        qcfg = dataclasses.replace(gcfg, backend=name)  # exact pin: legal
+        errs, agree, agree_conf = [], [], []
+        for xs, ref, conf in zip(feats, oracle, confident):
+            got = _eval_logits(params, qcfg, xs)
+            errs.append(np.abs(got - ref))
+            same = got.argmax(-1) == ref.argmax(-1)
+            agree.append(same)
+            agree_conf.append(same[conf])
+        err = np.concatenate([e.ravel() for e in errs])
+        agree = np.concatenate(agree)
+        agree_conf = np.concatenate(agree_conf)
+        m = {"max_abs_logit_err": round(float(err.max()), 6),
+             "mean_abs_logit_err": round(float(err.mean()), 6),
+             "argmax_match": round(float(agree.mean()), 6),
+             "argmax_match_confident": round(float(agree_conf.mean()), 6),
+             "examples": int(agree.size),
+             "ties": int(agree.size - agree_conf.size)}
+        m["passed"] = (m["argmax_match_confident"] == 1.0
+                       and m["max_abs_logit_err"] <= bound)
+        all_pass = all_pass and m["passed"]
+        per_backend[name] = m
+        if csv:
+            print(f"quant_acc_{name},{m['max_abs_logit_err']:.6f},"
+                  f"argmax_match={m['argmax_match']:.4f};"
+                  f"confident={m['argmax_match_confident']:.4f}"
+                  f"({m['ties']}ties);"
+                  f"mean={m['mean_abs_logit_err']:.6f}")
+
+    out = {"bench": "gru_quant_accuracy", "schema": 1,
+           "device": jax.default_backend(), "arch": arch,
+           "config": {"depth": gcfg.resolved_num_layers,
+                      "hidden": gcfg.hidden_dim,
+                      "input_dim": gcfg.input_dim,
+                      "seq_len": gcfg.seq_len, "variant": gcfg.variant},
+           "train_steps": train_steps, "final_loss": round(final_loss, 4),
+           "bound": bound, "tie_eps": tie_eps,
+           "backends": per_backend, "passed": all_pass}
+    with open(json_path, "w") as f:
+        json.dump(out, f, indent=2)
+    if csv:
+        print(f"quant_acc_passed,{int(all_pass)},"
+              f"bound={bound};artifact={json_path}")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced run for CI (still writes the artifact)")
+    ap.add_argument("--arch", default="gru-jet")
+    ap.add_argument("--depth", type=int, default=None,
+                    help="override stack depth (default: the arch's)")
+    ap.add_argument("--hidden", type=int, default=None)
+    ap.add_argument("--train-steps", type=int, default=None)
+    ap.add_argument("--eval-batches", type=int, default=None)
+    ap.add_argument("--bound", type=float, default=0.05,
+                    help="max |logit error| allowed for passed=true")
+    ap.add_argument("--tie-eps", type=float, default=0.02,
+                    help="f32 top-2 logit gap under which an example "
+                         "counts as a tie (reported, excluded from the "
+                         "parity bar)")
+    ap.add_argument("--json", default="BENCH_quant_accuracy.json")
+    args = ap.parse_args()
+    if args.smoke:
+        run(arch=args.arch, depth=args.depth, hidden=args.hidden,
+            train_steps=args.train_steps or 80, train_batch=32,
+            eval_batches=args.eval_batches or 2, eval_batch=32,
+            bound=args.bound, tie_eps=args.tie_eps, json_path=args.json)
+    else:
+        run(arch=args.arch, depth=args.depth, hidden=args.hidden,
+            train_steps=args.train_steps or 300,
+            eval_batches=args.eval_batches or 8,
+            bound=args.bound, tie_eps=args.tie_eps, json_path=args.json)

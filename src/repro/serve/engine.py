@@ -361,7 +361,11 @@ class ServeEngine:
         for b in self.decode_backends:
             if b is not None:
                 per_backend[b] = per_backend.get(b, 0) + 1
+        from repro.core import runtime
         return {"decode_backend_steps": per_backend,
+                # the datapath precision the latest resolved decode backend
+                # serves (int8 for the *_q8 backends, float32 otherwise)
+                "served_dtype": runtime.backend_dtype(self.decode_backend),
                 "mean_s": float(ts.mean()),
                 "p50_s": float(np.percentile(ts, 50)),
                 "p90_s": float(np.percentile(ts, 90)),

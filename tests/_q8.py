@@ -1,0 +1,55 @@
+"""Shared q8 oracle helpers: executor-level quantize-dequantize references.
+
+Each helper mirrors what the NAMED q8 backend computes — the fused
+backend quantizes deep-layer input projections in-kernel, the chain
+backend keeps them f32 — so tests compare each backend against its own
+exact twin (the oracles accumulate the kernels' int32 sums exactly in
+f32 at test sizes; see ``repro.kernels.gru_cell.ref._q8_act_ref``).
+"""
+import jax.numpy as jnp
+
+from repro.core.params import quantize_gru_cells
+from repro.kernels.gru_cell.ref import gru_step_q8_ref
+from repro.kernels.gru_sequence import ref as sref
+
+
+def q8_stack_finals(backend: str, cells: tuple, h0s, xs, cfg):
+    """Per-layer final states of a whole-sequence run on ``backend``."""
+    q = quantize_gru_cells(cells)
+    if backend == "pallas_fused_q8":
+        st = q.stacked
+        xp_t = jnp.moveaxis(xs @ cells[0]["w"], -2, 0)
+        _, hT = sref.gru_stack_sequence_q8_ref(
+            jnp.stack(tuple(h0s)), xp_t, st["u_q"], st["u_eff"],
+            st["wd_q"], st["wd_eff"], st["b"], cfg.variant)
+        return tuple(hT[l] for l in range(len(cells)))
+    assert backend == "pallas_chain_q8", backend
+    finals, cur = [], xs
+    for l, c in enumerate(cells):
+        xp_t = jnp.moveaxis(cur @ c["w"], -2, 0)
+        hs = sref.gru_sequence_q8_ref(h0s[l], xp_t, q.cells[l]["u_q"],
+                                      q.cells[l]["u_eff"], c["b"],
+                                      cfg.variant)
+        finals.append(hs[-1])
+        cur = jnp.moveaxis(hs, 0, -2)            # f32 inter-layer sequence
+    return tuple(finals)
+
+
+def q8_stack_decode(backend: str, cells: tuple, hs, x, cfg):
+    """Per-layer new states of ONE decode step on ``backend``."""
+    q = quantize_gru_cells(cells)
+    if backend == "pallas_fused_q8":
+        st = q.stacked
+        h2 = sref.gru_stack_decode_q8_ref(
+            jnp.stack(tuple(hs)), x @ cells[0]["w"], st["u_q"],
+            st["u_eff"], st["wd_q"], st["wd_eff"], st["b"], cfg.variant)
+        return tuple(h2[l] for l in range(len(cells)))
+    assert backend == "pallas_chain_q8", backend
+    out, cur = [], x
+    for l, c in enumerate(cells):
+        h2 = gru_step_q8_ref(hs[l], cur @ c["w"], q.cells[l]["u_q"],
+                             q.cells[l]["u_eff"], c["b"],
+                             variant=cfg.variant)
+        out.append(h2)
+        cur = h2                                  # f32 inter-layer hand-off
+    return tuple(out)

@@ -40,3 +40,16 @@ def _hermetic_gru_costs():
     from repro.core import runtime
     runtime.set_cost_model(runtime.CostModel({}, source="<tests: static>"))
     yield
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _hermetic_quant_gate():
+    """Pin the q8 accuracy gate CLOSED for the whole suite: a stray
+    BENCH_quant_accuracy.json in the cwd (e.g. from a local harness run)
+    must not make the q8 backends auto-eligible under test. Exact-name
+    pins bypass the gate, so the q8 parity tests are unaffected; gating
+    tests install their own report via set_quant_accuracy."""
+    from repro.core import runtime
+    runtime.set_quant_accuracy(runtime.QuantAccuracy(
+        {}, source="<tests: closed>"))
+    yield

@@ -26,16 +26,22 @@ import numpy as np
 import pytest
 
 from _hyp import given, settings, st
+from _q8 import q8_stack_decode, q8_stack_finals
 from repro.configs.base import GRUConfig
 from repro.core import gru, runtime
 from repro.core.params import init_params
 
 TOL = dict(rtol=3e-5, atol=3e-6)
 DEC_TOL = dict(rtol=1e-4, atol=1e-5)
+# q8 draws compare against the quantize-dequantize twin oracle, which
+# accumulates the kernels' int32 sums exactly at these sizes — so the
+# q8 tolerance is TIGHTER than the f32 one, not looser.
+Q8_TOL = dict(rtol=1e-6, atol=1e-6)
 B, T, X, PAD = 2, 5, 5, 3
 DIM_POOL = (8, 12, 16)
 BACKENDS = ("auto", "xla", "pallas", "pallas_fused", "pallas_chain",
-            "sharded", "pallas_sharded", "sharded_decode")
+            "sharded", "pallas_sharded", "sharded_decode",
+            "pallas_fused_q8", "pallas_chain_q8")
 
 
 @functools.lru_cache(maxsize=None)
@@ -100,16 +106,30 @@ def check_dispatch_case(depth: int, dims: tuple, modes: tuple, masked: bool,
         assert p.decode_backend is not None
         _assert_capabilities_cover(p.decode_backend, op="decode",
                                    masked=False, hetero=hetero, mesh=mesh)
+        tol = DEC_TOL
+        if p.decode_backend.endswith("_q8"):
+            # a q8 pin resolved to the int8 datapath: its oracle is the
+            # backend's own quantize-dequantize twin, not the f32 stack
+            cells = gru.stack_cell_params(params, cfg)
+            ref = h0s
+            for t in range(T):
+                ref = q8_stack_decode(p.decode_backend, cells, ref,
+                                      xs[:, t], cfg)
+            tol = Q8_TOL
         hs = h0s
         for t in range(T):
             hs = p.decode(params, hs, xs[:, t])
         for a, b in zip(hs, ref):
-            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
-                                       **DEC_TOL)
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), **tol)
         return
     assert p.sequence_backend is not None
     _assert_capabilities_cover(p.sequence_backend, op="sequence",
                                masked=masked, hetero=hetero, mesh=mesh)
+    tol = TOL
+    if p.sequence_backend.endswith("_q8"):
+        cells = gru.stack_cell_params(params, cfg)
+        ref = q8_stack_finals(p.sequence_backend, cells, h0s, xs, cfg)
+        tol = Q8_TOL
 
     # 2. runs correctly against the dense oracle
     if not masked:
@@ -124,7 +144,7 @@ def check_dispatch_case(depth: int, dims: tuple, modes: tuple, masked: bool,
             for a, b in zip(f_un, finals):
                 np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     for a, b in zip(finals, ref):
-        np.testing.assert_allclose(np.asarray(a), np.asarray(b), **TOL)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), **tol)
 
 
 # ---------------------------------------------------------------------------
@@ -180,6 +200,19 @@ def test_dispatch_matrix_property(data):
     (4, (8, 8, 8, 8), ("rowwise", "cascade", "rowwise", "cascade"), True,
      True, "auto", "prefill"),
     (4, (8, 12, 16, 8), ("cascade",) * 4, False, True, "auto", "decode"),
+    # q8 exact-name pins (bypass the accuracy gate): uniform fused —
+    # plain, masked prefill (bitwise contract), decode; hetero chain
+    (2, (12, 12), ("rowwise", "rowwise"), False, False, "pallas_fused_q8",
+     "prefill"),
+    (2, (12, 12), ("rowwise", "rowwise"), True, False, "pallas_fused_q8",
+     "prefill"),
+    (1, (16,), ("rowwise",), False, False, "pallas_fused_q8", "decode"),
+    (2, (16, 8), ("rowwise", "rowwise"), False, False, "pallas_chain_q8",
+     "decode"),
+    # a fused_q8 pin on a hetero stack is illegal for the pinned backend:
+    # it must fall through to a legal f32 backend, never error
+    (2, (16, 8), ("rowwise", "rowwise"), False, False, "pallas_fused_q8",
+     "prefill"),
 ])
 def test_dispatch_case_pinned(depth, dims, modes, masked, mesh_on, backend,
                               mode):

@@ -1,0 +1,314 @@
+"""q8 datapath: kernel parity, the no-quantize-in-execute jaxpr invariant,
+accuracy-gated dispatch, cache keying, and the per-op CostModel tolerance.
+
+Parity is asserted against the quantize-dequantize oracles at 1e-6: the
+oracles keep quantized activations as integer-valued f32, so their f32
+dots accumulate EXACTLY the kernels' int32 sums at test sizes — any
+disagreement is a real kernel bug, not float noise.
+"""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _q8 import q8_stack_decode, q8_stack_finals
+from repro.configs.base import GRUConfig
+from repro.core import gru, runtime
+from repro.core.params import (init_params, quantize_gru_cells,
+                               quantize_rows_int8)
+
+B, T, X, PAD = 2, 5, 5, 3
+TOL = dict(rtol=1e-6, atol=1e-6)
+
+
+@pytest.fixture(autouse=True)
+def _restore_gates():
+    """Leave every test with the suite's hermetic defaults (static costs,
+    closed accuracy gate) no matter what it installed."""
+    yield
+    runtime.set_cost_model(runtime.CostModel({}, source="<tests: static>"))
+    runtime.set_quant_accuracy(runtime.QuantAccuracy(
+        {}, source="<tests: closed>"))
+
+
+def _case(dims, backend, variant="v1"):
+    cfg = GRUConfig(input_dim=X, layer_dims=dims, backend=backend,
+                    variant=variant)
+    params = init_params(gru.gru_stack_specs(cfg), jax.random.key(0))
+    cells = gru.stack_cell_params(params, cfg)
+    return cfg, cells
+
+
+def _data(seed=1):
+    xs = jax.random.normal(jax.random.key(seed), (B, T, X))
+    xs_pad = jnp.pad(xs, ((0, 0), (PAD, 0), (0, 0)))
+    mask = jnp.broadcast_to(jnp.arange(T + PAD)[None, :] >= PAD,
+                            (B, T + PAD))
+    return xs, xs_pad, mask
+
+
+# ---------------------------------------------------------------------------
+# weight quantization (the prepare()-stage half)
+# ---------------------------------------------------------------------------
+
+def test_quantize_rows_int8_layout_and_roundtrip():
+    w = jax.random.normal(jax.random.key(0), (12, 24))
+    q, eff = quantize_rows_int8(w)
+    assert q.shape == (24, 12) and q.dtype == jnp.int8     # transposed rows
+    assert eff.shape == (24,) and eff.dtype == jnp.float32
+    # per-row symmetric: dequant error bounded by half a quantization step
+    deq = np.asarray(q, np.float32) * np.asarray(eff)[:, None] * 127.0
+    step = np.abs(np.asarray(w).T).max(axis=1, keepdims=True) / 127.0
+    assert (np.abs(deq - np.asarray(w).T) <= 0.5 * step + 1e-7).all()
+    # all-zero rows quantize to zero with a finite scale
+    q0, eff0 = quantize_rows_int8(jnp.zeros((4, 6)))
+    assert not np.asarray(q0).any() and np.isfinite(np.asarray(eff0)).all()
+
+
+def test_quant_views_shapes():
+    _, cells = _case((8, 8, 8), "xla")
+    q = quantize_gru_cells(cells)
+    assert len(q.cells) == 3
+    assert q.cells[0]["u_q"].shape == (24, 8)
+    assert q.stacked["u_q"].shape == (3, 24, 8)
+    assert q.stacked["wd_q"].shape == (2, 24, 8)
+    _, hcells = _case((16, 8), "xla")
+    assert quantize_gru_cells(hcells).stacked is None      # hetero: no stack
+
+
+# ---------------------------------------------------------------------------
+# kernel parity vs the quantize-dequantize oracles
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("variant", ["v1", "v3"])
+@pytest.mark.parametrize("dims,backend", [
+    ((16,), "pallas_fused_q8"),
+    ((12, 12), "pallas_fused_q8"),
+    ((8, 8, 8), "pallas_fused_q8"),
+    ((8, 8, 8), "pallas_chain_q8"),
+    ((16, 8), "pallas_chain_q8"),                          # hetero dims
+])
+def test_q8_sequence_parity(dims, backend, variant):
+    cfg, cells = _case(dims, backend, variant)
+    xs, _, _ = _data()
+    h0s = gru.stack_h0(cfg, B)
+    exe = runtime.compile(cfg, batch=B, seq=T, mode="sequence")
+    assert exe.sequence_backend == backend                 # exact pin holds
+    finals, _ = exe.sequence(cells, h0s, xs)
+    ref = q8_stack_finals(backend, cells, h0s, xs, cfg)
+    for a, b in zip(finals, ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), **TOL)
+
+
+@pytest.mark.parametrize("dims,backend", [
+    ((12, 12), "pallas_fused_q8"),
+    ((16, 8), "pallas_chain_q8"),
+    ((16,), "pallas_fused_q8"),
+])
+def test_q8_decode_parity(dims, backend):
+    cfg, cells = _case(dims, backend)
+    xs, _, _ = _data()
+    hs = gru.stack_h0(cfg, B)
+    exe = runtime.compile(cfg, batch=B, mode="decode")
+    assert exe.decode_backend == backend
+    for t in range(T):
+        ref = q8_stack_decode(backend, cells, hs, xs[:, t], cfg)
+        hs = exe.decode(cells, hs, xs[:, t])
+        for a, b in zip(hs, ref):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), **TOL)
+
+
+@pytest.mark.parametrize("backend,dims", [
+    ("pallas_fused_q8", (12, 12)), ("pallas_chain_q8", (16, 8))])
+def test_q8_masked_prefill_bitwise(backend, dims):
+    """Left-padded + masked prefill == unpadded, BITWISE: the q8 step is
+    deterministic per step, so the where-freeze never perturbs it."""
+    cfg, cells = _case(dims, backend)
+    xs, xs_pad, mask = _data()
+    h0s = gru.stack_h0(cfg, B)
+    exe = runtime.compile(cfg, batch=B, seq=T + PAD, mask=True,
+                          mode="prefill")
+    assert exe.sequence_backend == backend and exe.mask_exact
+    fm, _ = exe.sequence(cells, h0s, xs_pad, mask=mask)
+    un = runtime.compile(cfg, batch=B, seq=T, mode="prefill")
+    fu, _ = un.sequence(cells, h0s, xs)
+    for a, b in zip(fm, fu):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# the jaxpr invariant: prepared execute contains NO quantize ops
+# ---------------------------------------------------------------------------
+
+_QUANT_PRIMS = {"round", "reduce_max"}    # the quantization signature ops
+
+
+def _outer_prims(obj, out):
+    """Collect primitive names reachable WITHOUT descending into
+    pallas_call bodies (in-kernel activation rounding is the datapath
+    itself; weight quantization outside a kernel is the bug)."""
+    jaxpr = getattr(obj, "jaxpr", obj)
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            continue
+        out.add(eqn.primitive.name)
+        for v in jax.tree_util.tree_leaves(list(eqn.params.values())):
+            if hasattr(v, "eqns") or hasattr(v, "jaxpr"):
+                _outer_prims(v, out)
+    return out
+
+
+def _decode_prims(cfg, params):
+    exe = runtime.compile(cfg, batch=B, mode="decode")
+    hs = gru.stack_h0(cfg, B)
+    x = jnp.ones((B, X))
+    closed = jax.make_jaxpr(lambda p, h, xv: exe.decode(p, h, xv))(
+        params, hs, x)
+    return _outer_prims(closed, set())
+
+
+@pytest.mark.parametrize("backend", ["pallas_fused_q8", "pallas_chain_q8"])
+def test_prepared_execute_has_no_quantize_ops(backend):
+    cfg, cells = _case((12, 12), backend)
+    exe = runtime.compile(cfg, batch=B, mode="decode")
+    sp = exe.prepare(cells)
+    assert sp.quant is not None                 # int8 views built up front
+    prims = _decode_prims(cfg, sp)
+    assert not (prims & _QUANT_PRIMS), prims & _QUANT_PRIMS
+    # control: tracing from RAW params quantizes inside the traced call —
+    # the exact per-token cost prepare() exists to hoist out
+    raw_prims = _decode_prims(cfg, cells)
+    assert raw_prims & _QUANT_PRIMS
+
+
+# ---------------------------------------------------------------------------
+# executable-cache keying + accuracy-gated dispatch
+# ---------------------------------------------------------------------------
+
+def test_exec_cache_keys_on_quant_flag():
+    base = GRUConfig(input_dim=X, layer_dims=(12, 12), backend="auto")
+    a = runtime.compile(base, batch=B, mode="decode")
+    b = runtime.compile(dataclasses.replace(base, quant="int8"),
+                        batch=B, mode="decode")
+    c = runtime.compile(base, batch=B, mode="decode")
+    assert a is c                                # memoized per cfg
+    assert a is not b                            # quant flag is in the key
+    # gate flips bump the epoch: stale executables must not survive them
+    runtime.set_quant_accuracy(runtime.QuantAccuracy(
+        {"bench": "gru_quant_accuracy", "passed": True}, source="<t>"))
+    assert runtime.compile(base, batch=B, mode="decode") is not a
+
+
+def _measured(entries):
+    return runtime.CostModel(
+        {(b, "decode", 2, 12): [(B, us)] for b, us in entries.items()},
+        source="<test>")
+
+
+def test_accuracy_gate_roundtrip(tmp_path):
+    """The dispatch-eligibility round-trip: q8 is auto-chosen ONLY when a
+    PASSING artifact is loaded AND a calibration measures it faster."""
+    cfg = GRUConfig(input_dim=X, layer_dims=(12, 12), backend="auto",
+                    quant="int8")
+    fast_q8 = _measured({"xla": 50.0, "pallas_fused": 40.0,
+                         "pallas_chain": 60.0, "pallas_fused_q8": 4.0,
+                         "pallas_chain_q8": 9.0})
+
+    # closed gate (missing/failing artifact): q8 NEVER auto-chosen, even
+    # with a calibration that says it wins
+    for report in (runtime.QuantAccuracy({}, source="<missing>"),
+                   runtime.QuantAccuracy({"bench": "gru_quant_accuracy",
+                                          "passed": False}, source="<f>")):
+        runtime.set_quant_accuracy(report)
+        runtime.set_cost_model(fast_q8)
+        exe = runtime.compile(cfg, batch=B, mode="decode")
+        assert not exe.decode_backend.endswith("_q8"), exe.decode_backend
+
+    # passing artifact from DISK: q8 becomes eligible and wins measured
+    path = tmp_path / "BENCH_quant_accuracy.json"
+    path.write_text(json.dumps({"bench": "gru_quant_accuracy",
+                                "passed": True, "backends": {}}))
+    report = runtime.load_quant_accuracy(path)
+    assert report.passed and runtime.quant_gate_open()
+    runtime.set_cost_model(fast_q8)
+    exe = runtime.compile(cfg, batch=B, mode="decode")
+    assert exe.decode_backend == "pallas_fused_q8"
+    assert exe.cost_source == "measured"
+
+    # open gate but NO calibration: static costs keep q8 dispreferred
+    runtime.set_cost_model(runtime.CostModel({}, source="<static>"))
+    exe = runtime.compile(cfg, batch=B, mode="decode")
+    assert not exe.decode_backend.endswith("_q8")
+
+    # wrong-bench artifact: tolerant load, closed gate
+    bad = tmp_path / "other.json"
+    bad.write_text(json.dumps({"bench": "gru_decode_step_latency"}))
+    assert not runtime.load_quant_accuracy(bad).passed
+
+
+def test_exact_pin_bypasses_gate():
+    runtime.set_quant_accuracy(runtime.QuantAccuracy(
+        {"bench": "gru_quant_accuracy", "passed": False}, source="<f>"))
+    cfg = GRUConfig(input_dim=X, layer_dims=(12, 12),
+                    backend="pallas_fused_q8")
+    exe = runtime.compile(cfg, batch=B, mode="serve")
+    assert exe.decode_backend == "pallas_fused_q8"
+    assert exe.sequence_backend == "pallas_fused_q8"
+
+
+def test_quant_flag_without_pin_runs_q8_numerics_only_when_gated():
+    """cfg.quant="int8" + open gate + measured win: the AUTO choice runs
+    the q8 numerics (output matches the q8 oracle, not the f32 one)."""
+    runtime.set_quant_accuracy(runtime.QuantAccuracy(
+        {"bench": "gru_quant_accuracy", "passed": True}, source="<t>"))
+    runtime.set_cost_model(_measured(
+        {"xla": 50.0, "pallas_fused": 40.0, "pallas_chain": 60.0,
+         "pallas_fused_q8": 4.0, "pallas_chain_q8": 9.0}))
+    cfg = GRUConfig(input_dim=X, layer_dims=(12, 12), backend="auto",
+                    quant="int8")
+    _, cells = _case((12, 12), "auto")
+    exe = runtime.compile(cfg, batch=B, mode="decode")
+    assert exe.decode_backend == "pallas_fused_q8"
+    hs = gru.stack_h0(cfg, B)
+    x = jnp.ones((B, X))
+    got = exe.decode(cells, hs, x)
+    ref = q8_stack_decode("pallas_fused_q8", cells, hs, x, cfg)
+    for a, b in zip(got, ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), **TOL)
+
+
+# ---------------------------------------------------------------------------
+# CostModel per-op tolerance (the satellite bugfix)
+# ---------------------------------------------------------------------------
+
+def test_partial_calibration_tolerates_measured_only_backends():
+    """A calibration that does not cover a measured-only candidate (static
+    cost >= UNCALIBRATED_GATE_COST, e.g. a q8 row missing for this shape)
+    must NOT collapse the whole selection back to the static table."""
+    runtime.set_quant_accuracy(runtime.QuantAccuracy(
+        {"bench": "gru_quant_accuracy", "passed": True}, source="<t>"))
+    cfg = GRUConfig(input_dim=X, layer_dims=(12, 12), backend="auto",
+                    quant="int8")
+    # q8 candidates legal but UNmeasured; sub-gate candidates all covered
+    runtime.set_cost_model(_measured(
+        {"xla": 9.0, "pallas_fused": 3.0, "pallas_chain": 8.0}))
+    exe = runtime.compile(cfg, batch=B, mode="decode")
+    assert exe.cost_source == "measured"         # not degraded to static
+    assert exe.decode_backend == "pallas_fused"  # unmeasured q8 loses
+
+    # the inverse hole — a q8 decode-ONLY calibration (its backend name
+    # registered for both ops but measured for one) leaves a sub-gate
+    # candidate uncovered: all-or-nothing still applies there
+    runtime.set_cost_model(_measured({"pallas_fused_q8": 4.0}))
+    exe = runtime.compile(cfg, batch=B, mode="decode")
+    assert exe.cost_source == "static"
+    assert not exe.decode_backend.endswith("_q8")
+
+
+def test_serve_reports_dtype():
+    assert runtime.backend_dtype("pallas_fused_q8") == "int8"
+    assert runtime.backend_dtype("pallas_fused") == "float32"
+    assert runtime.backend_dtype(None) == "float32"
