@@ -1,0 +1,213 @@
+"""Fleet serving under load: throughput vs per-request tail latency, with
+and without injected replica faults, depth-aware vs static routing (A/B).
+
+The paper's constraint is a per-request latency bound; a single engine
+meets it per kernel, the fleet (``repro.serve.fleet``) must keep meeting
+it while replicas crash and recover. This benchmark drives a FleetRouter
+with an open-loop arrival process under the REAL clock:
+
+* **Arrivals** — seeded Poisson process (exponential inter-arrival gaps)
+  at ``--rate`` requests/s.
+* **Prompts** — heavy-tailed lengths (clipped lognormal), so the prefill
+  bucket mix is realistic and depth routing has something to exploit.
+* **Faults** (``faults=True`` arms) — a deterministic schedule placed at
+  fractions of the arrival horizon: replica0 is killed at 25% and
+  restored at 60%; replica1 runs a slow window (recorded-signal
+  inflation — the fleet is single-process under a real clock, see the
+  fleet module docstring) from 20% to 50% so the straggler/hedging path
+  exercises too.
+
+Four runs share one request seed: {depth, static} x {no-fault, faults}.
+Every run reports throughput, e2e p50/p99 (admit->finish, including
+fleet queueing, retries and hedging — the honest per-request numbers)
+and the full fault accounting. CI asserts the faulted runs drop nothing:
+``completed == admitted`` and ``failed == 0`` with ``kills >= 1``.
+
+    PYTHONPATH=src python benchmarks/serve_fleet.py [--smoke]
+
+Emits BENCH_serve_fleet.json. CSV: name,value,notes
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+import jax
+import numpy as np
+
+from repro.configs.base import GRUConfig, get_smoke_config
+from repro.core.params import init_params
+from repro.models import api as mapi
+from repro.serve.engine import Request, bucket_len
+from repro.serve.fleet import (FaultEvent, FaultInjector, FleetConfig,
+                               FleetRejected, FleetRouter)
+
+
+def _setup(hidden: int, layers: int):
+    cfg = get_smoke_config("gru-jet").replace(
+        gru=GRUConfig(input_dim=5, hidden_dim=hidden, num_classes=5,
+                      seq_len=64, num_layers=layers))
+    A = mapi.get_api(cfg)
+    params = init_params(A.specs(cfg), jax.random.key(0), cfg.param_dtype)
+    return cfg, params
+
+
+def _workload(cfg, n: int, rate: float, seed: int, max_prompt: int,
+              max_new: int):
+    """Seeded open-loop workload: Poisson arrival offsets + heavy-tail
+    (lognormal, clipped) prompt lengths. Same seed -> same requests, so
+    the A/B arms serve identical traffic."""
+    rng = np.random.default_rng(seed)
+    t_arr = np.cumsum(rng.exponential(1.0 / rate, n))
+    lens = np.clip(np.rint(np.exp(rng.normal(1.5, 0.8, n))),
+                   2, max_prompt).astype(int)
+    X = cfg.gru.input_dim
+    reqs = [Request(prompt=rng.normal(size=(int(L), X)).astype(np.float32),
+                    max_new_tokens=max_new)
+            for L in lens]
+    return t_arr, reqs
+
+
+def _prewarm(router: FleetRouter, cfg, lens) -> None:
+    """Compile every replica's prefill buckets + decode jit out-of-band
+    (direct engine calls — no router counters touched), so measured
+    queue waits are service, not trace time, and slow first steps don't
+    trip the heartbeat/straggler detectors spuriously."""
+    bucket_min = router.replicas[0].engine.bucket_min
+    buckets = sorted({bucket_len(int(L), bucket_min) for L in lens})
+    X = cfg.gru.input_dim
+    for rep in router.replicas:
+        warm = [Request(prompt=np.zeros((b, X), np.float32),
+                        max_new_tokens=1) for b in buckets]
+        rep.engine.generate(warm)
+
+
+def _fault_schedule(horizon_s: float, t0: float):
+    """Kill/restore + slow window at fixed fractions of the arrival
+    horizon, shifted to absolute clock time ``t0``."""
+    rel = [FaultEvent(t=0.25 * horizon_s, kind="kill", replica="replica0"),
+           FaultEvent(t=0.60 * horizon_s, kind="restore", replica="replica0"),
+           FaultEvent(t=0.20 * horizon_s, kind="slow", replica="replica1",
+                      factor=5.0),
+           FaultEvent(t=0.50 * horizon_s, kind="slow", replica="replica1",
+                      factor=1.0)]
+    return FaultInjector([dataclasses.replace(e, t=t0 + e.t) for e in rel])
+
+
+def run_once(cfg, params, *, routing: str, faults: bool, n: int, rate: float,
+             seed: int, replicas: int, max_batch: int, max_prompt: int,
+             max_new: int, label: str, csv: bool = True,
+             wall_limit_s: float = 300.0) -> dict:
+    t_arr, reqs = _workload(cfg, n, rate, seed, max_prompt, max_new)
+    horizon = float(t_arr[-1])
+    config = FleetConfig(
+        routing=routing,
+        queue_limit=n + 8,               # open-loop: never shed own traffic
+        retry_budget=5,                  # headroom over the injected kill
+        # real clock: a tick is one decode step per replica; the timeout
+        # must dominate any single step or a busy replica reads as dead
+        heartbeat_timeout_s=max(1.0, 0.15 * horizon),
+        backoff_base_s=0.05,
+        straggler_factor=4.0)
+    router = FleetRouter(cfg, params, replicas=replicas, max_batch=max_batch,
+                         config=config)
+    _prewarm(router, cfg, [len(r.prompt) for r in reqs])
+    t0 = router.clock.now()
+    if faults:
+        router.injector = _fault_schedule(horizon, t0)
+    admitted, arrival_shed, i = 0, 0, 0
+    while i < n or any(t.outstanding for t in router.tickets):
+        now = router.clock.now() - t0
+        if now > wall_limit_s:
+            raise RuntimeError(f"{label}: fleet run exceeded "
+                               f"{wall_limit_s}s wall limit")
+        while i < n and t_arr[i] <= now:
+            try:
+                router.submit(reqs[i])
+                admitted += 1
+            except FleetRejected:
+                arrival_shed += 1
+            i += 1
+        router.tick()
+    dur = router.clock.now() - t0
+    s = router.stats()
+    row = {"label": label, "routing": routing, "faults": faults,
+           "arrivals": n, "admitted": admitted,
+           "arrival_shed": arrival_shed,
+           "completed": s["completed"], "failed": s["failed"],
+           "shed": s["shed"], "retries": s["retries"],
+           "hedges": s["hedges"], "hedges_cancelled": s["hedges_cancelled"],
+           "kills": s["kills"], "restores": s["restores"],
+           "duration_s": round(dur, 4),
+           "throughput_rps": round(s["completed"] / max(dur, 1e-9), 2),
+           "e2e_p50_s": round(s["e2e_p50_s"], 5),
+           "e2e_p99_s": round(s["e2e_p99_s"], 5),
+           "queue_wait_p50_s": round(s["queue_wait_p50_s"], 5),
+           "queue_wait_p99_s": round(s["queue_wait_p99_s"], 5),
+           "replicas": {name: {k: v[k] for k in
+                               ("alive", "restarts", "steps", "requests")}
+                        for name, v in s["replicas"].items()}}
+    if csv:
+        print(f"fleet_{label},{row['throughput_rps']:.2f},"
+              f"rps;e2e_p99={row['e2e_p99_s'] * 1e3:.1f}ms;"
+              f"completed={row['completed']}/{row['admitted']};"
+              f"retries={row['retries']};hedges={row['hedges']};"
+              f"kills={row['kills']}")
+    return row
+
+
+def run(n: int = 120, rate: float = 20.0, hidden: int = 32, layers: int = 2,
+        replicas: int = 2, max_batch: int = 4, max_prompt: int = 32,
+        max_new: int = 8, seed: int = 0,
+        json_path: str = "BENCH_serve_fleet.json", csv: bool = True) -> dict:
+    cfg, params = _setup(hidden, layers)
+    runs = []
+    for routing in ("depth", "static"):
+        for faults in (False, True):
+            label = f"{routing}_{'faults' if faults else 'nofault'}"
+            runs.append(run_once(
+                cfg, params, routing=routing, faults=faults, n=n, rate=rate,
+                seed=seed, replicas=replicas, max_batch=max_batch,
+                max_prompt=max_prompt, max_new=max_new, label=label,
+                csv=csv))
+    summary = {}
+    by = {r["label"]: r for r in runs}
+    if by["depth_nofault"]["e2e_p99_s"] > 0:
+        summary["static_over_depth_p99"] = round(
+            by["static_nofault"]["e2e_p99_s"]
+            / by["depth_nofault"]["e2e_p99_s"], 3)
+    for label, r in by.items():
+        if r["faults"]:
+            summary[f"{label}_zero_drops"] = bool(
+                r["failed"] == 0 and r["completed"] == r["admitted"])
+    out = {"bench": "serve_fleet", "backend": jax.default_backend(),
+           "replicas": replicas, "rate_rps": rate, "runs": runs,
+           "summary": summary}
+    with open(json_path, "w") as f:
+        json.dump(out, f, indent=2)
+    if csv:
+        for k, v in summary.items():
+            print(f"fleet_{k},{float(v) if not isinstance(v, bool) else int(v)},summary")
+        print(f"fleet_artifact,0.00,{json_path}")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced load for CI (still emits the artifact and "
+                         "runs the faulted arms)")
+    ap.add_argument("--n", type=int, default=None, help="total arrivals")
+    ap.add_argument("--rate", type=float, default=None, help="arrivals/s")
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default="BENCH_serve_fleet.json")
+    args = ap.parse_args()
+    if args.smoke:
+        run(n=args.n or 24, rate=args.rate or 6.0, hidden=16, layers=1,
+            replicas=args.replicas, max_prompt=16, max_new=4,
+            seed=args.seed, json_path=args.json)
+    else:
+        run(n=args.n or 120, rate=args.rate or 20.0,
+            replicas=args.replicas, seed=args.seed, json_path=args.json)

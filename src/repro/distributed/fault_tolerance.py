@@ -5,6 +5,14 @@ On a real multi-host deployment the signals come from the cluster manager
 (missed heartbeats, ICI link errors); here the control logic is implemented
 fully and exercised by tests with injected failures — the policy layer is
 host-side pure Python and identical either way.
+
+All timing flows through one injectable :class:`Clock`: the monitors, the
+training :class:`Supervisor`, and the serving fleet
+(``repro.serve.fleet``) share a single time source, so tests drive every
+failure path deterministically with a :class:`ManualClock` — no wall-clock
+sleeps, no mixed time bases. (The monitors previously accepted per-call
+``now=`` overrides that silently mixed with ``time.monotonic()`` defaults;
+the Clock is the fix: one source, injected once.)
 """
 from __future__ import annotations
 
@@ -15,21 +23,56 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 
+class Clock:
+    """Injectable monotonic time source (seconds)."""
+
+    def now(self) -> float:
+        raise NotImplementedError
+
+
+class SystemClock(Clock):
+    """Real time (``time.monotonic``)."""
+
+    def now(self) -> float:
+        return time.monotonic()
+
+
+class ManualClock(Clock):
+    """Deterministic test/simulation clock: time moves only when the
+    harness advances it."""
+
+    def __init__(self, start: float = 0.0):
+        self._now = float(start)
+
+    def now(self) -> float:
+        return self._now
+
+    def advance(self, dt_s: float) -> float:
+        assert dt_s >= 0.0, "time is monotonic"
+        self._now += float(dt_s)
+        return self._now
+
+
 @dataclass
 class HeartbeatMonitor:
-    """Tracks per-host heartbeats; a host is dead after ``timeout_s``."""
+    """Tracks per-host heartbeats; a host is dead after ``timeout_s``.
+
+    Timestamps come from the injected ``clock`` — beats and liveness
+    checks always share one time base.
+    """
     timeout_s: float = 60.0
+    clock: Clock = field(default_factory=SystemClock)
     _last: Dict[str, float] = field(default_factory=dict)
 
-    def beat(self, host: str, now: Optional[float] = None):
-        self._last[host] = time.monotonic() if now is None else now
+    def beat(self, host: str):
+        self._last[host] = self.clock.now()
 
-    def dead_hosts(self, now: Optional[float] = None) -> List[str]:
-        now = time.monotonic() if now is None else now
+    def dead_hosts(self) -> List[str]:
+        now = self.clock.now()
         return [h for h, t in self._last.items() if now - t > self.timeout_s]
 
-    def alive_hosts(self, now: Optional[float] = None) -> List[str]:
-        now = time.monotonic() if now is None else now
+    def alive_hosts(self) -> List[str]:
+        now = self.clock.now()
         return [h for h, t in self._last.items() if now - t <= self.timeout_s]
 
 
@@ -37,19 +80,34 @@ class HeartbeatMonitor:
 class StragglerMonitor:
     """Flags hosts whose step times exceed ``factor`` x the fleet median.
 
+    Samples are timestamped with the injected ``clock``; ``max_age_s > 0``
+    additionally drops samples older than that horizon, so a host that was
+    slow long ago is not flagged forever.
+
     Mitigation hook: the supervisor can drop a straggler from the mesh
-    (treat as failed) or trigger data-rebalancing — policy is pluggable.
+    (treat as failed) or trigger data-rebalancing — policy is pluggable
+    (the serving fleet hedges a straggler's in-flight requests instead).
     """
     factor: float = 2.0
     window: int = 16
-    _times: Dict[str, List[float]] = field(default_factory=dict)
+    max_age_s: float = 0.0           # 0 = keep the last `window` regardless
+    clock: Clock = field(default_factory=SystemClock)
+    _times: Dict[str, List[Tuple[float, float]]] = field(default_factory=dict)
 
     def record(self, host: str, step_time_s: float):
-        self._times.setdefault(host, []).append(step_time_s)
+        self._times.setdefault(host, []).append(
+            (self.clock.now(), float(step_time_s)))
         self._times[host] = self._times[host][-self.window:]
 
     def medians(self) -> Dict[str, float]:
-        return {h: float(np.median(t)) for h, t in self._times.items() if t}
+        horizon = (self.clock.now() - self.max_age_s
+                   if self.max_age_s > 0 else -np.inf)
+        out = {}
+        for h, samples in self._times.items():
+            vals = [v for t, v in samples if t >= horizon]
+            if vals:
+                out[h] = float(np.median(vals))
+        return out
 
     def stragglers(self) -> List[str]:
         med = self.medians()
@@ -108,14 +166,16 @@ class Supervisor:
     """
 
     def __init__(self, mesh_mgr: ElasticMeshManager, build_fn: Callable,
-                 checkpoint_every: int = 10, max_restarts: int = 8):
+                 checkpoint_every: int = 10, max_restarts: int = 8,
+                 clock: Optional[Clock] = None):
         self.mesh_mgr = mesh_mgr
         self.build_fn = build_fn
         self.checkpoint_every = checkpoint_every
         self.max_restarts = max_restarts
         self.restarts = 0
-        self.stragglers = StragglerMonitor()
-        self.heartbeats = HeartbeatMonitor()
+        self.clock = clock or SystemClock()
+        self.stragglers = StragglerMonitor(clock=self.clock)
+        self.heartbeats = HeartbeatMonitor(clock=self.clock)
 
     def run(self, total_steps: int, inject: Optional[Dict[int, Sequence[int]]] = None):
         """inject: {step: [device_ids]} failures to raise at given steps."""
@@ -129,9 +189,9 @@ class Supervisor:
                 if step in inject:
                     self.mesh_mgr.fail(inject.pop(step))
                     raise RuntimeError("injected node failure")
-                t0 = time.monotonic()
+                t0 = self.clock.now()
                 state, metrics = step_fn(state, step)
-                self.stragglers.record("host0", time.monotonic() - t0)
+                self.stragglers.record("host0", self.clock.now() - t0)
                 history.append((step, metrics))
                 step += 1
                 if step % self.checkpoint_every == 0:

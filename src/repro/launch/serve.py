@@ -1,7 +1,11 @@
-"""Serving driver: batched requests through the ServeEngine.
+"""Serving driver: batched requests through the ServeEngine, or — with
+``--replicas N`` (N > 1, gru only) — through the fault-tolerant
+FleetRouter (``repro.serve.fleet``).
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
         --requests 4 --max-new 16
+    PYTHONPATH=src python -m repro.launch.serve --arch gru-jet --smoke \
+        --replicas 2 --inject-faults --requests 8
 
 GRU waves run bucketed continuous batching: ``--slots`` bounds the live
 batch (defaults to ``--requests``); give MORE requests than slots to
@@ -10,6 +14,11 @@ preference (``repro.core.runtime``): ``pallas`` serves through the fused
 persistent stack kernel (one pallas_call per step), ``auto`` lets the
 plan pick the cheapest legal backend. The resolved prefill/decode
 backends are printed with the latency stats.
+
+Fleet mode: ``--routing`` picks depth-aware vs static round-robin
+dispatch; ``--inject-faults`` runs a seeded kill/restore + slow schedule
+under a deterministic ManualClock (virtual time, zero sleeps) and prints
+the fleet's fault accounting — the CLI face of ``docs/serving.md``.
 """
 from __future__ import annotations
 
@@ -58,6 +67,17 @@ def main(argv=None):
                         "pass)")
     p.add_argument("--bucket-min", type=int, default=8)
     p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--replicas", type=int, default=1,
+                   help="gru: serve through a FleetRouter with this many "
+                        "engine replicas (admission control, depth routing, "
+                        "retry/hedging; see docs/serving.md)")
+    p.add_argument("--inject-faults", action="store_true",
+                   help="fleet: run a seeded kill/restore+slow schedule "
+                        "under a deterministic virtual clock and print the "
+                        "fault accounting (requires --replicas > 1)")
+    p.add_argument("--routing", choices=("depth", "static"), default="depth",
+                   help="fleet dispatch policy: measured queue-depth scoring "
+                        "vs static round-robin")
     args = p.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -67,9 +87,6 @@ def main(argv=None):
     A = mapi.get_api(cfg)
     params = init_params(A.specs(cfg), jax.random.key(args.seed),
                          cfg.param_dtype)
-    engine = ServeEngine(cfg, params, ShardCtx(),
-                         max_batch=args.slots or args.requests,
-                         bucket_min=args.bucket_min)
     rng = np.random.default_rng(args.seed)
     if cfg.family == "gru":
         # feature-vector waves: prompts are (S, X) float windows
@@ -86,6 +103,11 @@ def main(argv=None):
                         .astype(np.int32),
                         max_new_tokens=args.max_new)
                 for _ in range(args.requests)]
+    if args.replicas > 1:
+        return _serve_fleet(cfg, params, reqs, args)
+    engine = ServeEngine(cfg, params, ShardCtx(),
+                         max_batch=args.slots or args.requests,
+                         bucket_min=args.bucket_min)
     done = engine.generate(reqs)
     for i, r in enumerate(done):
         print(f"req{i}: {len(r.out)} tokens -> {r.out[:8]}...")
@@ -104,6 +126,42 @@ def main(argv=None):
               f"decode={engine.decode_backend} "
               f"dtype={stats.get('served_dtype')} "
               f"decode_steps=[{attributed or '-'}]")
+    return done
+
+
+def _serve_fleet(cfg, params, reqs, args):
+    """Fleet mode: N supervised replicas behind one generate() call.
+    ``--inject-faults`` runs the whole thing in deterministic virtual time
+    (ManualClock) against a seeded kill/restore+slow schedule."""
+    from repro.distributed.fault_tolerance import ManualClock
+    from repro.serve.fleet import FaultInjector, FleetConfig, FleetRouter
+
+    names = [f"replica{i}" for i in range(args.replicas)]
+    clock = injector = None
+    if args.inject_faults:
+        clock = ManualClock()
+        injector = FaultInjector.seeded(args.seed, names, horizon_s=0.6)
+        print(f"fault schedule (seed {args.seed}): "
+              + "; ".join(f"t={e.t:.3f} {e.kind} {e.replica}"
+                          + (f" x{e.factor:g}" if e.kind == "slow" else "")
+                          for e in injector._events))
+    router = FleetRouter(cfg, params, replicas=args.replicas,
+                         max_batch=args.slots or max(2, args.requests // 2),
+                         bucket_min=args.bucket_min, clock=clock,
+                         config=FleetConfig(routing=args.routing),
+                         injector=injector)
+    done = router.generate(reqs)
+    for i, r in enumerate(done):
+        print(f"req{i}: {len(r.out)} tokens -> {r.out[:8]}...")
+    s = router.stats()
+    print(f"fleet: {args.replicas} replicas routing={s['routing']} "
+          f"completed={s['completed']}/{s['submitted']} "
+          f"failed={s['failed']} shed={s['shed'] or '{}'} "
+          f"retries={s['retries']} hedges={s['hedges']} "
+          f"kills={s['kills']} restores={s['restores']}")
+    for name, rs in s["replicas"].items():
+        print(f"  {name}: alive={rs['alive']} restarts={rs['restarts']} "
+              f"steps={rs['steps']} requests={rs['requests']}")
     return done
 
 

@@ -59,7 +59,6 @@ just means: the paper's constraint is a deadline).
 """
 from __future__ import annotations
 
-import time
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
@@ -69,6 +68,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.distributed.fault_tolerance import Clock, SystemClock
 from repro.distributed.sharding import ShardCtx
 from repro.models import api as mapi
 
@@ -81,6 +81,12 @@ class Request:
     stream: Optional[np.ndarray] = None  # gru: (>=max_new, X) decode features
     out: List[int] = field(default_factory=list)
     done: bool = False
+    # request-lifecycle timestamps (engine clock), for queue-wait and
+    # end-to-end latency accounting; t_submit may be pre-stamped by a
+    # front-door router so the wait includes fleet-level queueing
+    t_submit: Optional[float] = None
+    t_admit: Optional[float] = None
+    t_finish: Optional[float] = None
 
 
 def bucket_len(S: int, minimum: int = 8) -> int:
@@ -99,13 +105,26 @@ class _Slot:
     step: int = 0                    # per-request decode step (stream index)
 
 
+@dataclass
+class _GruWave:
+    """Resumable continuous-batching state: the wave a stepwise caller
+    (``gru_wave_step``) advances one decode step at a time."""
+    slots: List[Optional[_Slot]]
+    nxt: np.ndarray                  # (max_batch, X) next-feature staging
+    key: tuple                       # decode jit key (max_batch, X)
+    pending: deque = field(default_factory=deque)
+    cache: Optional[dict] = None     # None until the first admit prefills
+
+
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, ctx: ShardCtx = ShardCtx(),
-                 max_batch: int = 8, bucket_min: int = 8):
+                 max_batch: int = 8, bucket_min: int = 8,
+                 clock: Optional[Clock] = None):
         self.cfg = cfg
         self.ctx = ctx
         self.max_batch = max_batch
         self.bucket_min = bucket_min
+        self.clock = clock or SystemClock()
         self.api = mapi.get_api(cfg)
         prep = getattr(self.api, "prepare_params", None)
         self.params = prep(params, cfg, ctx) if prep else params
@@ -115,12 +134,15 @@ class ServeEngine:
                                          # jit (frozen at trace time)
         self._decode_warm = set()        # keys whose compile step has passed
         self._scatter_jit = {}           # keyed by admit-batch size
+        self._wave: Optional[_GruWave] = None
         self.step_times: List[float] = []
         self.prefill_times: List[float] = []
         self.prefill_backends: List[str] = []   # executor choice per prefill
         self.decode_backend: Optional[str] = None    # latest resolved
         self.decode_backends: List[str] = []    # per recorded step (aligned
                                                 # with step_times)
+        self.queue_waits: List[float] = []      # per request: submit -> admit
+        self.e2e_times: List[float] = []        # per request: submit -> finish
 
     # -- jit caches ---------------------------------------------------------
 
@@ -168,25 +190,33 @@ class ServeEngine:
                                       "model API directly for other families")
         assert len(reqs) <= self.max_batch
         B = len(reqs)
+        now = self.clock.now()
+        for r in reqs:
+            if r.t_submit is None:
+                r.t_submit = now
         S = max(len(r.prompt) for r in reqs)
         toks = np.zeros((B, S), np.int32)
         for i, r in enumerate(reqs):
             toks[i, S - len(r.prompt):] = r.prompt      # left-pad alignment
         prefill = self._get_prefill(S)
-        t0 = time.perf_counter()
+        t0 = self.clock.now()
         logits, cache = prefill(self.params, {"tokens": jnp.asarray(toks)})
         logits.block_until_ready()
-        self.prefill_times.append(time.perf_counter() - t0)
+        self.prefill_times.append(self.clock.now() - t0)
+        now = self.clock.now()
+        for r in reqs:
+            r.t_admit = now
+            self.queue_waits.append(now - r.t_submit)
         max_new = max(r.max_new_tokens for r in reqs)
         next_tok = jnp.argmax(logits, -1).astype(jnp.int32)
         key = tuple(next_tok.shape)
         decode = self._get_decode(key)
         finished = np.zeros(B, bool)
         for _ in range(max_new):
-            t0 = time.perf_counter()
+            t0 = self.clock.now()
             logits, cache = decode(self.params, cache, next_tok)
             logits.block_until_ready()
-            self._record_step(key, time.perf_counter() - t0)
+            self._record_step(key, self.clock.now() - t0)
             tok_np = np.asarray(next_tok)
             for i, r in enumerate(reqs):
                 if not finished[i]:
@@ -194,13 +224,21 @@ class ServeEngine:
                     if (int(tok_np[i]) == r.eos_id
                             or len(r.out) >= r.max_new_tokens):
                         finished[i] = True
-                        r.done = True
+                        self._finish(r)
             if finished.all():
                 break
             next_tok = jnp.argmax(logits, -1).astype(jnp.int32)
         for r in reqs:
-            r.done = True
+            if not r.done:
+                self._finish(r)
         return reqs
+
+    def _finish(self, r: Request) -> None:
+        """Mark a request complete and record its end-to-end latency."""
+        r.done = True
+        r.t_finish = self.clock.now()
+        if r.t_submit is not None:
+            self.e2e_times.append(r.t_finish - r.t_submit)
 
     # -- GRU waves: bucketed continuous batching ----------------------------
 
@@ -231,85 +269,169 @@ class ServeEngine:
                            mesh=self.ctx.mesh)
             self.prefill_backends.append(exe.sequence_backend)
         prefill = self._get_prefill(Sb)
-        t0 = time.perf_counter()
+        t0 = self.clock.now()
         logits, cache = prefill(self.params, {"features": jnp.asarray(feats),
                                               "mask": jnp.asarray(mask)})
         logits.block_until_ready()
-        self.prefill_times.append(time.perf_counter() - t0)
+        self.prefill_times.append(self.clock.now() - t0)
         return cache
+
+    def _make_slot(self, r: Request) -> _Slot:
+        X = self.cfg.gru.input_dim
+        p = np.asarray(r.prompt, np.float32).reshape(-1, X)
+        return _Slot(req=r, last_feat=p[-1])
 
     def _generate_gru(self, reqs: List[Request]) -> List[Request]:
         if not reqs:
             return []
+        self.gru_wave_begin(reqs)
+        while self.gru_wave_active():
+            self.gru_wave_step()
+        self._wave = None
+        for r in reqs:
+            if not r.done:                              # pragma: no cover
+                r.done = True
+        return reqs
+
+    # -- stepwise wave API (the fleet router's drive surface) ---------------
+    #
+    # ``generate`` is a closed loop: begin + step-until-idle. A front-door
+    # router (``repro.serve.fleet``) needs finer control — advance each
+    # replica ONE decode step per scheduler tick, enqueue new requests into
+    # a live wave, and cancel a lane (hedging first-wins, retry-on-death) —
+    # so the continuous-batching loop is exposed as begin/enqueue/step/
+    # cancel. All four preserve the compile-once discipline: the same
+    # bucketed prefills, the same fixed-slot decode jit.
+
+    def gru_wave_begin(self, requests: Sequence[Request] = ()) -> None:
+        """Start a fresh continuous-batching wave (GRU family only)."""
+        assert self.cfg.family == "gru", "stepwise waves are GRU-only"
         X = self.cfg.gru.input_dim
         Bs = self.max_batch
-        pending = deque(reqs)                           # FIFO admission order
-        slots: List[Optional[_Slot]] = [None] * Bs
+        self._wave = _GruWave(slots=[None] * Bs,
+                              nxt=np.zeros((Bs, X), np.float32),
+                              key=(Bs, X))
+        self.gru_wave_enqueue(requests)
 
-        def make_slot(r: Request) -> _Slot:
-            p = np.asarray(r.prompt, np.float32).reshape(-1, X)
-            return _Slot(req=r, last_feat=p[-1])
+    def gru_wave_enqueue(self, requests: Sequence[Request]) -> None:
+        """Queue requests into the live wave (FIFO admission; they enter
+        slots as capacity frees). Starts a wave if none is live."""
+        if self._wave is None:
+            self.gru_wave_begin(())
+        now = self.clock.now()
+        for r in requests:
+            if r.t_submit is None:
+                r.t_submit = now
+            self._wave.pending.append(r)
 
-        # initial cohort: ONE batched bucketed prefill
-        cohort = [make_slot(pending.popleft())
-                  for _ in range(min(Bs, len(pending)))]
-        cache = self._gru_prefill(
-            [np.asarray(s.req.prompt, np.float32).reshape(-1, X)
-             for s in cohort])
-        for i, s in enumerate(cohort):
-            slots[i] = s
+    def gru_wave_active(self) -> int:
+        """Live lanes + queued requests still owed work by this wave."""
+        w = self._wave
+        if w is None:
+            return 0
+        return sum(s is not None for s in w.slots) + len(w.pending)
 
-        key = (Bs, X)
-        decode = self._get_decode(key)
-        # attribution is frozen per decode-jit key AT TRACE TIME (below,
-        # _decode_backend_for): the jitted step embeds whichever backend
+    def gru_work_remaining(self) -> tuple:
+        """(requests, decode tokens) still owed — the router's measured
+        queue-depth signal for expected-service-time routing."""
+        w = self._wave
+        if w is None:
+            return 0, 0
+        toks = sum(max(1, s.req.max_new_tokens - len(s.req.out))
+                   for s in w.slots if s is not None)
+        toks += sum(max(1, r.max_new_tokens) for r in w.pending)
+        return self.gru_wave_active(), toks
+
+    def bucket_warm(self, prompt_len: int) -> bool:
+        """Whether this engine has already compiled the prefill bucket a
+        prompt of ``prompt_len`` lands in (router bucket-affinity)."""
+        return bucket_len(prompt_len, self.bucket_min) in self._prefill_jit
+
+    def gru_wave_cancel(self, request: Request) -> bool:
+        """Drop a request from the live wave (queued or mid-decode): the
+        fleet's first-wins hedge cancellation and retry requeue both land
+        here. The lane frees immediately; the stale cache row is inert
+        (masked slots' outputs are never read). Returns False if the
+        request is not in this wave (e.g. it just finished)."""
+        w = self._wave
+        if w is None:
+            return False
+        for i, r in enumerate(w.pending):
+            if r is request:
+                del w.pending[i]
+                return True
+        for j, s in enumerate(w.slots):
+            if s is not None and s.req is request:
+                w.slots[j] = None
+                return True
+        return False
+
+    def gru_wave_step(self) -> List[Request]:
+        """Advance the wave ONE decode step: admit queued requests into
+        every empty slot (ALL admits share ONE bucketed prefill + one
+        scatter), run one fused decode step over the fixed slots, retire
+        finished lanes. Returns the requests that finished this step."""
+        w = self._wave
+        if w is None:
+            return []
+        X = self.cfg.gru.input_dim
+        empty = [j for j, s in enumerate(w.slots) if s is None]
+        if empty and w.pending:
+            k = min(len(empty), len(w.pending))
+            admits = [self._make_slot(w.pending.popleft()) for _ in range(k)]
+            now = self.clock.now()
+            for s in admits:
+                s.req.t_admit = now
+                if s.req.t_submit is not None:
+                    self.queue_waits.append(now - s.req.t_submit)
+            fresh = self._gru_prefill(
+                [np.asarray(s.req.prompt, np.float32).reshape(-1, X)
+                 for s in admits])
+            if w.cache is None:
+                # first cohort: the prefilled cache IS the wave cache (row
+                # i belongs to slot i; surplus rows are fully masked)
+                w.cache = fresh
+            else:
+                w.cache = self._get_scatter(k)(
+                    w.cache, fresh, jnp.asarray(empty[:k], jnp.int32))
+            for j, s in zip(empty[:k], admits):
+                w.slots[j] = s
+        if not any(s is not None for s in w.slots):
+            return []
+        for j, s in enumerate(w.slots):
+            if s is None:
+                w.nxt[j] = 0.0
+                continue
+            r = s.req
+            w.nxt[j] = (r.stream[s.step] if r.stream is not None
+                        and s.step < len(r.stream) else s.last_feat)
+        # attribution is frozen per decode-jit key AT TRACE TIME
+        # (_decode_backend_for): the jitted step embeds whichever backend
         # the executor resolved when it first traced, and later cost-model
         # epoch bumps do NOT retrace it — so a fresh compile() mid-wave
         # could only MIS-attribute. Steps are recorded under the key they
         # ran with; if admits ever change the decode key (live-batch
         # resizing), the new key resolves its own backend on first use.
-        nxt = np.zeros((Bs, X), np.float32)
-        while any(s is not None for s in slots):
-            for j, s in enumerate(slots):
-                if s is None:
-                    nxt[j] = 0.0
-                    continue
-                r = s.req
-                nxt[j] = (r.stream[s.step] if r.stream is not None
-                          and s.step < len(r.stream) else s.last_feat)
-            t0 = time.perf_counter()
-            logits, cache = decode(self.params, cache, jnp.asarray(nxt))
-            logits.block_until_ready()
-            self._record_step(key, time.perf_counter() - t0,
-                              self._decode_backend_for(key))
-            cls = np.asarray(jnp.argmax(logits, -1))
-            freed = []
-            for j, s in enumerate(slots):
-                if s is None:
-                    continue
-                r = s.req
-                r.out.append(int(cls[j]))
-                s.step += 1
-                if (int(cls[j]) == r.eos_id
-                        or len(r.out) >= r.max_new_tokens):
-                    r.done = True
-                    slots[j] = None                     # retire mid-wave
-                    freed.append(j)
-            if freed and pending:
-                # batch the step's admits: ALL slots freed this step are
-                # refilled by ONE bucketed prefill, scattered in one go.
-                k = min(len(freed), len(pending))
-                admits = [make_slot(pending.popleft()) for _ in range(k)]
-                fresh = self._gru_prefill(
-                    [np.asarray(s2.req.prompt, np.float32).reshape(-1, X)
-                     for s2 in admits])
-                cache = self._get_scatter(k)(
-                    cache, fresh, jnp.asarray(freed[:k], jnp.int32))
-                for j2, s2 in zip(freed[:k], admits):
-                    slots[j2] = s2
-        for r in reqs:
-            r.done = True
-        return reqs
+        decode = self._get_decode(w.key)
+        t0 = self.clock.now()
+        logits, w.cache = decode(self.params, w.cache, jnp.asarray(w.nxt))
+        logits.block_until_ready()
+        self._record_step(w.key, self.clock.now() - t0,
+                          self._decode_backend_for(w.key))
+        cls = np.asarray(jnp.argmax(logits, -1))
+        finished = []
+        for j, s in enumerate(w.slots):
+            if s is None:
+                continue
+            r = s.req
+            r.out.append(int(cls[j]))
+            s.step += 1
+            if (int(cls[j]) == r.eos_id
+                    or len(r.out) >= r.max_new_tokens):
+                self._finish(r)
+                w.slots[j] = None                       # retire mid-wave
+                finished.append(r)
+        return finished
 
     # -- stats --------------------------------------------------------------
 
@@ -357,12 +479,26 @@ class ServeEngine:
         the prefill story)."""
         ts = np.array(self.step_times or [0.0])
         pf = np.array(self.prefill_times or [0.0])
+        qw = np.array(self.queue_waits or [0.0])
+        ee = np.array(self.e2e_times or [0.0])
         per_backend: Dict[str, int] = {}
         for b in self.decode_backends:
             if b is not None:
                 per_backend[b] = per_backend.get(b, 0) + 1
         from repro.core import runtime
         return {"decode_backend_steps": per_backend,
+                # per-REQUEST latencies (engine clock): queue wait is
+                # submit -> slot admission, e2e is submit -> finish — the
+                # router's depth-aware routing signal and the fleet
+                # benchmark's honest p99 (per-step decode percentiles alone
+                # hide queueing delay entirely)
+                "requests": len(self.e2e_times),
+                "queue_wait_mean_s": float(qw.mean()),
+                "queue_wait_p50_s": float(np.percentile(qw, 50)),
+                "queue_wait_p99_s": float(np.percentile(qw, 99)),
+                "e2e_mean_s": float(ee.mean()),
+                "e2e_p50_s": float(np.percentile(ee, 50)),
+                "e2e_p99_s": float(np.percentile(ee, 99)),
                 # the datapath precision the latest resolved decode backend
                 # serves (int8 for the *_q8 backends, float32 otherwise)
                 "served_dtype": runtime.backend_dtype(self.decode_backend),

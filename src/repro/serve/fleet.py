@@ -1,0 +1,612 @@
+"""Fault-tolerant multi-replica serving fleet: async front-door router
+with admission control, retry/hedging, and deterministic fault injection.
+
+The paper's contract is a per-request latency budget on the sequential GRU
+decode path. One :class:`~repro.serve.engine.ServeEngine` keeps that budget
+per kernel; this module keeps it per request while replicas crash, straggle
+and recover. A :class:`FleetRouter` owns N engine replicas (possibly on
+distinct placements) behind one ``submit()/generate()`` surface — the
+runtime device-dispatch idiom: one user-facing call, replica chosen per
+request at runtime.
+
+Architecture (one cooperative scheduler, zero wall-clock sleeps):
+
+* **Bounded admission** — ``submit`` raises a typed
+  :class:`FleetRejected` (``reason="queue_full"`` /
+  ``"deadline_infeasible"``) instead of queueing unboundedly; queued
+  requests whose deadline lapses before dispatch are shed with
+  ``reason="deadline"``.
+* **Routing** — per request, by prompt bucket + measured per-replica
+  queue depth: expected drain time = outstanding decode tokens x the
+  replica's expected step time (the engine's own recent measured steps
+  when available, else the CostModel's measured row for its resolved
+  decode backend, else a nominal constant), plus a penalty for replicas
+  that would have to compile the prompt's prefill bucket cold.
+  ``routing="static"`` (round-robin) is kept as the benchmark's A/B arm.
+* **Supervision** — every ``tick()``: live replicas beat a
+  :class:`~repro.distributed.fault_tolerance.HeartbeatMonitor`; a replica
+  that misses ``heartbeat_timeout_s`` of beats is declared dead and its
+  in-flight requests are requeued with exponential backoff under a retry
+  budget (re-dispatched from scratch — decode is deterministic, so a
+  retried stream is bitwise the fault-free stream). Step times feed a
+  :class:`~repro.distributed.fault_tolerance.StragglerMonitor`; a
+  straggler's in-flight requests get a hedged duplicate dispatch on the
+  fastest non-straggler, first finisher wins, the loser's lane is
+  cancelled. A restored replica re-enters the rotation warm:
+  :meth:`FleetReplica.restart` rebuilds its engine, which re-runs
+  ``prepare()`` against the replica's placement.
+* **Fault injection** — a :class:`FaultInjector` holds a schedule of
+  kill / restore / slow / delay events against the router's injectable
+  clock. Under a ``ManualClock`` the router itself advances virtual time
+  ``tick_s`` per tick, so every failure path runs deterministically in
+  tier-1 tests; under a ``SystemClock`` the same schedule drives a live
+  load test (``benchmarks/serve_fleet.py``).
+
+Simulated-time semantics (``ManualClock``): a replica with
+``slow_factor=f`` executes one decode step every f ticks (a straggler is
+genuinely slower, so hedges genuinely win) and records ``tick_s * f`` as
+its step time. Under a real clock the fleet is single-process, so
+``slow``/``delay`` events inflate the *recorded* step signal (detection
+and mitigation are real; the slowdown itself is simulated).
+
+See ``docs/serving.md`` for the failure-mode table mapping each event to
+its detection signal, mitigation, and covering test.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.distributed.fault_tolerance import (Clock, HeartbeatMonitor,
+                                               ManualClock, StragglerMonitor,
+                                               SystemClock)
+from repro.distributed.sharding import ShardCtx
+from repro.serve.engine import Request, ServeEngine
+
+
+class FleetRejected(RuntimeError):
+    """Typed admission rejection: load is shed with a reason, never by
+    silent unbounded queueing. ``reason`` is one of ``"queue_full"``,
+    ``"deadline_infeasible"``, ``"deadline"``."""
+
+    def __init__(self, reason: str, detail: str = ""):
+        super().__init__(f"{reason}: {detail}" if detail else reason)
+        self.reason = reason
+
+
+@dataclass
+class FaultEvent:
+    """One scheduled fault: fires when the router clock reaches ``t``."""
+    t: float
+    kind: str                        # "kill" | "restore" | "slow" | "delay"
+    replica: str
+    factor: float = 1.0              # slow: service-time multiplier
+    delay_s: float = 0.0             # delay: one-off added service time
+
+
+class FaultInjector:
+    """Deterministic fault schedule, drained against the router's clock.
+
+    Events are applied at the first tick whose clock time reaches
+    ``event.t`` — with a ``ManualClock`` that instant is exact and
+    reproducible, so tests exercise kill/restore/straggle paths without a
+    single wall-clock sleep.
+    """
+
+    def __init__(self, events: Sequence[FaultEvent] = ()):
+        self._events = sorted(events, key=lambda e: (e.t, e.replica, e.kind))
+        self._i = 0
+        self.applied: List[FaultEvent] = []
+
+    def __len__(self) -> int:
+        return len(self._events) - self._i
+
+    def due(self, now: float) -> List[FaultEvent]:
+        out = []
+        while self._i < len(self._events) and self._events[self._i].t <= now:
+            out.append(self._events[self._i])
+            self._i += 1
+        self.applied.extend(out)
+        return out
+
+    @classmethod
+    def seeded(cls, seed: int, replica_names: Sequence[str],
+               horizon_s: float, kill_prob: float = 0.6,
+               slow_prob: float = 0.4, slow_factor: float = 6.0,
+               t0: float = 0.0) -> "FaultInjector":
+        """A reproducible random schedule: each replica independently gets
+        a kill->restore window (prob ``kill_prob``) and/or a slow window
+        (prob ``slow_prob``) inside ``[t0 + 10%, t0 + 90%]`` of the
+        horizon. Every kill is paired with a restore, so a seeded schedule
+        can stall the fleet but never strand it."""
+        rng = np.random.default_rng(seed)
+        events: List[FaultEvent] = []
+        for name in replica_names:
+            if rng.random() < kill_prob:
+                t_kill = t0 + horizon_s * rng.uniform(0.1, 0.5)
+                t_back = t_kill + horizon_s * rng.uniform(0.15, 0.4)
+                events.append(FaultEvent(t=t_kill, kind="kill", replica=name))
+                events.append(FaultEvent(t=t_back, kind="restore",
+                                         replica=name))
+            if rng.random() < slow_prob:
+                t_slow = t0 + horizon_s * rng.uniform(0.1, 0.6)
+                t_fast = t_slow + horizon_s * rng.uniform(0.1, 0.3)
+                events.append(FaultEvent(t=t_slow, kind="slow", replica=name,
+                                         factor=slow_factor))
+                events.append(FaultEvent(t=t_fast, kind="slow", replica=name,
+                                         factor=1.0))
+        return cls(events)
+
+
+@dataclass
+class FleetConfig:
+    """Router policy knobs (all timing in clock seconds)."""
+    queue_limit: int = 64            # bound on outstanding (queued+in-flight)
+    retry_budget: int = 3            # re-dispatches after replica death
+    backoff_base_s: float = 0.02     # retry n waits base * 2^(n-1)
+    heartbeat_timeout_s: float = 0.25
+    straggler_factor: float = 3.0
+    straggler_window: int = 8
+    hedge: bool = True               # duplicate-dispatch straggler requests
+    routing: str = "depth"           # "depth" (measured) | "static" (RR)
+    tick_s: float = 0.01             # virtual seconds per tick (ManualClock)
+    nominal_step_s: float = 1e-3     # expected step time with no signal
+    bucket_penalty_s: float = 0.05   # routing cost of a cold prefill bucket
+
+
+@dataclass
+class FleetTicket:
+    """One admitted request's lifecycle in the fleet."""
+    request: Request
+    t_submit: float
+    deadline_s: Optional[float] = None    # relative to t_submit
+    status: str = "queued"           # queued|inflight|done|shed|failed
+    reason: Optional[str] = None
+    retries: int = 0
+    hedged: bool = False
+    not_before: float = 0.0          # backoff gate (clock time)
+    t_first_dispatch: Optional[float] = None
+    t_done: Optional[float] = None
+    replicas: List[str] = field(default_factory=list)   # dispatch history
+    flights: List["_Flight"] = field(default_factory=list)
+
+    @property
+    def outstanding(self) -> bool:
+        return self.status in ("queued", "inflight")
+
+
+@dataclass
+class _Flight:
+    """One dispatch attempt: a fresh clone of the ticket's request served
+    by one replica (retries and hedges each get their own flight, so a
+    half-decoded attempt never leaks partial output into the result)."""
+    ticket: FleetTicket
+    replica: "FleetReplica"
+    clone: Request
+    hedge: bool = False
+
+
+class FleetReplica:
+    """One supervised engine replica. ``build_engine`` rebuilds it from
+    scratch on restart — ``ServeEngine.__init__`` re-runs ``prepare()``
+    against the replica's placement, so a recovered replica re-enters the
+    rotation with weights placed (warm), not on the request hot path."""
+
+    def __init__(self, name: str, build_engine: Callable[[], ServeEngine]):
+        self.name = name
+        self._build = build_engine
+        self.engine = build_engine()
+        self.alive = True
+        self.slow_factor = 1.0
+        self.pending_delay_s = 0.0
+        self.restarts = 0
+        self.steps = 0
+        self.flights: List[_Flight] = []
+        self._sim_credit = 0.0       # ManualClock: fractional step budget
+
+    def kill(self) -> None:
+        """Simulated crash: stops beating and stepping; wave state is lost
+        (the rebuilt engine starts empty, like a restarted process)."""
+        self.alive = False
+
+    def restart(self) -> None:
+        """Re-enter the rotation warm: fresh engine, prepare() re-run."""
+        self.engine = self._build()
+        self.alive = True
+        self.slow_factor = 1.0
+        self.pending_delay_s = 0.0
+        self._sim_credit = 0.0
+        self.flights = []
+        self.restarts += 1
+
+
+class FleetRouter:
+    """Async front-door for N ServeEngine replicas: bounded admission,
+    depth-aware routing, retry/hedging, fault supervision.
+
+    ``submit()`` is the async surface: it enqueues and returns a
+    :class:`FleetTicket` immediately (or raises :class:`FleetRejected`);
+    ``tick()`` advances the whole fleet one scheduler round;
+    ``run_until_done()`` pumps ticks until nothing is outstanding;
+    ``generate(requests)`` is the one-call convenience wrapper.
+    """
+
+    def __init__(self, cfg, params, *, replicas: int = 2,
+                 ctxs: Optional[Sequence[ShardCtx]] = None,
+                 max_batch: int = 4, bucket_min: int = 8,
+                 clock: Optional[Clock] = None,
+                 config: FleetConfig = FleetConfig(),
+                 injector: Optional[FaultInjector] = None):
+        if cfg.family != "gru":
+            raise NotImplementedError("the fleet serves the GRU family "
+                                      "(stepwise waves); use ServeEngine "
+                                      "directly for LM batches")
+        self.cfg = cfg
+        self.config = config
+        self.clock = clock or SystemClock()
+        self.injector = injector
+        self.max_batch = max_batch
+        ctxs = list(ctxs) if ctxs is not None else [ShardCtx()] * replicas
+        assert len(ctxs) == replicas
+
+        def _builder(ctx):
+            return lambda: ServeEngine(cfg, params, ctx, max_batch=max_batch,
+                                       bucket_min=bucket_min,
+                                       clock=self.clock)
+
+        self.replicas = [FleetReplica(f"replica{i}", _builder(ctx))
+                         for i, ctx in enumerate(ctxs)]
+        self._by_name = {r.name: r for r in self.replicas}
+        self.heartbeats = HeartbeatMonitor(
+            timeout_s=config.heartbeat_timeout_s, clock=self.clock)
+        self.stragglers = StragglerMonitor(
+            factor=config.straggler_factor, window=config.straggler_window,
+            clock=self.clock)
+        for r in self.replicas:
+            self.heartbeats.beat(r.name)
+        self.tickets: List[FleetTicket] = []
+        self._queue: deque = deque()
+        self._outstanding = 0
+        self._rr = -1                # static round-robin cursor
+        self.ticks = 0
+        self.counters: Dict[str, int] = {
+            "submitted": 0, "completed": 0, "failed": 0, "retries": 0,
+            "hedges": 0, "hedges_cancelled": 0, "kills": 0, "restores": 0}
+        self.sheds: Dict[str, int] = {}
+        self._e2e: List[float] = []
+        self._queue_waits: List[float] = []
+
+    # -- admission -----------------------------------------------------------
+
+    def submit(self, request: Request,
+               deadline_s: Optional[float] = None) -> FleetTicket:
+        """Admit one request (non-blocking). Raises :class:`FleetRejected`
+        when the outstanding set is at ``queue_limit`` or a requested
+        deadline cannot be met even on the least-loaded replica."""
+        now = self.clock.now()
+        if self._outstanding >= self.config.queue_limit:
+            self.sheds["queue_full"] = self.sheds.get("queue_full", 0) + 1
+            raise FleetRejected("queue_full",
+                                f"{self._outstanding} outstanding >= "
+                                f"limit {self.config.queue_limit}")
+        if deadline_s is not None:
+            est = self._estimated_service_s(request)
+            if est > deadline_s:
+                self.sheds["deadline_infeasible"] = (
+                    self.sheds.get("deadline_infeasible", 0) + 1)
+                raise FleetRejected(
+                    "deadline_infeasible",
+                    f"estimated {est:.4f}s > deadline {deadline_s:.4f}s")
+        if request.t_submit is None:
+            request.t_submit = now
+        t = FleetTicket(request=request, t_submit=now, deadline_s=deadline_s)
+        self.tickets.append(t)
+        self._queue.append(t)
+        self._outstanding += 1
+        self.counters["submitted"] += 1
+        return t
+
+    def generate(self, requests: Sequence[Request],
+                 deadline_s: Optional[float] = None) -> List[Request]:
+        """One-call surface: admit everything (pumping ticks while the
+        bounded queue is full, i.e. backpressure instead of rejection) and
+        serve to completion. Per-request results land in ``request.out``
+        exactly as with a single engine."""
+        tickets = []
+        for r in requests:
+            pumped = 0
+            # a full queue is backpressure here, not overload: pump the
+            # scheduler until a slot frees instead of shedding own work
+            while self._outstanding >= self.config.queue_limit:
+                self.tick()
+                pumped += 1
+                if pumped > 200_000:
+                    raise RuntimeError(
+                        "fleet queue never drained during generate()")
+            tickets.append(self.submit(r, deadline_s=deadline_s))
+        self.run_until_done()
+        return list(requests)
+
+    # -- scheduler -----------------------------------------------------------
+
+    def run_until_done(self, max_ticks: int = 200_000) -> None:
+        """Pump ``tick()`` until no ticket is outstanding. ``max_ticks``
+        bounds broken schedules (e.g. a kill with no restore and no
+        survivor) with a loud error instead of a hang."""
+        n = 0
+        while any(t.outstanding for t in self.tickets):
+            self.tick()
+            n += 1
+            if n > max_ticks:
+                raise RuntimeError(
+                    f"fleet did not converge in {max_ticks} ticks: "
+                    f"{sum(t.outstanding for t in self.tickets)} outstanding,"
+                    f" alive={[r.name for r in self.replicas if r.alive]}")
+
+    def tick(self) -> None:
+        """One scheduler round: advance virtual time, apply due faults,
+        beat/detect/requeue, shed lapsed deadlines, dispatch, step every
+        live replica one decode step, hedge stragglers."""
+        self.ticks += 1
+        if isinstance(self.clock, ManualClock):
+            self.clock.advance(self.config.tick_s)
+        now = self.clock.now()
+        if self.injector is not None:
+            for ev in self.injector.due(now):
+                self._apply_event(ev)
+        for rep in self.replicas:
+            if rep.alive:
+                self.heartbeats.beat(rep.name)
+        dead = set(self.heartbeats.dead_hosts())
+        for rep in self.replicas:
+            if rep.name in dead and rep.flights:
+                self._on_replica_down(rep, now)
+        self._shed_lapsed(now)
+        self._dispatch_queued(now)
+        for rep in self.replicas:
+            self._step_replica(rep)
+        if self.config.hedge:
+            self._hedge_stragglers(now)
+
+    def _apply_event(self, ev: FaultEvent) -> None:
+        rep = self._by_name[ev.replica]
+        if ev.kind == "kill":
+            if rep.alive:
+                rep.kill()
+                self.counters["kills"] += 1
+        elif ev.kind == "restore":
+            if not rep.alive:
+                rep.restart()
+                self.heartbeats.beat(rep.name)   # back in the rotation
+                self.counters["restores"] += 1
+        elif ev.kind == "slow":
+            rep.slow_factor = float(ev.factor)
+        elif ev.kind == "delay":
+            rep.pending_delay_s += float(ev.delay_s)
+        else:
+            raise ValueError(f"unknown fault kind: {ev.kind!r}")
+
+    def _on_replica_down(self, rep: FleetReplica, now: float) -> None:
+        """Requeue a dead replica's in-flight requests: each surviving
+        ticket re-enters the queue from scratch with exponential backoff,
+        up to the retry budget. A ticket whose hedge is still live on
+        another replica just loses this flight."""
+        for fl in rep.flights:
+            t = fl.ticket
+            if fl in t.flights:
+                t.flights.remove(fl)
+            if t.status != "inflight":
+                continue
+            if any(f.replica.alive for f in t.flights):
+                continue                         # hedge still racing
+            t.retries += 1
+            if t.retries > self.config.retry_budget:
+                t.status = "failed"
+                t.reason = "retry_budget"
+                self._outstanding -= 1
+                self.counters["failed"] += 1
+                continue
+            t.status = "queued"
+            t.not_before = now + (self.config.backoff_base_s
+                                  * 2 ** (t.retries - 1))
+            self._queue.append(t)
+            self.counters["retries"] += 1
+        rep.flights = []
+
+    def _shed_lapsed(self, now: float) -> None:
+        for t in list(self._queue):
+            if (t.status == "queued" and t.deadline_s is not None
+                    and now - t.t_submit > t.deadline_s):
+                t.status = "shed"
+                t.reason = "deadline"
+                self._queue.remove(t)
+                self._outstanding -= 1
+                self.sheds["deadline"] = self.sheds.get("deadline", 0) + 1
+
+    def _dispatch_queued(self, now: float) -> None:
+        alive = [r for r in self.replicas if r.alive]
+        if not alive:
+            return
+        held = []
+        while self._queue:
+            t = self._queue.popleft()
+            if t.status != "queued":
+                continue
+            if t.not_before > now:
+                held.append(t)                   # backoff not elapsed
+                continue
+            self._dispatch(t, self._route(t, alive), now)
+        self._queue.extend(held)
+
+    def _dispatch(self, t: FleetTicket, rep: FleetReplica, now: float,
+                  hedge: bool = False) -> None:
+        r = t.request
+        clone = Request(prompt=r.prompt, max_new_tokens=r.max_new_tokens,
+                        eos_id=r.eos_id, stream=r.stream)
+        fl = _Flight(ticket=t, replica=rep, clone=clone, hedge=hedge)
+        t.flights.append(fl)
+        rep.flights.append(fl)
+        t.status = "inflight"
+        t.replicas.append(rep.name)
+        if t.t_first_dispatch is None:
+            t.t_first_dispatch = now
+            self._queue_waits.append(now - t.t_submit)
+        rep.engine.gru_wave_enqueue([clone])
+
+    def _step_replica(self, rep: FleetReplica) -> None:
+        if not rep.alive or rep.engine.gru_wave_active() == 0:
+            return
+        sim = isinstance(self.clock, ManualClock)
+        if sim and rep.slow_factor > 1.0:
+            # a straggler genuinely runs fewer steps per unit virtual time
+            rep._sim_credit += 1.0 / rep.slow_factor
+            if rep._sim_credit < 1.0:
+                return
+            rep._sim_credit -= 1.0
+        t0 = self.clock.now()
+        finished = rep.engine.gru_wave_step()
+        measured = self.clock.now() - t0
+        if sim:
+            dt = self.config.tick_s * rep.slow_factor + rep.pending_delay_s
+        else:
+            dt = measured * rep.slow_factor + rep.pending_delay_s
+        rep.pending_delay_s = 0.0
+        rep.steps += 1
+        self.stragglers.record(rep.name, dt)
+        for clone in finished:
+            for fl in list(rep.flights):
+                if fl.clone is clone:
+                    self._resolve(fl)
+                    break
+
+    def _resolve(self, fl: _Flight) -> None:
+        """First finisher wins the ticket: copy the clone's stream into the
+        user's request and cancel every other flight (hedge losers)."""
+        t = fl.ticket
+        fl.replica.flights.remove(fl)
+        if fl in t.flights:
+            t.flights.remove(fl)
+        if t.status != "inflight":
+            return                               # already resolved/shed
+        t.request.out = list(fl.clone.out)
+        t.request.done = True
+        t.request.t_finish = fl.clone.t_finish
+        t.status = "done"
+        t.t_done = self.clock.now()
+        self._outstanding -= 1
+        self.counters["completed"] += 1
+        self._e2e.append(t.t_done - t.t_submit)
+        for other in list(t.flights):
+            other.replica.engine.gru_wave_cancel(other.clone)
+            if other in other.replica.flights:
+                other.replica.flights.remove(other)
+            t.flights.remove(other)
+            self.counters["hedges_cancelled"] += 1
+
+    def _hedge_stragglers(self, now: float) -> None:
+        strag = set(self.stragglers.stragglers())
+        if not strag:
+            return
+        fast = [r for r in self.replicas
+                if r.alive and r.name not in strag]
+        if not fast:
+            return
+        for rep in self.replicas:
+            if rep.name not in strag:
+                continue
+            for fl in list(rep.flights):
+                t = fl.ticket
+                if t.hedged or t.status != "inflight" or len(t.flights) > 1:
+                    continue
+                target = min(fast, key=lambda r: self._expected_wait_s(r))
+                t.hedged = True
+                self.counters["hedges"] += 1
+                self._dispatch(t, target, now, hedge=True)
+
+    # -- routing -------------------------------------------------------------
+
+    def _route(self, t: FleetTicket, alive: List[FleetReplica]
+               ) -> FleetReplica:
+        if self.config.routing == "static":
+            self._rr = (self._rr + 1) % len(alive)
+            return alive[self._rr]
+        S = int(np.asarray(t.request.prompt).reshape(
+            -1, self.cfg.gru.input_dim).shape[0])
+
+        def score(rep: FleetReplica) -> float:
+            s = self._expected_wait_s(rep)
+            if not rep.engine.bucket_warm(S):
+                s += self.config.bucket_penalty_s
+            return s
+
+        return min(alive, key=score)
+
+    def _expected_wait_s(self, rep: FleetReplica) -> float:
+        """Expected time for this replica to drain its outstanding work:
+        decode tokens owed x expected step time / slots. Step time comes
+        from the replica's own recent measured steps, else the CostModel's
+        measured row for the resolved decode backend, else nominal."""
+        _, tokens = rep.engine.gru_work_remaining()
+        return (tokens / max(1, self.max_batch)) * self._step_cost_s(rep)
+
+    def _step_cost_s(self, rep: FleetReplica) -> float:
+        recent = rep.engine.step_times[-self.config.straggler_window:]
+        med = float(np.median(recent)) if recent else 0.0
+        if med > 0.0:
+            return med * rep.slow_factor
+        step = self.config.nominal_step_s
+        try:                          # the CostModel's measured rows
+            from repro.core import runtime
+            g = self.cfg.gru
+            exe = runtime.compile(g, batch=self.max_batch, mode="decode",
+                                  placement=rep.engine.ctx.mesh)
+            us = runtime.cost_model().lookup(
+                exe.decode_backend, "decode", depth=g.num_layers,
+                batch=self.max_batch, hidden=g.hidden_dim)
+            if us is not None:
+                step = us * 1e-6
+        except Exception:             # routing must never take a fleet down
+            pass
+        return step * rep.slow_factor
+
+    def _estimated_service_s(self, request: Request) -> float:
+        """Admission-time completion estimate on the least-loaded replica
+        (queue drain + the request's own decode tokens)."""
+        alive = [r for r in self.replicas if r.alive]
+        if not alive:
+            return float("inf")
+        return min(self._expected_wait_s(r)
+                   + max(1, request.max_new_tokens) * self._step_cost_s(r)
+                   for r in alive)
+
+    # -- stats ---------------------------------------------------------------
+
+    def stats(self) -> dict:
+        """Fleet-level accounting + per-replica engine latency stats. The
+        e2e percentiles here include fleet queueing, retries and hedging —
+        the honest per-request numbers the paper's deadline is judged by."""
+        e2e = np.array(self._e2e or [0.0])
+        qw = np.array(self._queue_waits or [0.0])
+        per_replica = {}
+        for rep in self.replicas:
+            ls = rep.engine.latency_stats()
+            per_replica[rep.name] = {
+                "alive": rep.alive, "restarts": rep.restarts,
+                "steps": rep.steps, "slow_factor": rep.slow_factor,
+                "decode_p50_s": ls["p50_s"], "decode_p99_s": ls["p99_s"],
+                "queue_wait_p99_s": ls["queue_wait_p99_s"],
+                "requests": ls["requests"]}
+        return {**self.counters,
+                "shed": dict(self.sheds),
+                "outstanding": self._outstanding,
+                "ticks": self.ticks,
+                "routing": self.config.routing,
+                "e2e_mean_s": float(e2e.mean()),
+                "e2e_p50_s": float(np.percentile(e2e, 50)),
+                "e2e_p99_s": float(np.percentile(e2e, 99)),
+                "queue_wait_p50_s": float(np.percentile(qw, 50)),
+                "queue_wait_p99_s": float(np.percentile(qw, 99)),
+                "replicas": per_replica}

@@ -9,7 +9,7 @@ import pytest
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.distributed.fault_tolerance import (ElasticMeshManager,
-                                               HeartbeatMonitor,
+                                               HeartbeatMonitor, ManualClock,
                                                StragglerMonitor, Supervisor,
                                                largest_feasible_mesh)
 
@@ -74,18 +74,38 @@ def test_elastic_mesh_shapes():
 
 
 def test_monitors():
-    hb = HeartbeatMonitor(timeout_s=1.0)
-    hb.beat("a", now=0.0)
-    hb.beat("b", now=0.0)
-    assert hb.dead_hosts(now=0.5) == []
-    hb.beat("a", now=2.0)
-    assert hb.dead_hosts(now=2.1) == ["b"]
+    """Monitors share ONE injectable clock: beats and liveness checks can
+    no longer mix an injected `now` with time.monotonic() (the old
+    per-call-override API allowed exactly that bug)."""
+    clk = ManualClock()
+    hb = HeartbeatMonitor(timeout_s=1.0, clock=clk)
+    hb.beat("a")
+    hb.beat("b")
+    clk.advance(0.5)
+    assert hb.dead_hosts() == []
+    clk.advance(1.5)                        # t=2.0
+    hb.beat("a")
+    clk.advance(0.1)                        # t=2.1: b last beat at 0.0
+    assert hb.dead_hosts() == ["b"]
+    assert hb.alive_hosts() == ["a"]
 
-    sm = StragglerMonitor(factor=2.0)
+    sm = StragglerMonitor(factor=2.0, clock=clk)
     for h, t in [("a", 1.0), ("b", 1.0), ("c", 5.0)]:
         for _ in range(4):
             sm.record(h, t)
     assert sm.stragglers() == ["c"]
+    # time-horizon expiry: with max_age_s, stale slow samples stop flagging
+    sm2 = StragglerMonitor(factor=2.0, max_age_s=10.0, clock=clk)
+    for h, t in [("a", 1.0), ("b", 1.0), ("c", 5.0)]:
+        for _ in range(4):
+            sm2.record(h, t)
+    assert sm2.stragglers() == ["c"]
+    clk.advance(20.0)
+    for _ in range(4):                       # c recovered; old samples aged out
+        sm2.record("c", 1.0)
+        sm2.record("a", 1.0)
+        sm2.record("b", 1.0)
+    assert sm2.stragglers() == []
 
 
 def test_supervisor_survives_injected_failures(tmp_path):

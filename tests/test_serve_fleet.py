@@ -1,0 +1,364 @@
+"""The serving fleet's failure matrix, exercised deterministically.
+
+Every test drives the FleetRouter with a ManualClock and a seeded/explicit
+FaultInjector schedule: kill mid-wave, kill before prefill, straggler
+hedging, queue overflow, deadline shedding, recovery. No wall-clock sleeps
+anywhere — all timing flows through the injected Clock, so the suite runs
+in tier-1 at full speed and every failure path is reproducible.
+"""
+import numpy as np
+import pytest
+
+from repro.configs.base import GRUConfig, get_smoke_config
+from repro.core.params import init_params
+from repro.distributed.fault_tolerance import ManualClock
+from repro.distributed.sharding import ShardCtx
+from repro.models import api as mapi
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.fleet import (FaultEvent, FaultInjector, FleetConfig,
+                               FleetRejected, FleetRouter)
+
+
+def _setup(hidden=12, num_layers=1):
+    cfg = get_smoke_config("gru-jet").replace(
+        gru=GRUConfig(input_dim=5, hidden_dim=hidden, num_classes=5,
+                      seq_len=20, num_layers=num_layers))
+    A = mapi.get_api(cfg)
+    params = init_params(A.specs(cfg), __import__("jax").random.key(0),
+                         cfg.param_dtype)
+    return cfg, params
+
+
+def _requests(cfg, n, seed=0, max_new=4, vary=True):
+    rng = np.random.default_rng(seed)
+    X = cfg.gru.input_dim
+    return [Request(prompt=rng.normal(size=(3 + (i % 4 if vary else 0), X))
+                    .astype(np.float32), max_new_tokens=max_new)
+            for i in range(n)]
+
+
+def _fleet(cfg, params, *, replicas=2, injector=None, clock=None,
+           config=None, max_batch=2):
+    return FleetRouter(cfg, params, replicas=replicas, max_batch=max_batch,
+                       clock=clock or ManualClock(),
+                       config=config or FleetConfig(
+                           heartbeat_timeout_s=0.05, backoff_base_s=0.02,
+                           tick_s=0.01),
+                       injector=injector)
+
+
+def _reference_outs(cfg, params, requests):
+    """Fault-free single-engine oracle for the same prompts."""
+    solo = ServeEngine(cfg, params, ShardCtx(), max_batch=1)
+    outs = []
+    for r in requests:
+        ref = Request(prompt=r.prompt, max_new_tokens=r.max_new_tokens,
+                      eos_id=r.eos_id, stream=r.stream)
+        solo.generate([ref])
+        outs.append(ref.out)
+    return outs
+
+
+# ---------------------------------------------------------------------------
+# baseline: the one-call fleet surface, no faults
+# ---------------------------------------------------------------------------
+
+def test_fleet_serves_and_matches_single_engine():
+    cfg, params = _setup()
+    reqs = _requests(cfg, 6, seed=1)
+    router = _fleet(cfg, params)
+    done = router.generate(reqs)
+    assert all(r.done for r in done)
+    assert [r.out for r in done] == _reference_outs(cfg, params, reqs)
+    s = router.stats()
+    assert s["submitted"] == s["completed"] == 6
+    assert s["failed"] == 0 and s["shed"] == {}
+    # both replicas actually served (depth routing spreads the load)
+    assert all(v["steps"] > 0 for v in s["replicas"].values())
+
+
+def test_fleet_depth_routing_prefers_idle_replica():
+    """With replica0 loaded, a depth-aware route sends the next request to
+    the idle replica; static round-robin alternates regardless."""
+    cfg, params = _setup()
+    router = _fleet(cfg, params, config=FleetConfig(
+        heartbeat_timeout_s=0.05, tick_s=0.01, bucket_penalty_s=0.0))
+    r0 = router.replicas[0]
+    # load replica0 directly with a long request
+    heavy = _requests(cfg, 1, seed=2, max_new=32)[0]
+    t_heavy = router.submit(heavy)
+    router.tick()                        # dispatched somewhere
+    loaded = router._by_name[t_heavy.replicas[0]]
+    other = next(r for r in router.replicas if r is not loaded)
+    t2 = router.submit(_requests(cfg, 1, seed=3)[0])
+    router.tick()
+    assert t2.replicas[0] == other.name
+    router.run_until_done()
+    assert heavy.done and t2.request.done
+    assert r0.engine.latency_stats()["requests"] >= 0  # stats surface exists
+
+
+# ---------------------------------------------------------------------------
+# failure matrix
+# ---------------------------------------------------------------------------
+
+def test_fleet_replica_kill_mid_wave_completes_all():
+    """Kill a replica while it is mid-decode: heartbeat timeout detects it,
+    its in-flight requests retry on the survivor, 100% of admitted
+    requests complete, and every token stream equals the fault-free run
+    of the same seeds."""
+    cfg, params = _setup()
+    reqs = _requests(cfg, 6, seed=4, max_new=6)
+    # kill replica0 at t=0.06 (several ticks after dispatch -> mid-wave),
+    # never restore: the survivor must absorb everything
+    inj = FaultInjector([FaultEvent(t=0.06, kind="kill", replica="replica0")])
+    router = _fleet(cfg, params, injector=inj)
+    done = router.generate(reqs)
+    s = router.stats()
+    assert s["kills"] == 1
+    assert s["completed"] == s["submitted"] == 6
+    assert s["failed"] == 0
+    assert all(r.done for r in done)
+    assert s["retries"] >= 1             # something was really in flight
+    assert [r.out for r in done] == _reference_outs(cfg, params, reqs)
+
+
+def test_fleet_kill_during_prefill_retries():
+    """Kill a replica that has admitted requests but has not yet run their
+    prefill (its first step is deferred by a slow window): the requests
+    are requeued and complete elsewhere, streams unchanged."""
+    cfg, params = _setup()
+    reqs = _requests(cfg, 4, seed=5, max_new=4)
+    inj = FaultInjector([
+        # slow from t=0: replica0's first step (the cohort prefill) is
+        # deferred past the kill, so it dies holding un-prefilled work
+        FaultEvent(t=0.0, kind="slow", replica="replica0", factor=50.0),
+        FaultEvent(t=0.03, kind="kill", replica="replica0"),
+    ])
+    router = _fleet(cfg, params, config=FleetConfig(
+        heartbeat_timeout_s=0.05, backoff_base_s=0.02, tick_s=0.01,
+        hedge=False), injector=inj)
+    done = router.generate(reqs)
+    s = router.stats()
+    assert s["kills"] == 1 and s["failed"] == 0
+    assert s["completed"] == 4                              # all admitted
+    assert all(r.done for r in done)
+    # the killed replica never produced a prefill for its victims
+    killed = router._by_name["replica0"]
+    assert killed.alive is False
+    assert [r.out for r in done] == _reference_outs(cfg, params, reqs)
+
+
+def test_fleet_straggler_hedged_first_wins():
+    """A slow replica's in-flight requests get a duplicate dispatch on the
+    fast replica; the duplicate finishes first, the straggler's lane is
+    cancelled, and the result is returned exactly once."""
+    cfg, params = _setup()
+    reqs = _requests(cfg, 4, seed=6, max_new=8)
+    inj = FaultInjector([
+        FaultEvent(t=0.0, kind="slow", replica="replica0", factor=10.0)])
+    # 3 replicas: the straggler monitor compares against the fleet MEDIAN
+    # step time, which needs a majority of fast peers to be meaningful
+    router = _fleet(cfg, params, replicas=3, injector=inj,
+                    config=FleetConfig(
+                        heartbeat_timeout_s=0.5,   # slow != dead
+                        straggler_factor=3.0, tick_s=0.01))
+    done = router.generate(reqs)
+    s = router.stats()
+    assert s["completed"] == 4 and s["failed"] == 0
+    assert s["hedges"] >= 1, s
+    assert s["hedges_cancelled"] >= 1, s
+    # returned once: each request's stream has exactly max_new tokens (a
+    # double-resolve would append twice) and matches the oracle
+    assert all(len(r.out) == 8 for r in done)
+    assert [r.out for r in done] == _reference_outs(cfg, params, reqs)
+    # the hedged tickets really raced two replicas
+    hedged = [t for t in router.tickets if t.hedged]
+    assert hedged and all(len(t.replicas) >= 2 for t in hedged)
+
+
+def test_fleet_queue_overflow_sheds_typed():
+    cfg, params = _setup()
+    router = _fleet(cfg, params, config=FleetConfig(
+        queue_limit=2, heartbeat_timeout_s=0.05, tick_s=0.01))
+    reqs = _requests(cfg, 3, seed=7)
+    router.submit(reqs[0])
+    router.submit(reqs[1])
+    with pytest.raises(FleetRejected) as ei:
+        router.submit(reqs[2])
+    assert ei.value.reason == "queue_full"
+    assert router.stats()["shed"] == {"queue_full": 1}
+    router.run_until_done()              # the two admitted still complete
+    assert reqs[0].done and reqs[1].done and not reqs[2].done
+
+
+def test_fleet_deadline_shedding():
+    """An infeasible deadline rejects at submit; a feasible one that
+    lapses while queued sheds with reason='deadline'."""
+    cfg, params = _setup()
+    router = _fleet(cfg, params, config=FleetConfig(
+        queue_limit=64, heartbeat_timeout_s=10.0, tick_s=0.01,
+        nominal_step_s=0.01))
+    with pytest.raises(FleetRejected) as ei:
+        router.submit(_requests(cfg, 1, max_new=100)[0], deadline_s=1e-9)
+    assert ei.value.reason == "deadline_infeasible"
+    # admit while healthy, then kill everything before the first dispatch
+    # tick: the queued request cannot dispatch and its deadline lapses
+    inj = FaultInjector([
+        FaultEvent(t=0.0, kind="kill", replica="replica0"),
+        FaultEvent(t=0.0, kind="kill", replica="replica1"),
+        FaultEvent(t=0.5, kind="restore", replica="replica0"),
+    ])
+    clock = ManualClock()
+    router2 = _fleet(cfg, params, injector=inj, clock=clock,
+                     config=FleetConfig(heartbeat_timeout_s=0.05,
+                                        tick_s=0.01, nominal_step_s=1e-4))
+    t = router2.submit(_requests(cfg, 1, max_new=2)[0], deadline_s=0.1)
+    router2.run_until_done()
+    assert t.status == "shed" and t.reason == "deadline"
+    assert router2.stats()["shed"]["deadline"] == 1
+
+
+def test_fleet_recovered_replica_serves_again_warm():
+    """Kill -> restore: the replica re-enters the rotation (restart reruns
+    the engine's prepare()) and serves later requests."""
+    cfg, params = _setup()
+    inj = FaultInjector([
+        FaultEvent(t=0.02, kind="kill", replica="replica0"),
+        FaultEvent(t=0.10, kind="restore", replica="replica0"),
+    ])
+    # zero the cold-bucket penalty: a freshly restarted replica starts with
+    # empty jit caches, and this test wants routing to use it again
+    router = _fleet(cfg, params, injector=inj, config=FleetConfig(
+        heartbeat_timeout_s=0.05, backoff_base_s=0.02, tick_s=0.01,
+        bucket_penalty_s=0.0))
+    first = _requests(cfg, 4, seed=8, max_new=4)
+    done = router.generate(first)
+    assert all(r.done for r in done)
+    rep0 = router._by_name["replica0"]
+    assert rep0.restarts == 1 and rep0.alive
+    # restart rebuilt the engine: serving prep (prepare()) ran against the
+    # replica's placement, so the rebuilt params carry the stacked views
+    assert "stacked_cells" in rep0.engine.params
+    steps_before = rep0.steps
+    second = _requests(cfg, 4, seed=9, max_new=4)
+    done2 = router.generate(second)
+    assert all(r.done for r in done2)
+    assert rep0.steps > steps_before     # it really served again
+    assert [r.out for r in done2] == _reference_outs(cfg, params, second)
+
+
+def test_fleet_seeded_schedule_zero_drops_and_stream_parity():
+    """Acceptance: under a seeded kill+restore schedule mid-load, the
+    fleet completes 100% of admitted requests and the token streams are
+    identical to a fault-free run of the same request seeds."""
+    cfg, params = _setup(hidden=10)
+    inj = FaultInjector.seeded(11, ["replica0", "replica1", "replica2"],
+                               horizon_s=0.6, kill_prob=0.7, slow_prob=0.5)
+    assert len(inj) > 0                  # the seed really scheduled faults
+    reqs_f = _requests(cfg, 10, seed=12, max_new=5)
+    router = _fleet(cfg, params, replicas=3, injector=inj)
+    done_f = router.generate(reqs_f)
+    s = router.stats()
+    assert s["completed"] == s["submitted"] == 10
+    assert s["failed"] == 0 and s["shed"] == {}
+    # fault-free fleet run, same seeds
+    reqs_c = _requests(cfg, 10, seed=12, max_new=5)
+    clean = _fleet(cfg, params, replicas=3)
+    done_c = clean.generate(reqs_c)
+    assert [r.out for r in done_f] == [r.out for r in done_c]
+
+
+def test_fleet_static_vs_depth_routing_ab():
+    """Both routing arms complete the same work (the benchmark's A/B);
+    static round-robin alternates replicas by construction."""
+    cfg, params = _setup()
+    for routing in ("depth", "static"):
+        reqs = _requests(cfg, 5, seed=13)
+        router = _fleet(cfg, params, config=FleetConfig(
+            routing=routing, heartbeat_timeout_s=0.05, tick_s=0.01))
+        done = router.generate(reqs)
+        assert all(r.done for r in done)
+        assert router.stats()["routing"] == routing
+        if routing == "static":
+            first_two = [t.replicas[0] for t in router.tickets[:2]]
+            assert first_two == ["replica0", "replica1"]
+
+
+# ---------------------------------------------------------------------------
+# engine satellites: stepwise wave API + queue-wait/e2e stats
+# ---------------------------------------------------------------------------
+
+def test_engine_stepwise_wave_matches_generate():
+    """Driving the wave one step at a time (the router's surface) produces
+    exactly what the closed-loop generate() produces."""
+    cfg, params = _setup()
+    reqs_a = _requests(cfg, 5, seed=14, max_new=3)
+    reqs_b = _requests(cfg, 5, seed=14, max_new=3)
+    e1 = ServeEngine(cfg, params, ShardCtx(), max_batch=2)
+    e1.generate(reqs_a)
+    e2 = ServeEngine(cfg, params, ShardCtx(), max_batch=2)
+    e2.gru_wave_begin(reqs_b)
+    n = 0
+    while e2.gru_wave_active():
+        e2.gru_wave_step()
+        n += 1
+        assert n < 1000
+    assert [r.out for r in reqs_a] == [r.out for r in reqs_b]
+    assert all(r.done for r in reqs_b)
+
+
+def test_engine_wave_cancel_frees_lane():
+    cfg, params = _setup()
+    reqs = _requests(cfg, 3, seed=15, max_new=50)
+    engine = ServeEngine(cfg, params, ShardCtx(), max_batch=2)
+    engine.gru_wave_begin(reqs)
+    engine.gru_wave_step()
+    assert engine.gru_wave_active() == 3          # 2 live + 1 pending
+    assert engine.gru_wave_cancel(reqs[0])        # live lane
+    assert engine.gru_wave_cancel(reqs[2])        # still pending
+    assert not engine.gru_wave_cancel(reqs[0])    # already gone
+    engine.gru_wave_step()
+    assert engine.gru_wave_active() == 1
+    assert not reqs[0].done and len(reqs[1].out) >= 1
+
+
+def test_engine_latency_stats_queue_wait_and_e2e():
+    """latency_stats reports per-request queue-wait and admit->finish e2e
+    latency (the router's routing signal and the benchmark's honest p99),
+    and e2e >= queue-wait for every request."""
+    cfg, params = _setup()
+    reqs = _requests(cfg, 5, seed=16, max_new=3)
+    engine = ServeEngine(cfg, params, ShardCtx(), max_batch=2)
+    engine.generate(reqs)
+    s = engine.latency_stats()
+    assert s["requests"] == 5
+    assert len(engine.queue_waits) == 5 and len(engine.e2e_times) == 5
+    assert all(q >= 0 for q in engine.queue_waits)
+    assert s["e2e_p99_s"] >= s["e2e_p50_s"] >= 0.0
+    assert s["queue_wait_p99_s"] >= s["queue_wait_p50_s"] >= 0.0
+    # queued requests (beyond the 2 slots) waited longer than the cohort
+    assert max(engine.queue_waits) >= min(engine.queue_waits)
+    for r in reqs:
+        assert r.t_submit is not None and r.t_finish is not None
+        assert r.t_admit is not None
+        assert r.t_finish - r.t_submit >= r.t_admit - r.t_submit >= 0.0
+
+
+def test_engine_wave_enqueue_into_live_wave():
+    """Requests can join a running wave (the fleet dispatch path) and are
+    admitted into freed slots with the usual single-prefill batching."""
+    cfg, params = _setup()
+    first = _requests(cfg, 2, seed=17, max_new=3)
+    late = _requests(cfg, 2, seed=18, max_new=2)
+    engine = ServeEngine(cfg, params, ShardCtx(), max_batch=2)
+    engine.gru_wave_begin(first)
+    engine.gru_wave_step()
+    engine.gru_wave_enqueue(late)
+    n = 0
+    while engine.gru_wave_active():
+        engine.gru_wave_step()
+        n += 1
+        assert n < 100
+    assert all(r.done for r in first + late)
+    assert [len(r.out) for r in first + late] == [3, 3, 2, 2]
