@@ -38,6 +38,13 @@ It also measures whole-SEQUENCE (prefill) latency per backend and emits
 ``op="sequence"`` rows next to the decode ones, so ``auto`` can pick the
 prefill backend per shape too (``--seq-len`` sets the measured T).
 
+``--family slstm`` measures the sLSTM cell family through the identical
+sweep (xla + fused impls — the names its ``(slstm, ·)`` registry
+namespace serves; forces ``--via runtime``). Every row in both artifacts
+carries a ``family`` column, so one BENCH_backend_costs.json can hold
+measured dispatch rows for several families side by side (the CostModel
+keys on it; missing column = gru, pre-registry artifacts load unchanged).
+
 ``--mesh N`` extends both sweeps with the shard_map backends: the
 ``sharded`` decode step (``sharded_decode``), and — for sequences AND
 decode — ``pallas_sharded``, the fused shard kernels inside the
@@ -66,7 +73,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import GRUConfig
-from repro.core import gru, runtime
+from repro.core import cells, gru, runtime
 from repro.core.params import init_params
 
 # impl label -> executor backend preference. ALL exact names: each impl
@@ -86,18 +93,38 @@ _SEQ_IMPL_PREF = {"xla": "xla", "fused": "pallas_fused",
 _MESH_IMPLS = ("sharded", "pallas_sharded")
 _Q8_IMPLS = ("fused_q8", "chain_q8")
 
+# impls each cell family registers backends for (``--family``): the sLSTM
+# family serves xla + pallas_fused only (no chain/q8/sharded twins yet),
+# and both its backend names resolve in the (slstm, ·) registry namespace
+# under the same impl labels as GRU's.
+_FAMILY_IMPLS = {
+    "gru": tuple(_IMPL_PREF),
+    "slstm": ("xla", "fused"),
+}
+
+
+def _family_params_state(cfg: GRUConfig, batch: int):
+    """(raw params pytree, initial flat state) for ``cfg``'s cell family.
+    The GRU path is kept byte-for-byte on its historical code path so the
+    measured rows stay comparable across the artifact series."""
+    if cells.cfg_family(cfg) == "gru":
+        return (init_params(gru.gru_stack_specs(cfg), jax.random.key(0)),
+                gru.stack_h0(cfg, batch))
+    fam = cells.get_family(cfg.family)
+    raw = init_params({"cells": fam.stack_specs(cfg)}, jax.random.key(0))
+    return raw, fam.state0(cfg, batch)
+
 
 def _make_step(cfg: GRUConfig, impl: str, batch: int, via: str = "direct",
                placement=None):
     """(jitted step fn, params, warm state, input, backend, cost_source)
     for one impl routed either through the legacy entry point or the
     compiled executable."""
-    raw = init_params(gru.gru_stack_specs(cfg), jax.random.key(0))
+    raw, hs = _family_params_state(cfg, batch)
     rcfg = dataclasses.replace(cfg, backend=_IMPL_PREF[impl])
     # serving prepares params once (ServeEngine via runtime.prepare);
     # measure the same placement-resident fast path here
     params = runtime.prepare(raw, rcfg, placement)
-    hs = gru.stack_h0(cfg, batch)
     x = jnp.ones((batch, cfg.input_dim))
     if via == "runtime":
         exe = runtime.compile(rcfg, batch=batch, placement=placement,
@@ -107,6 +134,9 @@ def _make_step(cfg: GRUConfig, impl: str, batch: int, via: str = "direct",
     else:
         assert impl in ("xla", "fused"), \
             f"--via direct serves xla/fused only, not {impl!r}"
+        assert cells.cfg_family(cfg) == "gru", \
+            "--via direct is the legacy GRU entry point; other families " \
+            "measure --via runtime"
         backend, src = impl, "n/a"
         params = {"cells": params.cells,
                   **({"stacked_cells": params.stacked}
@@ -158,10 +188,9 @@ def _make_seq(cfg: GRUConfig, impl: str, batch: int, seq_len: int,
     """(jitted prefill fn, prepared params, h0s, xs, backend, cost_source)
     for one sequence impl, always via the compiled executable (sequence
     cost rows are keyed by executor backend names)."""
-    raw = init_params(gru.gru_stack_specs(cfg), jax.random.key(0))
+    raw, h0s = _family_params_state(cfg, batch)
     rcfg = dataclasses.replace(cfg, backend=_SEQ_IMPL_PREF[impl])
     params = runtime.prepare(raw, rcfg, placement)
-    h0s = gru.stack_h0(cfg, batch)
     xs = jnp.ones((batch, seq_len, cfg.input_dim))
     exe = runtime.compile(rcfg, batch=batch, seq=seq_len,
                           placement=placement, mode="prefill")
@@ -203,21 +232,24 @@ def emit_costs(rows, json_path: str = "BENCH_backend_costs.json",
     """Convert measured rows into the CostModel calibration artifact.
 
     Schema (``repro.core.runtime.CostModel.load``): one entry per
-    (backend, op, depth, batch, hidden_dim) with the measured ``p50_us``
-    — ``op`` is ``"decode"`` or ``"sequence"`` (rows without an ``op``
-    field are decode rows from older sweeps). Rows must come from
-    ``--via runtime`` so ``backend`` holds executor backend names (the
-    keys dispatch ranks by)."""
+    (family, backend, op, depth, batch, hidden_dim) with the measured
+    ``p50_us`` — ``op`` is ``"decode"`` or ``"sequence"`` (rows without an
+    ``op`` field are decode rows from older sweeps; rows without a
+    ``family`` column are GRU rows from pre-registry sweeps). Rows must
+    come from ``--via runtime`` so ``backend`` holds executor backend
+    names (the keys dispatch ranks by)."""
     seen, entries = set(), []
     for r in rows:
         if r.get("via") != "runtime":
             continue
         op = r.get("op", "decode")
-        key = (r["backend"], op, r["depth"], r["batch"], r["hidden_dim"])
+        fam = r.get("family", "gru")
+        key = (fam, r["backend"], op, r["depth"], r["batch"],
+               r["hidden_dim"])
         if key in seen:
             continue
         seen.add(key)
-        entries.append({"backend": r["backend"], "op": op,
+        entries.append({"family": fam, "backend": r["backend"], "op": op,
                         "depth": r["depth"], "batch": r["batch"],
                         "hidden_dim": r["hidden_dim"],
                         "p50_us": r["p50_us"]})
@@ -235,14 +267,23 @@ def run(depths=(1, 2, 3), batches=(1, 8, 32), H=32, X: int = 5,
         iters: int = 300, json_path: str = "BENCH_gru_decode.json",
         csv: bool = True, via: str = "direct",
         impls=("xla", "fused"), mesh_axis: int = 0,
-        costs_path: str = None, seq_len: int = 0, seq_iters: int = None):
+        costs_path: str = None, seq_len: int = 0, seq_iters: int = None,
+        family: str = "gru"):
     """Depth x batch x hidden x impl sweep; emits the BENCH_gru_decode.json
     artifact (and, with ``costs_path``, the CostModel calibration).
     ``seq_len`` > 0 additionally measures whole-sequence prefill latency
     per impl at that T (``op="sequence"`` rows — the prefill half of the
     calibration). ``H`` may be one hidden size or a tuple — the q8 rows
     only become interesting at serving widths (the int8 working-set win is
-    a bandwidth effect: B=1, H >= 256)."""
+    a bandwidth effect: B=1, H >= 256). ``family`` selects the cell family
+    (``repro.core.cells``) every row measures and is recorded as a column
+    in both artifacts; impls the family has no backend for are dropped."""
+    allowed = _FAMILY_IMPLS[family]
+    dropped = tuple(i for i in impls if i not in allowed)
+    impls = tuple(i for i in impls if i in allowed)
+    if dropped and csv:
+        print(f"decode_family_drop,0.00,family={family};"
+              f"no_backend_for={'/'.join(dropped)}")
     placement = None
     if mesh_axis:
         assert len(jax.devices()) >= mesh_axis, (
@@ -258,9 +299,9 @@ def run(depths=(1, 2, 3), batches=(1, 8, 32), H=32, X: int = 5,
         for L in depths:
             for B in batches:
                 _sweep_one(rows, L, B, H, X, iters, via, impls, placement,
-                           seq_len, seq_iters, csv)
+                           seq_len, seq_iters, csv, family)
     summary = _summarize(rows, depths, batches, hiddens)
-    out = {"bench": "gru_decode_step_latency",
+    out = {"bench": "gru_decode_step_latency", "family": family,
            "backend": jax.default_backend(), "via": via,
            "rows": rows, "summary": summary}
     with open(json_path, "w") as f:
@@ -275,12 +316,13 @@ def run(depths=(1, 2, 3), batches=(1, 8, 32), H=32, X: int = 5,
 
 
 def _sweep_one(rows, L, B, H, X, iters, via, impls, placement, seq_len,
-               seq_iters, csv):
-    cfg = GRUConfig(input_dim=X, hidden_dim=H, num_layers=L)
+               seq_iters, csv, family: str = "gru"):
+    cfg = GRUConfig(input_dim=X, hidden_dim=H, num_layers=L, family=family)
     series, backends, sources = _per_step_times(
         cfg, B, iters, via, impls=impls, placement=placement)
     for impl, ts in series.items():
-        row = {"op": "decode", "depth": L, "batch": B, "impl": impl,
+        row = {"op": "decode", "family": family,
+               "depth": L, "batch": B, "impl": impl,
                "hidden_dim": H,
                "input_dim": X, "steps": len(ts),
                "via": via, "backend": backends[impl],
@@ -291,8 +333,9 @@ def _sweep_one(rows, L, B, H, X, iters, via, impls, placement, seq_len,
                "p99_us": round(float(np.percentile(ts, 99)) * 1e6, 2),
                "mean_us": round(float(ts.mean()) * 1e6, 2)}
         rows.append(row)
+        tag = "" if family == "gru" else f"{family}_"
         if csv:
-            print(f"decode_L{L}_B{B}_H{H}_{impl},{row['p50_us']:.2f},"
+            print(f"decode_{tag}L{L}_B{B}_H{H}_{impl},{row['p50_us']:.2f},"
                   f"p99={row['p99_us']:.2f}us;backend={row['backend']}")
     if seq_len:
         seq_impls = tuple(i for i in impls if i in _SEQ_IMPL_PREF)
@@ -300,7 +343,8 @@ def _sweep_one(rows, L, B, H, X, iters, via, impls, placement, seq_len,
             cfg, B, seq_len, seq_iters or max(iters // 4, 20),
             impls=seq_impls, placement=placement)
         for impl, ts in series.items():
-            row = {"op": "sequence", "depth": L, "batch": B,
+            row = {"op": "sequence", "family": family,
+                   "depth": L, "batch": B,
                    "impl": impl, "hidden_dim": H, "input_dim": X,
                    "seq_len": seq_len, "steps": len(ts),
                    "via": "runtime", "backend": backends[impl],
@@ -310,8 +354,9 @@ def _sweep_one(rows, L, B, H, X, iters, via, impls, placement, seq_len,
                    "p99_us": round(float(np.percentile(ts, 99)) * 1e6, 2),
                    "mean_us": round(float(ts.mean()) * 1e6, 2)}
             rows.append(row)
+            tag = "" if family == "gru" else f"{family}_"
             if csv:
-                print(f"seq_L{L}_B{B}_H{H}_T{seq_len}_{impl},"
+                print(f"seq_{tag}L{L}_B{B}_H{H}_T{seq_len}_{impl},"
                       f"{row['p50_us']:.2f},"
                       f"p99={row['p99_us']:.2f}us;"
                       f"backend={row['backend']}")
@@ -379,11 +424,19 @@ if __name__ == "__main__":
                          "artifact needed to MEASURE them); --emit-costs "
                          "implies it so the calibration carries their "
                          "CostModel rows")
+    ap.add_argument("--family", choices=sorted(_FAMILY_IMPLS),
+                    default="gru",
+                    help="cell family to measure (repro.core.cells "
+                         "registry); slstm serves xla + fused only and "
+                         "forces --via runtime; rows carry a family "
+                         "column in both artifacts")
     ap.add_argument("--iters", type=int, default=None)
     ap.add_argument("--json", default="BENCH_gru_decode.json")
     args = ap.parse_args()
     via = args.via
     impls = ("xla", "fused")
+    if args.family != "gru":
+        via = "runtime"                 # legacy direct path is GRU-only
     seq_len = args.seq_len
     if args.emit_costs:
         via = "runtime"                 # cost entries need backend names
@@ -400,11 +453,11 @@ if __name__ == "__main__":
             H=tuple(args.hidden or (32,)),
             iters=args.iters or 120, json_path=args.json, via=via,
             impls=impls, mesh_axis=args.mesh, costs_path=args.emit_costs,
-            seq_len=seq_len)
+            seq_len=seq_len, family=args.family)
     else:
         run(depths=tuple(args.depths or (1, 2, 3)),
             batches=tuple(args.batches or (1, 8, 32)),
             H=tuple(args.hidden or (32,)),
             iters=args.iters or 300, json_path=args.json, via=via,
             impls=impls, mesh_axis=args.mesh, costs_path=args.emit_costs,
-            seq_len=seq_len)
+            seq_len=seq_len, family=args.family)

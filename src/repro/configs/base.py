@@ -67,6 +67,13 @@ class GRUConfig:
     overrides ``matvec_mode`` per layer (the paper's hybrid AIE-PL split,
     generalized: row-wise and cascade layers can be mixed in one stack).
     All depth-1 defaults reproduce the original single-cell behavior.
+
+    ``family`` names the cell recurrence this stack runs
+    (``repro.core.cells`` registry): ``"gru"`` (default, the paper's
+    cell) or ``"slstm"`` (exponential-gated xLSTM cell, 4 gate columns
+    per hidden unit). The shape fields describe the stack identically for
+    every family; the executor keys its backend registry, cost rows and
+    prepare()-time weight views by ``(family, backend)``.
     """
     input_dim: int = 5
     hidden_dim: int = 20
@@ -96,6 +103,8 @@ class GRUConfig:
     num_layers: int = 1              # stack depth (ignored if layer_dims set)
     layer_dims: Tuple[int, ...] = ()     # per-layer hidden sizes; () -> uniform
     layer_matvec_modes: Tuple[str, ...] = ()  # per-layer matvec_mode overrides
+    # --- cell family (last field: keeps positional construction stable) ---
+    family: str = "gru"              # cell recurrence: "gru" | "slstm"
 
     @property
     def resolved_num_layers(self) -> int:
@@ -124,7 +133,7 @@ class GRUConfig:
 @dataclass(frozen=True)
 class ModelConfig:
     name: str
-    family: str                      # dense|moe|ssm|hybrid|audio|vlm|gru
+    family: str                      # dense|moe|ssm|hybrid|audio|vlm|gru|slstm
     num_layers: int
     d_model: int
     num_heads: int
@@ -170,12 +179,12 @@ class ModelConfig:
 
     @property
     def is_recurrent(self) -> bool:
-        return self.family in ("ssm", "hybrid", "gru")
+        return self.family in ("ssm", "hybrid", "gru", "slstm")
 
     @property
     def supports_long_context(self) -> bool:
         """Sub-quadratic decode: recurrent/hybrid archs only."""
-        return self.family in ("ssm", "hybrid", "gru")
+        return self.family in ("ssm", "hybrid", "gru", "slstm")
 
     def replace(self, **kw) -> "ModelConfig":
         return dataclasses.replace(self, **kw)
@@ -244,6 +253,7 @@ class TrainConfig:
 _REGISTRY = {
     "gru-jet": "gru_jet",
     "gru-jet-deep": "gru_jet_deep",
+    "slstm-jet": "slstm_jet",
     "xlstm-125m": "xlstm_125m",
     "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
     "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
@@ -256,7 +266,8 @@ _REGISTRY = {
     "llava-next-mistral-7b": "llava_next_mistral_7b",
 }
 
-ASSIGNED_ARCHS = [a for a in _REGISTRY if not a.startswith("gru-jet")]
+ASSIGNED_ARCHS = [a for a in _REGISTRY
+                  if not a.startswith(("gru-jet", "slstm-jet"))]
 ALL_ARCHS = list(_REGISTRY)
 
 

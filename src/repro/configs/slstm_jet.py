@@ -1,0 +1,37 @@
+"""sLSTM twin of the paper's jet-tagging model (H=20, X=5, 5 classes, T=20).
+
+Same shapes and serving regime as ``gru_jet``, with the cell family
+switched to the exponential-gated sLSTM (``repro.core.slstm``): the
+second registered recurrence, serving through the identical
+compile/prepare/ServeEngine path. The per-layer weights are ``(X, 4H)`` /
+``(H, 4H)`` instead of the GRU's ``3H`` gate columns.
+"""
+from repro.configs.base import GRUConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="slstm-jet",
+    family="slstm",
+    num_layers=1,
+    d_model=20,
+    num_heads=1,
+    num_kv_heads=1,
+    d_ff=0,
+    vocab_size=5,
+    gru=GRUConfig(family="slstm", input_dim=5, hidden_dim=20, num_classes=5,
+                  seq_len=20, matvec_mode="rowwise", fused_gates=True,
+                  decoupled_wx=True),
+    dtype="float32",          # fp32 end-to-end, like the paper's GRU
+    param_dtype="float32",
+    scan_layers=False,
+    remat=False,
+)
+
+
+# scaled-up variant used by the latency sweeps
+def scaled(hidden: int = 32, input_dim: int = 32, **kw) -> ModelConfig:
+    return CONFIG.replace(gru=GRUConfig(
+        family="slstm", input_dim=input_dim, hidden_dim=hidden,
+        num_classes=5, seq_len=20, **kw))
+
+
+SMOKE = CONFIG  # already CPU-sized

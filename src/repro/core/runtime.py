@@ -1,5 +1,5 @@
-"""One GRU executor: a two-stage compile/execute API over capability-
-dispatched backends.
+"""One recurrent-stack executor: a two-stage compile/execute API over
+capability-dispatched backends, keyed by ``(cell family, backend)``.
 
 The paper's core idea is a single workload-distribution framework that maps
 GRU matvecs onto whichever compute fabric is available (AIE rows vs. the PL
@@ -22,10 +22,26 @@ framework's TPU translation, split the same way the hardware flow is:
 * ``executable.sequence/prefill/decode(...)`` — the execute stage: pure
   compute against placement-resident params.
 
-Capability table (see ``BackendSpec``; ``cost`` is the STATIC dispatch
-fallback, lower = faster; a loaded :class:`CostModel` replaces these
-numbers with measured per-(depth, batch, H) latency whenever every legal
-candidate is covered):
+CELL FAMILIES: the executor is not GRU-specific. ``cfg.family`` names a
+registered :class:`repro.core.cells.CellFamily` (default ``"gru"``), and
+every lookup here — the backend registry, ``compile()``'s selection,
+``prepare()``'s weight views, the CostModel's measured rows — is keyed by
+``(family, backend)``. Backends register under their family
+(``BackendSpec.family``, default ``"gru"`` so the original registrations
+are unchanged); an unknown ``cfg.family`` raises the typed
+:class:`repro.core.cells.UnknownCellFamily` from ``compile()``. The
+second in-tree family is sLSTM (``repro.core.slstm`` +
+``repro.kernels.slstm_cell``): ``(slstm, xla)`` scan fallback at static
+cost 30 and the fused ``(slstm, pallas_fused)`` kernels at cost 10, both
+mask-exact, no mesh backends (a provided mesh falls through to the
+replicated backends). A family's runtime state is a FLAT tuple of
+per-layer leaves (GRU: one ``h`` per layer; sLSTM: ``c, n, m, h`` per
+layer) — the ``h0s``/``hs`` arguments below are that tuple.
+
+Capability table for ``family="gru"`` (see ``BackendSpec``; ``cost`` is
+the STATIC dispatch fallback, lower = faster; a loaded :class:`CostModel`
+replaces these numbers with measured per-(depth, batch, H) latency
+whenever every legal candidate is covered):
 
 ===============  ====  ======  ====  ==========  ======  ========  ========
 backend          mask  hetero  mesh  return_all  decode  sequence  cost
@@ -107,7 +123,9 @@ from typing import Callable, Dict, List, Optional, Tuple
 import jax
 
 from repro.configs.base import GRUConfig
+from repro.core import cells as cell_families
 from repro.core import gru as gru_core
+from repro.core.cells import UnknownCellFamily  # noqa: F401 (re-export)
 from repro.core.params import QuantStackParams, quantize_gru_cells
 
 
@@ -167,13 +185,17 @@ class BackendSpec:
     """One registered execution strategy.
 
     ``sequence_fn(sp, h0s, xs, *, cfg, return_all, mask, placement)``
-    returns ``(per-layer finals tuple, last-layer states | None)``;
-    ``decode_fn(sp, hs, x, *, cfg, placement)`` returns the per-layer new
-    states. ``cost`` is the STATIC relative dispatch hint (lower =
-    preferred), used whenever no measured cost covers the call;
-    ``decode_cost`` optionally overrides it for decode selection (a
-    backend may be the cheapest way to run a sequence yet the wrong
-    default for a single latency-bound step — ``pallas_sharded``).
+    returns ``(flat per-layer finals tuple, last-layer states | None)``;
+    ``decode_fn(sp, hs, x, *, cfg, placement)`` returns the flat new
+    state tuple (see the family's state layout in ``repro.core.cells``).
+    ``family`` names the :class:`repro.core.cells.CellFamily` this backend
+    serves — the registry key is ``(family, name)``, so each family owns
+    its own ``xla``/``pallas_fused``/... namespace. ``cost`` is the STATIC
+    relative dispatch hint (lower = preferred), used whenever no measured
+    cost covers the call; ``decode_cost`` optionally overrides it for
+    decode selection (a backend may be the cheapest way to run a sequence
+    yet the wrong default for a single latency-bound step —
+    ``pallas_sharded``).
     """
     name: str
     caps: Capabilities
@@ -181,6 +203,7 @@ class BackendSpec:
     sequence_fn: Optional[Callable] = None
     decode_fn: Optional[Callable] = None
     decode_cost: Optional[int] = None
+    family: str = "gru"
 
     def static_cost(self, op: str) -> int:
         if op == "decode" and self.decode_cost is not None:
@@ -188,26 +211,35 @@ class BackendSpec:
         return self.cost
 
 
-_REGISTRY: Dict[str, BackendSpec] = {}
+_REGISTRY: Dict[Tuple[str, str], BackendSpec] = {}
 
 
 def register_backend(spec: BackendSpec) -> None:
-    _REGISTRY[spec.name] = spec
+    _REGISTRY[(spec.family, spec.name)] = spec
 
 
-def backends() -> Dict[str, BackendSpec]:
-    """Snapshot of the registry (name -> spec), for introspection/tests."""
+def backends(family: str = "gru") -> Dict[str, BackendSpec]:
+    """Snapshot of one family's registry (name -> spec), for
+    introspection/tests. Defaults to the GRU family (the pre-registry
+    call sites all meant that)."""
     _ensure_backends()
-    return dict(_REGISTRY)
+    return {name: spec for (fam, name), spec in _REGISTRY.items()
+            if fam == family}
 
 
 def _ensure_backends() -> None:
-    """Make sure the kernels package had a chance to register its backends
-    (it does so on import; compile() imports it on first use otherwise, so
-    dispatch never depends on import order)."""
-    if "pallas_fused" not in _REGISTRY:
+    """Make sure every family's kernels package had a chance to register
+    its backends (they do so on import; compile() imports them on first
+    use otherwise, so dispatch never depends on import order)."""
+    if ("gru", "pallas_fused") not in _REGISTRY:
         from repro.kernels.gru_sequence import ops as seq_ops
         seq_ops.register_runtime_backends()
+    if ("slstm", "xla") not in _REGISTRY:
+        from repro.core import slstm as slstm_core
+        slstm_core.register_runtime_backends()
+    if ("slstm", "pallas_fused") not in _REGISTRY:
+        from repro.kernels.slstm_cell import ops as slstm_ops
+        slstm_ops.register_runtime_backends()
 
 
 # ---------------------------------------------------------------------------
@@ -217,7 +249,9 @@ def _ensure_backends() -> None:
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class StackParams:
-    """Canonical GRU stack parameters: the ONE layout every backend takes.
+    """Canonical recurrent-stack parameters: the ONE layout every backend
+    takes (any cell family — the gate width of ``w``/``u``/``b`` is the
+    family's business).
 
     ``cells``: per-layer ``{"w","u","b"}`` dicts, layer 0 first.
     ``stacked``: the fused kernels' precomputed device-side weight stacks
@@ -285,10 +319,21 @@ def prepare(params, cfg: GRUConfig, placement=None, *,
     backends' int8 weight views — scale computation, rounding, and int8
     casting are placement-stage costs exactly like the reshapes, so a
     traced execute call contains no quantize ops either (jaxpr-asserted).
+
+    Family-aware: ``cfg.family`` picks the :class:`~repro.core.cells.
+    CellFamily` whose ``normalize``/``stacked_views`` hooks build the
+    views, and the quant/sharded views are built only for families that
+    support them (``supports_quant`` / ``supports_placement`` — GRU
+    today). For ``family="gru"`` every view is built by exactly the same
+    code as before the registry, so prepared params are bitwise-equal.
     """
     pl_ = _as_placement(placement)
+    family = cell_families.get_family(cell_families.cfg_family(cfg))
+    if not family.supports_placement:
+        pl_ = HOST                       # no sharded views for this family
     if want_quant is None:
         want_quant = _cfg_wants_quant(cfg)
+    want_quant = want_quant and family.supports_quant
     if isinstance(params, StackParams):
         quant = params.quant
         if want_quant and quant is None:
@@ -305,12 +350,11 @@ def prepare(params, cfg: GRUConfig, placement=None, *,
     stacked = params.get("stacked_cells") if isinstance(params, dict) else None
     placed = params.get("placed_cells") if isinstance(params, dict) else None
     quant = params.get("quant_cells") if isinstance(params, dict) else None
-    cells = gru_core.stack_cell_params(params, cfg)
+    cells = family.normalize(params, cfg)
     dims = tuple(c["u"].shape[0] for c in cells)
-    if (want_stacked and stacked is None
+    if (want_stacked and stacked is None and family.stacked_views is not None
             and all(d == dims[0] for d in dims)):
-        from repro.kernels.gru_sequence import ops as seq_ops
-        stacked = seq_ops.prepare_stacked_cells(cells)
+        stacked = family.stacked_views(cells)
     if want_quant and quant is None:
         quant = quantize_gru_cells(cells)
     if pl_.is_host:
@@ -355,22 +399,27 @@ def _placed_on(placed, pl_: Placement) -> bool:
 # ---------------------------------------------------------------------------
 
 class CostModel:
-    """Measured per-backend latency, keyed (backend, op, depth, hidden)
-    with linear interpolation over batch.
+    """Measured per-backend latency, keyed (family, backend, op, depth,
+    hidden) with linear interpolation over batch.
 
     Loaded from the ``BENCH_backend_costs.json`` artifact that
-    ``benchmarks/decode_latency.py --emit-costs`` writes. Lookups outside
-    the measured batch range clamp to the nearest measured batch (the
-    relative backend order at the edge is the best available signal).
-    ``lookup`` returns None for any (backend, op, depth, hidden) bucket
-    with no measurements; selection only trusts the model when EVERY
-    legal candidate is covered (µs and static preference ints are not
-    comparable units).
+    ``benchmarks/decode_latency.py --emit-costs`` writes. Entries without
+    a ``"family"`` column default to ``"gru"``, so pre-registry
+    calibration artifacts keep loading and pricing exactly the same rows.
+    Lookups outside the measured batch range clamp to the nearest measured
+    batch (the relative backend order at the edge is the best available
+    signal). ``lookup`` returns None for any bucket with no measurements;
+    selection only trusts the model when EVERY legal candidate is covered
+    (µs and static preference ints are not comparable units).
     """
 
     def __init__(self, table: Dict[tuple, List[tuple]], source: str = "",
                  error: Optional[str] = None):
-        self._table = table
+        # accept legacy 4-tuple keys (backend, op, depth, hidden) — they
+        # belong to the GRU family, same as artifact rows without a
+        # "family" column
+        self._table = {(k if len(k) == 5 else ("gru", *k)): v
+                       for k, v in table.items()}
         self.source = source
         self.error = error
 
@@ -381,7 +430,8 @@ class CostModel:
     def from_entries(cls, entries, source: str = "") -> "CostModel":
         table: Dict[tuple, List[tuple]] = {}
         for e in entries:
-            key = (str(e["backend"]), str(e.get("op", "decode")),
+            key = (str(e.get("family", "gru")), str(e["backend"]),
+                   str(e.get("op", "decode")),
                    int(e["depth"]), int(e["hidden_dim"]))
             table.setdefault(key, []).append(
                 (int(e["batch"]), float(e["p50_us"])))
@@ -404,8 +454,9 @@ class CostModel:
                        error=f"{type(e).__name__}: {e}")
 
     def lookup(self, backend: str, op: str, *, depth: int, batch: int,
-               hidden: int) -> Optional[float]:
-        pts = self._table.get((backend, op, int(depth), int(hidden)))
+               hidden: int, family: str = "gru") -> Optional[float]:
+        pts = self._table.get((str(family), backend, op, int(depth),
+                               int(hidden)))
         if not pts:
             return None
         if batch <= pts[0][0]:
@@ -672,9 +723,11 @@ class GRUExecutable:
     def prepare(self, params) -> StackParams:
         """Placement-resident params for THIS executable: device placement
         and weight stacking happen now, never inside the traced calls."""
+        fam = cell_families.cfg_family(self.cfg)
         names = {self.sequence_backend, self.decode_backend}
         needs_mesh = any(s is not None and s.caps.supports_mesh
-                         for s in (_REGISTRY.get(n) for n in names if n))
+                         for s in (_REGISTRY.get((fam, n))
+                                   for n in names if n))
         return prepare(params, self.cfg,
                        self.placement if needs_mesh else None,
                        want_stacked="pallas_fused" in names,
@@ -747,11 +800,12 @@ def _measured_costs(legal, cfg: GRUConfig, *, op: str,
     if not len(model):
         return None
     dims = cfg.resolved_layer_dims
+    fam = cell_families.cfg_family(cfg)
     out = {}
     covered = 0
     for s in legal:
         us = model.lookup(s.name, op, depth=len(dims), batch=batch,
-                          hidden=dims[0])
+                          hidden=dims[0], family=fam)
         if us is None:
             if s.static_cost(op) >= UNCALIBRATED_GATE_COST:
                 out[s.name] = float("inf")   # measured-only, unmeasured here
@@ -795,12 +849,15 @@ def _rank(spec: BackendSpec, cfg: GRUConfig, *, op: str, mesh,
 def _select(op: str, cfg: GRUConfig, *, masked: bool, placement: Placement,
             batch: Optional[int] = None,
             need_return_all: bool = False):
-    """-> (winning spec | None, "measured" | "static")."""
+    """-> (winning spec | None, "measured" | "static"). Candidates are
+    the requested family's backends only — families never cross."""
     hetero = _hetero(cfg)
     mesh = placement.mesh
+    fam = cell_families.cfg_family(cfg)
     legal = [s for s in _REGISTRY.values()
-             if _legal(s, op=op, masked=masked, hetero=hetero, mesh=mesh,
-                       need_return_all=need_return_all, cfg=cfg)]
+             if s.family == fam
+             and _legal(s, op=op, masked=masked, hetero=hetero, mesh=mesh,
+                        need_return_all=need_return_all, cfg=cfg)]
     if not legal:
         return None, "static"
     measured = _measured_costs(legal, cfg, op=op, batch=batch)
@@ -828,8 +885,14 @@ def compile(cfg: GRUConfig, *, batch: Optional[int] = None,
     the SAME object, so its callables are stable across calls and jit
     caches keyed on them never retrace; distinct placements (e.g. two
     different meshes) compile distinct executables.
+
+    ``cfg.family`` selects the cell family's backend namespace; an
+    unregistered family raises the typed
+    :class:`~repro.core.cells.UnknownCellFamily` (never a silent
+    degrade to another family's backends).
     """
     _ensure_backends()
+    cell_families.get_family(cell_families.cfg_family(cfg))  # typed check
     pl_ = _as_placement(placement)
     masked = bool(mask)
     key = (cfg, batch, seq, pl_, masked, mode, _COST_EPOCH)
@@ -854,11 +917,13 @@ def compile(cfg: GRUConfig, *, batch: Optional[int] = None,
                                 batch=batch)
     if mode in ("prefill", "sequence", "serve") and seq_spec is None:
         raise NoCapableBackend(
-            f"no sequence backend for cfg.backend={cfg.backend!r} "
+            f"no sequence backend for family="
+            f"{cell_families.cfg_family(cfg)!r} cfg.backend={cfg.backend!r} "
             f"mask={mask} dims={cfg.resolved_layer_dims} mesh={pl_.mesh}")
     if mode in ("decode", "serve") and dec_spec is None:
         raise NoCapableBackend(
-            f"no decode backend for cfg.backend={cfg.backend!r} "
+            f"no decode backend for family="
+            f"{cell_families.cfg_family(cfg)!r} cfg.backend={cfg.backend!r} "
             f"dims={cfg.resolved_layer_dims}")
 
     def run_sequence(params, h0s, xs, *, return_all=False, mask=None):

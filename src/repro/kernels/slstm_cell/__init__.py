@@ -1,0 +1,11 @@
+from repro.kernels.slstm_cell import ops, ref
+from repro.kernels.slstm_cell.kernel import (slstm_stack_decode_kernel,
+                                             slstm_stack_sequence_kernel)
+
+# Plug the fused sLSTM backend into the executor's (family, backend)
+# capability registry (repro.core.runtime); runtime.compile() also
+# triggers this lazily.
+ops.register_runtime_backends()
+
+__all__ = ["ops", "ref", "slstm_stack_sequence_kernel",
+           "slstm_stack_decode_kernel"]

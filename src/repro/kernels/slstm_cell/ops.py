@@ -1,0 +1,149 @@
+"""Pallas sLSTM executor backend: the fused whole-stack kernels.
+
+These wrappers implement the ``(slstm, pallas_fused)`` backend of
+:mod:`repro.core.runtime` — registered via
+:func:`register_runtime_backends` (called on package import and by
+``runtime.compile()`` on first use). Nothing outside ``repro.core`` /
+``repro.kernels`` should import them directly (CI enforces the boundary);
+go through ``runtime.compile()`` with ``cfg.family="slstm"``.
+
+Same split as the GRU backends: the layer-0 input projection (decoupled
+``W.x``) is one MXU GEMM outside the kernel; the kernel owns the recurrent
+path — all layers, all four state leaves (c, n, stabilizer m, h) in VMEM
+scratch — in one ``pallas_call``. A (B, T) length mask, when
+given, streams through the kernel per step. The XLA-scan fallback
+(``(slstm, xla)``) registers from :mod:`repro.core.slstm`.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.slstm import STATE_LEAVES, flatten_states, group_states
+from repro.kernels import on_cpu
+from repro.kernels.slstm_cell.kernel import (slstm_stack_decode_kernel,
+                                             slstm_stack_sequence_kernel)
+
+
+def _time_major_mask(mask: Optional[jax.Array]) -> Optional[jax.Array]:
+    """(B, T) bool/float -> (T, B) float32 for per-step kernel streaming."""
+    if mask is None:
+        return None
+    return jnp.moveaxis(mask, -1, 0).astype(jnp.float32)
+
+
+def _stacked_weights(params: tuple):
+    """(u (L,H,4H), w_deep (max(L-1,1),·,4H), b (L,4H)) device-side stacks."""
+    L = len(params)
+    H = params[0]["u"].shape[0]
+    u = jnp.stack([p["u"] for p in params], 0)
+    if L > 1:
+        w_deep = jnp.stack([p["w"] for p in params[1:]], 0)
+    else:
+        w_deep = jnp.zeros((1, 1, 4 * H), params[0]["w"].dtype)
+    b = jnp.stack([p["b"] for p in params], 0)
+    return u, w_deep, b
+
+
+def prepare_stacked_cells(params: tuple) -> dict:
+    """Precompute the stacked-weight views the fused kernels want
+    ({u (L,H,4H), w_deep, b (L,4H)}). Done ONCE by ``runtime.prepare`` so
+    the decode trace carries no per-token weight restacking."""
+    u, w_deep, b = _stacked_weights(tuple(params))
+    return {"u": u, "w_deep": w_deep, "b": b}
+
+
+def _leaf_stacks(state: tuple, L: int):
+    """Flat (4L,) state tuple -> four (L,B,H) leaf stacks (c, n, m, h)."""
+    groups = group_states(state, L)
+    return tuple(jnp.stack([g[k] for g in groups], 0)
+                 for k in range(STATE_LEAVES))
+
+
+def _unstack_leaves(leaves, L: int) -> tuple:
+    """Four (L,B,H) leaf stacks -> flat (4L,) state tuple, layer-major."""
+    return flatten_states(tuple(tuple(leaf[l] for leaf in leaves)
+                                for l in range(L)))
+
+
+def slstm_stack_sequence_pallas(params: tuple, state0: tuple, xs: jax.Array,
+                                *, cfg, return_all: bool = False, mask=None,
+                                stacked: Optional[dict] = None):
+    """Fused depth-L sLSTM stack (uniform hidden sizes): ONE pallas_call.
+
+    params: per-layer ({w,u,b}, ...), layer 0 first; state0: flat (4L,)
+    tuple of (B,H) leaves. Returns (flat finals, optionally last layer's
+    (B,T,H) h sequence). ``mask`` (B,T) streams through the kernel (False
+    steps freeze every layer's four leaves); ``stacked`` is an optional
+    precomputed ``prepare_stacked_cells`` output.
+    """
+    L = len(params)
+    xp = xs @ params[0]["w"]                       # layer-0 decoupled GEMM
+    xp_t = jnp.moveaxis(xp, -2, 0)                 # (T,B,4H)
+    c0, n0, m0, h0 = _leaf_stacks(tuple(state0), L)
+    if stacked is None:
+        u, w_deep, b = _stacked_weights(params)
+    else:
+        u, w_deep, b = stacked["u"], stacked["w_deep"], stacked["b"]
+    hs, cT, nT, mT, hT = slstm_stack_sequence_kernel(
+        c0, n0, m0, h0, xp_t, u, w_deep, b, _time_major_mask(mask),
+        interpret=on_cpu())
+    finals = _unstack_leaves((cT, nT, mT, hT), L)
+    if return_all:
+        return finals, jnp.moveaxis(hs, 0, -2)
+    return finals, None
+
+
+def slstm_stack_decode_pallas(params: tuple, state: tuple, x: jax.Array, *,
+                              cfg, stacked: Optional[dict] = None) -> tuple:
+    """Fused decode step: ONE pallas_call advances the whole batch through
+    all L layers for one token (uniform hidden sizes required). state:
+    flat (4L,) tuple; returns the flat new state."""
+    L = len(params)
+    xp = x @ params[0]["w"]                        # (B,4H)
+    c, n, m, h = _leaf_stacks(tuple(state), L)
+    if stacked is None:
+        stacked = prepare_stacked_cells(params)
+    new = slstm_stack_decode_kernel(c, n, m, h, xp, stacked["u"],
+                                    stacked["w_deep"], stacked["b"],
+                                    interpret=on_cpu())
+    return _unstack_leaves(new, L)
+
+
+# ---------------------------------------------------------------------------
+# runtime registration
+# ---------------------------------------------------------------------------
+
+_REGISTERED = False
+
+
+def register_runtime_backends() -> None:
+    """Idempotently register ``(slstm, pallas_fused)`` with the executor.
+    Called on ``repro.kernels.slstm_cell`` import and by
+    ``runtime.compile()`` on first use (whichever happens first)."""
+    global _REGISTERED
+    if _REGISTERED:
+        return
+    from repro.core import runtime
+
+    def fused_seq(sp, state0, xs, *, cfg, return_all, mask, placement):
+        return slstm_stack_sequence_pallas(sp.cells, tuple(state0), xs,
+                                           cfg=cfg, return_all=return_all,
+                                           mask=mask, stacked=sp.stacked)
+
+    def fused_dec(sp, state, x, *, cfg, placement):
+        return slstm_stack_decode_pallas(sp.cells, tuple(state), x, cfg=cfg,
+                                         stacked=sp.stacked)
+
+    runtime.register_backend(runtime.BackendSpec(
+        family="slstm",
+        name="pallas_fused",
+        caps=runtime.Capabilities(supports_mask=True,
+                                  supports_hetero_dims=False,
+                                  supports_mesh=False, return_all=True,
+                                  decode=True, sequence=True),
+        cost=10,
+        sequence_fn=fused_seq, decode_fn=fused_dec))
+    _REGISTERED = True

@@ -1,0 +1,52 @@
+"""Oracle for the fused sLSTM kernels: step-by-step fp32 recurrence on the
+same raw-array interface (stacked (L,·,·) weights, four (L,B,H) state
+leaves), mirroring :mod:`repro.kernels.gru_sequence.ref`. The model-layout
+oracle lives in :func:`repro.core.slstm.slstm_stack_reference`."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.slstm import slstm_gate_math
+
+
+def _step(state, xp, u, w_deep, b):
+    """Advance all L layers one step. state: list of [c,n,m,h] per layer
+    (mutated); xp: (B,4H) layer-0 Wx. Returns the last layer's new h."""
+    L = len(state)
+    xp = jnp.asarray(xp, jnp.float32)
+    for l in range(L):
+        new = slstm_gate_math(*state[l], xp, jnp.asarray(u[l], jnp.float32),
+                              jnp.asarray(b[l], jnp.float32))
+        state[l] = list(new)
+        if l + 1 < L:
+            xp = new[3] @ jnp.asarray(w_deep[l], jnp.float32)
+    return state[-1][3]
+
+
+def _init(c0, n0, m0, h0):
+    L = c0.shape[0]
+    return [[jnp.asarray(leaf[l], jnp.float32) for leaf in (c0, n0, m0, h0)]
+            for l in range(L)]
+
+
+def slstm_stack_sequence_ref(c0, n0, m0, h0, x_proj, u, w_deep, b):
+    """Oracle for the fused stack kernel, same raw-array interface.
+
+    c0/n0/m0/h0: (L,B,H), x_proj: (T,B,4H) layer-0 Wx, u: (L,H,4H),
+    w_deep: (L-1,H,4H), b: (L,4H) -> ((T,B,H) last-layer h states, then
+    the four (L,B,H) per-layer final leaves)."""
+    state = _init(c0, n0, m0, h0)
+    out = [jnp.stack([_step(state, x_proj[t], u, w_deep, b)
+                      for t in range(x_proj.shape[0])], axis=0)]
+    for k in range(4):
+        out.append(jnp.stack([layer[k] for layer in state], axis=0))
+    return tuple(out)
+
+
+def slstm_stack_decode_ref(c, n, m, h, x_proj, u, w_deep, b):
+    """Oracle for the fused decode-step kernel: (L,B,H) leaves, x_proj
+    (B,4H) layer-0 Wx of ONE token -> the four new (L,B,H) leaves."""
+    state = _init(c, n, m, h)
+    _step(state, x_proj, u, w_deep, b)
+    return tuple(jnp.stack([layer[k] for layer in state], axis=0)
+                 for k in range(4))

@@ -1,6 +1,8 @@
 """Serving driver: batched requests through the ServeEngine, or — with
-``--replicas N`` (N > 1, gru only) — through the fault-tolerant
-FleetRouter (``repro.serve.fleet``).
+``--replicas N`` (N > 1, cell families only) — through the fault-tolerant
+FleetRouter (``repro.serve.fleet``). Cell-family archs (gru-jet,
+slstm-jet, ...) serve feature-vector waves; which family a config runs is
+resolved through the ``repro.core.cells`` registry, never hardcoded.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
         --requests 4 --max-new 16
@@ -29,6 +31,7 @@ import jax
 import numpy as np
 
 from repro.configs.base import get_config, get_smoke_config
+from repro.core import cells as cell_families
 from repro.core.params import init_params
 from repro.distributed.sharding import ShardCtx
 from repro.models import api as mapi
@@ -81,15 +84,17 @@ def main(argv=None):
     args = p.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    if args.gru_backend and cfg.family == "gru":
+    is_cell = cell_families.is_cell_family(cfg.family)
+    if args.gru_backend and is_cell:
         cfg = cfg.replace(gru=dataclasses.replace(cfg.gru,
                                                   backend=args.gru_backend))
     A = mapi.get_api(cfg)
     params = init_params(A.specs(cfg), jax.random.key(args.seed),
                          cfg.param_dtype)
     rng = np.random.default_rng(args.seed)
-    if cfg.family == "gru":
-        # feature-vector waves: prompts are (S, X) float windows
+    if is_cell:
+        # cell-family (gru/slstm/...) feature-vector waves: prompts are
+        # (S, X) float windows
         def plen():
             return (int(rng.integers(1, args.prompt_len + 1))
                     if args.vary_prompt else args.prompt_len)
@@ -118,7 +123,7 @@ def main(argv=None):
           f"prefill mean={stats['prefill_mean_s']*1e3:.2f}ms "
           f"({stats['prefills']} prefills, "
           f"{len(engine._prefill_jit)} bucket jits)")
-    if cfg.family == "gru":
+    if is_cell:
         pf = sorted(set(engine.prefill_backends))
         steps = stats.get("decode_backend_steps", {})
         attributed = ",".join(f"{k}:{v}" for k, v in sorted(steps.items()))

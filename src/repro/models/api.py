@@ -16,7 +16,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core.params import Spec
-from repro.models import gru_lm, hymba, llava, transformer, whisper, xlstm
+from repro.core import cells as cell_families
+from repro.models import gru_lm, hymba, llava, slstm_lm, transformer, whisper, xlstm
 
 
 def _transformer_api():
@@ -93,6 +94,20 @@ def _gru_api():
     )
 
 
+def _slstm_api():
+    return SimpleNamespace(
+        specs=slstm_lm.lm_specs,
+        prepare_params=slstm_lm.prepare_params,    # one-time serving prep
+        executable=slstm_lm.serve_executable,      # compiled-plan introspection
+        loss_fn=lambda p, cfg, batch, ctx: slstm_lm.loss_fn(p, cfg, batch, ctx=ctx),
+        forward=lambda p, cfg, batch, ctx: slstm_lm.forward(p, cfg, batch, ctx=ctx),
+        prefill=lambda p, cfg, batch, ctx: slstm_lm.prefill(p, cfg, batch, ctx=ctx),
+        decode_step=lambda p, cfg, cache, x, ctx: slstm_lm.decode_step(p, cfg, cache, x, ctx=ctx),
+        cache_specs=slstm_lm.cache_specs,
+        init_cache=slstm_lm.init_cache,
+    )
+
+
 _FAMS: Dict[str, Callable] = {
     "dense": _transformer_api,
     "moe": _transformer_api,
@@ -101,11 +116,19 @@ _FAMS: Dict[str, Callable] = {
     "ssm": _xlstm_api,
     "hybrid": _hymba_api,
     "gru": _gru_api,
+    "slstm": _slstm_api,
 }
 
 
 def get_api(cfg: ModelConfig) -> SimpleNamespace:
-    return _FAMS[cfg.family]()
+    try:
+        return _FAMS[cfg.family]()
+    except KeyError:
+        # typed (still a KeyError subclass): serving surfaces fail loudly
+        # on an unregistered family instead of silently degrading
+        raise cell_families.UnknownCellFamily(
+            cfg.family,
+            known=set(_FAMS) | set(cell_families.families())) from None
 
 
 # ---------------------------------------------------------------------------
@@ -119,7 +142,9 @@ def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
     token(s) — the cache is built separately from cache_specs."""
     B, S = shape.global_batch, shape.seq_len
     i32 = "int32"
-    if cfg.family == "gru":
+    if cell_families.is_cell_family(cfg.family):
+        # every cell family (gru, slstm, ...) describes its stack shapes
+        # through the same GRUConfig fields
         g = cfg.gru
         if shape.kind == "decode":
             return {"x": Spec((B, g.input_dim), ("batch", None), dtype=cfg.dtype)}
@@ -149,7 +174,9 @@ def concrete_batch(cfg: ModelConfig, shape: ShapeConfig, seed: int = 0) -> dict:
     def make(s: Spec):
         dt = jnp.dtype(s.dtype or "float32")
         if jnp.issubdtype(dt, jnp.integer):
-            hi = cfg.vocab_size if cfg.family != "gru" else (cfg.gru.num_classes)
+            hi = (cfg.gru.num_classes
+                  if cell_families.is_cell_family(cfg.family)
+                  else cfg.vocab_size)
             return jnp.asarray(rng.integers(0, hi, size=s.shape), dt)
         return jnp.asarray(rng.normal(size=s.shape), jnp.float32).astype(dt)
 

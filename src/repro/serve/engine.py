@@ -47,8 +47,17 @@ backend names, the ``pallas_sharded`` family (fused shard kernels inside
 the shard_map, selectable per shape once a calibration measures the
 sharded step faster) included.
 
-The GRU family (the paper's own model) serves FEATURE VECTORS instead of
-tokens: a request's ``prompt`` is a float (S, X) feature window, and each
+Cell families: the wave path is not GRU-specific — ``generate`` routes
+EVERY registered cell family (``repro.core.cells``: gru, slstm, ...)
+through the same bucketed-prefill/fixed-slot machinery; the family's flat
+state tuple flows leaf-by-leaf through the cache scatter, so sLSTM's
+four-leaf (c, n, m, h) state rides the exact slot plumbing GRU's one-leaf
+state does. A ``cfg.family`` that is neither a registered cell family nor
+a known LM family raises the typed ``UnknownCellFamily`` instead of
+silently degrading to the token path.
+
+The cell families (the paper's own models) serve FEATURE VECTORS instead
+of tokens: a request's ``prompt`` is a float (S, X) feature window, and each
 decode step pushes one more feature vector (the request's ``stream`` if
 provided, else free-running on the last observed features) and emits the
 running class prediction. Per step that is exactly one pass through the
@@ -68,6 +77,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core import cells as cell_families
+from repro.core.cells import UnknownCellFamily
 from repro.distributed.fault_tolerance import Clock, SystemClock
 from repro.distributed.sharding import ShardCtx
 from repro.models import api as mapi
@@ -179,15 +190,22 @@ class ServeEngine:
     # -- LM waves -----------------------------------------------------------
 
     def generate(self, requests: Sequence[Request]) -> List[Request]:
-        """Serve a wave of requests. GRU waves run bucketed continuous
-        batching and accept any number of requests; LM waves are a single
-        padded/aligned batch of at most ``max_batch``."""
+        """Serve a wave of requests. Cell-family waves (gru, slstm, any
+        registered recurrence) run bucketed continuous batching and accept
+        any number of requests; LM waves are a single padded/aligned batch
+        of at most ``max_batch``. An unregistered family raises
+        :class:`UnknownCellFamily` — never a silent fall-through to the
+        token path."""
         reqs = list(requests)
-        if self.cfg.family == "gru":
+        if cell_families.is_cell_family(self.cfg.family):
             return self._generate_gru(reqs)
         if self.cfg.family in ("audio", "vlm"):
-            raise NotImplementedError("wave serving is LM/GRU-only; use the "
-                                      "model API directly for other families")
+            raise NotImplementedError("wave serving is LM/cell-family-only; "
+                                      "use the model API directly for other "
+                                      "families")
+        if self.cfg.family not in mapi._FAMS:
+            raise UnknownCellFamily(self.cfg.family,
+                                    known=cell_families.families())
         assert len(reqs) <= self.max_batch
         B = len(reqs)
         now = self.clock.now()
@@ -304,8 +322,10 @@ class ServeEngine:
     # bucketed prefills, the same fixed-slot decode jit.
 
     def gru_wave_begin(self, requests: Sequence[Request] = ()) -> None:
-        """Start a fresh continuous-batching wave (GRU family only)."""
-        assert self.cfg.family == "gru", "stepwise waves are GRU-only"
+        """Start a fresh continuous-batching wave (cell families only)."""
+        if not cell_families.is_cell_family(self.cfg.family):
+            raise UnknownCellFamily(self.cfg.family,
+                                    known=cell_families.families())
         X = self.cfg.gru.input_dim
         Bs = self.max_batch
         self._wave = _GruWave(slots=[None] * Bs,

@@ -60,6 +60,7 @@ from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.core import cells
 from repro.distributed.fault_tolerance import (Clock, HeartbeatMonitor,
                                                ManualClock, StragglerMonitor,
                                                SystemClock)
@@ -240,10 +241,12 @@ class FleetRouter:
                  clock: Optional[Clock] = None,
                  config: FleetConfig = FleetConfig(),
                  injector: Optional[FaultInjector] = None):
-        if cfg.family != "gru":
-            raise NotImplementedError("the fleet serves the GRU family "
-                                      "(stepwise waves); use ServeEngine "
-                                      "directly for LM batches")
+        if not cells.is_cell_family(cfg.family):
+            raise NotImplementedError("the fleet serves registered cell "
+                                      "families (stepwise waves: "
+                                      f"{sorted(cells.families())}); "
+                                      "use ServeEngine directly for LM "
+                                      "batches")
         self.cfg = cfg
         self.config = config
         self.clock = clock or SystemClock()
@@ -565,7 +568,8 @@ class FleetRouter:
                                   placement=rep.engine.ctx.mesh)
             us = runtime.cost_model().lookup(
                 exe.decode_backend, "decode", depth=g.num_layers,
-                batch=self.max_batch, hidden=g.hidden_dim)
+                batch=self.max_batch, hidden=g.hidden_dim,
+                family=cells.cfg_family(g))
             if us is not None:
                 step = us * 1e-6
         except Exception:             # routing must never take a fleet down

@@ -1,6 +1,7 @@
-"""Property-based fuzz of the GRU executor's dispatch matrix.
+"""Property-based fuzz of the recurrent executor's dispatch matrix.
 
-Random draws over the FULL request space — depth 1-4, uniform/hetero
+Random draws over the FULL request space — CELL FAMILY (gru/slstm: the
+``(family, backend)`` registry namespaces), depth 1-4, uniform/hetero
 ``layer_dims``, rowwise/cascade mode mixes, mask on/off, mesh/none,
 backend pin vs auto, prefill vs decode — must always:
 
@@ -9,7 +10,8 @@ backend pin vs auto, prefill vs decode — must always:
 * resolve LEGALLY (the chosen backend's declared ``Capabilities`` cover
   the request — the silent-capability-gap failure mode the executor
   exists to eliminate),
-* run correctly (``allclose`` vs ``gru_stack_reference``), and
+* run correctly (``allclose`` vs the family's registered reference — the
+  oracle is drawn with the family, never hardcoded to GRU), and
 * honor the bitwise mask contract wherever the executable CLAIMS
   ``mask_exact`` (padded+masked == unpadded at identical batch shapes).
 
@@ -28,7 +30,7 @@ import pytest
 from _hyp import given, settings, st
 from _q8 import q8_stack_decode, q8_stack_finals
 from repro.configs.base import GRUConfig
-from repro.core import gru, runtime
+from repro.core import cells, gru, runtime
 from repro.core.params import init_params
 
 TOL = dict(rtol=3e-5, atol=3e-6)
@@ -42,6 +44,15 @@ DIM_POOL = (8, 12, 16)
 BACKENDS = ("auto", "xla", "pallas", "pallas_fused", "pallas_chain",
             "sharded", "pallas_sharded", "sharded_decode",
             "pallas_fused_q8", "pallas_chain_q8")
+# per-family backend pools: the sLSTM namespace registers xla +
+# pallas_fused; pins on GRU-only names still belong in its pool — they
+# must FALL THROUGH to a legal (slstm, ·) backend, never resolve across
+# the family boundary or error
+FAMILY_BACKENDS = {
+    "gru": BACKENDS,
+    "slstm": ("auto", "xla", "pallas", "pallas_fused", "pallas_chain",
+              "pallas_fused_q8"),
+}
 
 
 @functools.lru_cache(maxsize=None)
@@ -55,10 +66,15 @@ def _mesh_placement():
 
 
 @functools.lru_cache(maxsize=None)
-def _case_params(dims: tuple, modes: tuple, backend: str):
+def _case_params(dims: tuple, modes: tuple, backend: str,
+                 family: str = "gru"):
     cfg = GRUConfig(input_dim=X, layer_dims=dims, backend=backend,
-                    layer_matvec_modes=modes)
-    params = init_params(gru.gru_stack_specs(cfg), jax.random.key(0))
+                    layer_matvec_modes=modes, family=family)
+    if family == "gru":
+        specs = gru.gru_stack_specs(cfg)
+    else:
+        specs = {"cells": cells.get_family(family).stack_specs(cfg)}
+    params = init_params(specs, jax.random.key(0))
     return cfg, params
 
 
@@ -72,10 +88,12 @@ def _data():
 
 
 def _assert_capabilities_cover(backend_name: str, *, op: str, masked: bool,
-                               hetero: bool, mesh) -> None:
+                               hetero: bool, mesh,
+                               family: str = "gru") -> None:
     """The dispatch contract: the resolved backend's declared caps cover
-    the request."""
-    spec = runtime.backends()[backend_name]
+    the request — looked up in the FAMILY's registry namespace (a name
+    resolving outside it would be the cross-family dispatch bug)."""
+    spec = runtime.backends(family)[backend_name]
     c = spec.caps
     if op == "decode":
         assert c.decode and spec.decode_fn is not None, backend_name
@@ -88,16 +106,19 @@ def _assert_capabilities_cover(backend_name: str, *, op: str, masked: bool,
 
 
 def check_dispatch_case(depth: int, dims: tuple, modes: tuple, masked: bool,
-                        mesh_on: bool, backend: str, mode: str) -> None:
+                        mesh_on: bool, backend: str, mode: str,
+                        family: str = "gru") -> None:
     """One cell of the dispatch matrix, end to end."""
     assert len(dims) == len(modes) == depth
-    cfg, params = _case_params(dims, modes, backend)
+    fam = cells.get_family(family)
+    cfg, params = _case_params(dims, modes, backend, family)
     xs, xs_pad, mask = _data()
-    h0s = gru.stack_h0(cfg, B)
+    h0s = fam.state0(cfg, B)
+    cell_p = fam.normalize(params, cfg)
     hetero = any(d != dims[0] for d in dims)
     placement = _mesh_placement() if mesh_on else None
     mesh = placement.mesh if mesh_on else None
-    ref, _ = gru.gru_stack_reference(params, h0s, xs)
+    ref, _ = fam.reference(cell_p, h0s, xs)
 
     # 1. always resolves, and resolves legally
     p = runtime.compile(cfg, batch=B, seq=T + PAD if masked else T,
@@ -105,15 +126,15 @@ def check_dispatch_case(depth: int, dims: tuple, modes: tuple, masked: bool,
     if mode == "decode":
         assert p.decode_backend is not None
         _assert_capabilities_cover(p.decode_backend, op="decode",
-                                   masked=False, hetero=hetero, mesh=mesh)
+                                   masked=False, hetero=hetero, mesh=mesh,
+                                   family=family)
         tol = DEC_TOL
         if p.decode_backend.endswith("_q8"):
             # a q8 pin resolved to the int8 datapath: its oracle is the
             # backend's own quantize-dequantize twin, not the f32 stack
-            cells = gru.stack_cell_params(params, cfg)
             ref = h0s
             for t in range(T):
-                ref = q8_stack_decode(p.decode_backend, cells, ref,
+                ref = q8_stack_decode(p.decode_backend, cell_p, ref,
                                       xs[:, t], cfg)
             tol = Q8_TOL
         hs = h0s
@@ -124,11 +145,11 @@ def check_dispatch_case(depth: int, dims: tuple, modes: tuple, masked: bool,
         return
     assert p.sequence_backend is not None
     _assert_capabilities_cover(p.sequence_backend, op="sequence",
-                               masked=masked, hetero=hetero, mesh=mesh)
+                               masked=masked, hetero=hetero, mesh=mesh,
+                               family=family)
     tol = TOL
     if p.sequence_backend.endswith("_q8"):
-        cells = gru.stack_cell_params(params, cfg)
-        ref = q8_stack_finals(p.sequence_backend, cells, h0s, xs, cfg)
+        ref = q8_stack_finals(p.sequence_backend, cell_p, h0s, xs, cfg)
         tol = Q8_TOL
 
     # 2. runs correctly against the dense oracle
@@ -154,10 +175,13 @@ def check_dispatch_case(depth: int, dims: tuple, modes: tuple, masked: bool,
 @settings(max_examples=40, deadline=None, derandomize=True)
 @given(st.data())
 def test_dispatch_matrix_property(data):
-    """Any (depth, dims, modes, mask, mesh, backend, mode) draw resolves
-    legally and matches the oracle (bitwise where mask-exactness is
-    claimed). ``derandomize=True`` pins the example sequence — the CI
-    run is deterministic."""
+    """Any (family, depth, dims, modes, mask, mesh, backend, mode) draw
+    resolves legally (Capabilities coverage inside the family's registry
+    namespace) and matches the family's reference oracle (bitwise where
+    mask-exactness is claimed). ``derandomize=True`` pins the example
+    sequence — the CI run is deterministic."""
+    family = data.draw(st.sampled_from(sorted(FAMILY_BACKENDS)),
+                       label="family")
     depth = data.draw(st.integers(min_value=1, max_value=4), label="depth")
     uniform = data.draw(st.booleans(), label="uniform")
     if uniform:
@@ -172,9 +196,11 @@ def test_dispatch_matrix_property(data):
                  max_size=depth), label="modes"))
     masked = data.draw(st.booleans(), label="masked")
     mesh_on = data.draw(st.booleans(), label="mesh")
-    backend = data.draw(st.sampled_from(BACKENDS), label="backend")
+    backend = data.draw(st.sampled_from(FAMILY_BACKENDS[family]),
+                        label="backend")
     mode = data.draw(st.sampled_from(("prefill", "decode")), label="mode")
-    check_dispatch_case(depth, dims, modes, masked, mesh_on, backend, mode)
+    check_dispatch_case(depth, dims, modes, masked, mesh_on, backend, mode,
+                        family)
 
 
 # ---------------------------------------------------------------------------
@@ -217,3 +243,25 @@ def test_dispatch_matrix_property(data):
 def test_dispatch_case_pinned(depth, dims, modes, masked, mesh_on, backend,
                               mode):
     check_dispatch_case(depth, dims, modes, masked, mesh_on, backend, mode)
+
+
+@pytest.mark.parametrize("depth,dims,modes,masked,mesh_on,backend,mode", [
+    # the second family's fused kernel: plain, masked-bitwise, decode
+    (1, (16,), ("rowwise",), False, False, "pallas_fused", "prefill"),
+    (2, (16, 16), ("rowwise", "rowwise"), True, False, "pallas_fused",
+     "prefill"),
+    (3, (8, 8, 8), ("rowwise",) * 3, False, False, "pallas", "decode"),
+    # hetero dims: fused is illegal in the slstm namespace too -> xla
+    (2, (16, 8), ("rowwise", "rowwise"), True, False, "auto", "prefill"),
+    # GRU-only names pinned under slstm fall through inside the family
+    # namespace (never resolve a (gru, ·) backend, never error)
+    (2, (16, 16), ("rowwise", "rowwise"), False, False, "pallas_chain",
+     "decode"),
+    (1, (16,), ("rowwise",), False, False, "pallas_fused_q8", "prefill"),
+    # a mesh without any (slstm, ·) mesh backend resolves replicated
+    (1, (16,), ("rowwise",), False, True, "auto", "prefill"),
+])
+def test_dispatch_case_pinned_slstm(depth, dims, modes, masked, mesh_on,
+                                    backend, mode):
+    check_dispatch_case(depth, dims, modes, masked, mesh_on, backend, mode,
+                        family="slstm")

@@ -5,6 +5,7 @@ import numpy as np
 import pytest
 
 from repro.configs.base import ALL_ARCHS, ShapeConfig, get_config, get_smoke_config
+from repro.core import cells
 from repro.core.params import init_params
 from repro.distributed.sharding import ShardCtx
 from repro.models import api as mapi
@@ -13,7 +14,7 @@ CTX = ShardCtx()
 
 
 def _batch(cfg, S=16, B=2, kind="train"):
-    if cfg.family == "gru":
+    if cells.is_cell_family(cfg.family):
         S = cfg.gru.seq_len
     shape = ShapeConfig("smoke", seq_len=S, global_batch=B, kind=kind)
     return mapi.concrete_batch(cfg, shape)
@@ -27,7 +28,7 @@ def test_forward_loss_finite(arch):
     loss, metrics = A.loss_fn(params, cfg, _batch(cfg), CTX)
     assert np.isfinite(float(loss)), (arch, float(loss))
     # random-init loss should be near ln(vocab) for LM families
-    if cfg.family != "gru":
+    if not cells.is_cell_family(cfg.family):
         assert abs(float(loss) - np.log(cfg.vocab_size)) < 1.5, float(loss)
 
 
@@ -39,7 +40,8 @@ def test_prefill_decode(arch):
     batch = _batch(cfg, kind="prefill")
     logits, cache = A.prefill(params, cfg, batch, CTX)
     assert np.isfinite(np.asarray(logits)).all(), arch
-    if cfg.family == "gru":
+    if cells.is_cell_family(cfg.family):
+        # every cell family decodes feature vectors, not token ids
         x = jnp.ones((2, cfg.gru.input_dim), jnp.float32)
         logits2, cache2 = A.decode_step(params, cfg, cache, x, CTX)
     else:

@@ -1,0 +1,317 @@
+"""sLSTM cell family, end to end: the second family the ``(family,
+backend)`` registry serves.
+
+Covers the acceptance surface of the cell-family subsystem:
+
+* fused Pallas kernels (sequence + decode) against the raw-array oracle
+  (``kernels/slstm_cell/ref.py``) and the model-layout reference
+  (``repro.core.slstm.slstm_stack_reference``), depths 1-3, masked and
+  unmasked;
+* the XLA-scan fallback's bitwise mask-exactness contract;
+* ``runtime.compile(cfg)`` with ``cfg.family="slstm"`` returning a working
+  executable for both backends, with prepare() doing ALL weight placement
+  (no ``device_put`` in the traced execute jaxpr);
+* typed ``UnknownCellFamily`` from every serving surface;
+* ServeEngine waves serving slstm through ``generate()`` with per-step
+  backend attribution in ``latency_stats()``;
+* the measured ``(family, backend)`` calibration round-trip
+  (CostModel rows -> ``compile`` with ``cost_source == "measured"``);
+* executable-cache keys: stable within a family, distinct across families.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import GRUConfig, get_smoke_config
+from repro.core import cells, runtime, slstm
+from repro.core.params import init_params
+from repro.kernels import on_cpu
+from repro.kernels.slstm_cell import ops as sops
+from repro.kernels.slstm_cell import ref as sref
+from repro.kernels.slstm_cell.kernel import (slstm_stack_decode_kernel,
+                                             slstm_stack_sequence_kernel)
+
+TOL = dict(rtol=3e-5, atol=3e-6)
+B, T, X, PAD = 2, 6, 5, 3
+
+
+def _case(depth=2, H=16, backend="auto"):
+    cfg = GRUConfig(input_dim=X, hidden_dim=H, num_layers=depth,
+                    backend=backend, family="slstm")
+    fam = cells.get_family("slstm")
+    params = init_params({"cells": fam.stack_specs(cfg)}, jax.random.key(0))
+    xs = jax.random.normal(jax.random.key(1), (B, T, X))
+    return cfg, fam, params, xs, fam.state0(cfg, B)
+
+
+def _mask():
+    """Left-pad mask: first PAD steps of a T+PAD window are padding."""
+    return jnp.broadcast_to(jnp.arange(T + PAD)[None, :] >= PAD, (B, T + PAD))
+
+
+def _raw_arrays(params, xs):
+    """Model-layout params -> the kernels' raw stacked-array interface."""
+    stacked = sops.prepare_stacked_cells(params["cells"])
+    xp_t = jnp.moveaxis(xs @ params["cells"][0]["w"], -2, 0)   # (T,B,4H)
+    return stacked, xp_t
+
+
+# ---------------------------------------------------------------------------
+# kernel/ref triplet parity (raw-array interface)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("depth", [1, 3])
+@pytest.mark.parametrize("masked", [False, True])
+def test_sequence_kernel_matches_ref(depth, masked):
+    cfg, fam, params, xs, s0 = _case(depth)
+    L = cfg.resolved_num_layers
+    stacked, xp_t = _raw_arrays(params, xs)
+    c0, n0, m0, h0 = sops._leaf_stacks(tuple(s0), L)
+    mask_t = (jnp.ones((T, B), jnp.float32)
+              .at[:2, 1].set(0.0) if masked else None)
+    got = slstm_stack_sequence_kernel(
+        c0, n0, m0, h0, xp_t, stacked["u"], stacked["w_deep"], stacked["b"],
+        mask_t, interpret=on_cpu())
+    if masked:
+        # oracle with the same freeze: replay only the kept steps per row
+        ref = sref.slstm_stack_sequence_ref(
+            c0, n0, m0, h0, xp_t, stacked["u"], stacked["w_deep"],
+            stacked["b"])
+        # row 1 skipped steps 0-1: recompute its trajectory separately
+        ref1 = sref.slstm_stack_sequence_ref(
+            c0[:, 1:], n0[:, 1:], m0[:, 1:], h0[:, 1:], xp_t[2:, 1:],
+            stacked["u"], stacked["w_deep"], stacked["b"])
+        for g, r, r1 in zip(got[1:], ref[1:], ref1[1:]):
+            np.testing.assert_allclose(np.asarray(g[:, 0]),
+                                       np.asarray(r[:, 0]), **TOL)
+            np.testing.assert_allclose(np.asarray(g[:, 1]),
+                                       np.asarray(r1[:, 0]), **TOL)
+        return
+    ref = sref.slstm_stack_sequence_ref(
+        c0, n0, m0, h0, xp_t, stacked["u"], stacked["w_deep"], stacked["b"])
+    for g, r in zip(got, ref):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(r), **TOL)
+
+
+@pytest.mark.parametrize("depth", [1, 3])
+def test_decode_kernel_matches_ref(depth):
+    cfg, fam, params, xs, s0 = _case(depth)
+    L = cfg.resolved_num_layers
+    stacked, xp_t = _raw_arrays(params, xs)
+    c, n, m, h = sops._leaf_stacks(tuple(s0), L)
+    got = slstm_stack_decode_kernel(c, n, m, h, xp_t[0], stacked["u"],
+                                    stacked["w_deep"], stacked["b"],
+                                    interpret=on_cpu())
+    ref = sref.slstm_stack_decode_ref(c, n, m, h, xp_t[0], stacked["u"],
+                                      stacked["w_deep"], stacked["b"])
+    for g, r in zip(got, ref):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(r), **TOL)
+
+
+# ---------------------------------------------------------------------------
+# compiled executables: both backends vs the family reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["xla", "pallas_fused"])
+@pytest.mark.parametrize("depth", [1, 2])
+def test_compile_matches_family_reference(backend, depth):
+    cfg, fam, params, xs, s0 = _case(depth, backend=backend)
+    cell_p = fam.normalize(params, cfg)
+    ref_f, ref_all = fam.reference(cell_p, s0, xs, return_all=True)
+    p = runtime.compile(cfg, batch=B, seq=T, mode="prefill")
+    assert p.sequence_backend == backend
+    finals, alls = p.sequence(params, s0, xs, return_all=True)
+    assert len(finals) == slstm.STATE_LEAVES * depth
+    for a, b in zip(finals, ref_f):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), **TOL)
+    np.testing.assert_allclose(np.asarray(alls), np.asarray(ref_all), **TOL)
+    # decode: T single steps == the sequence finals
+    pd = runtime.compile(cfg, batch=B, mode="decode")
+    assert pd.decode_backend == backend
+    st = s0
+    for t in range(T):
+        st = pd.decode(params, st, xs[:, t])
+    for a, b in zip(st, ref_f):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas_fused"])
+def test_mask_exact_bitwise(backend):
+    """Where the executable claims mask_exact, left-padded+masked finals
+    equal the unpadded run BITWISE — the engine's bucketing contract."""
+    cfg, fam, params, xs, s0 = _case(2, backend=backend)
+    xs_pad = jnp.pad(xs, ((0, 0), (PAD, 0), (0, 0)))
+    p = runtime.compile(cfg, batch=B, seq=T + PAD, mask=True, mode="prefill")
+    assert p.sequence_backend == backend and p.mask_exact
+    fm, _ = p.sequence(params, s0, xs_pad, mask=_mask())
+    un = runtime.compile(cfg, batch=B, seq=T, mode="prefill")
+    fu, _ = un.sequence(params, s0, xs)
+    for a, b in zip(fu, fm):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_hetero_dims_fall_to_xla():
+    """The fused kernel needs uniform VMEM blocks in the slstm namespace
+    too: hetero layer_dims resolve to the hetero-capable xla backend."""
+    cfg = GRUConfig(input_dim=X, layer_dims=(16, 8), backend="pallas_fused",
+                    family="slstm")
+    fam = cells.get_family("slstm")
+    params = init_params({"cells": fam.stack_specs(cfg)}, jax.random.key(0))
+    xs = jax.random.normal(jax.random.key(1), (B, T, X))
+    s0 = fam.state0(cfg, B)
+    p = runtime.compile(cfg, batch=B, seq=T, mode="prefill")
+    assert p.sequence_backend == "xla"
+    finals, _ = p.sequence(params, s0, xs)
+    ref_f, _ = fam.reference(fam.normalize(params, cfg), s0, xs)
+    for a, b in zip(finals, ref_f):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), **TOL)
+
+
+# ---------------------------------------------------------------------------
+# prepare(): all weight work ahead of the traced execute
+# ---------------------------------------------------------------------------
+
+def _prim_names(fn, *args):
+    names = set()
+
+    def walk(j):
+        for e in j.eqns:
+            names.add(e.primitive.name)
+            for v in e.params.values():
+                if hasattr(v, "jaxpr"):
+                    walk(v.jaxpr)
+    walk(jax.make_jaxpr(fn)(*args).jaxpr)
+    return names
+
+
+def test_prepare_no_device_put_in_execute_trace():
+    cfg, fam, params, xs, s0 = _case(2, backend="pallas_fused")
+    exe = runtime.compile(cfg, batch=B, seq=T, mode="prefill")
+    sp = exe.prepare(params)
+    assert sp.stacked is not None          # fused views built once
+    n_seq = _prim_names(lambda p, h, x: exe.sequence(p, h, x), sp, s0, xs)
+    assert "device_put" not in n_seq, sorted(n_seq)
+    ed = runtime.compile(cfg, batch=B, mode="decode")
+    n_dec = _prim_names(lambda p, h, x: ed.decode(p, h, x), sp, s0, xs[:, 0])
+    assert "device_put" not in n_dec, sorted(n_dec)
+
+
+def test_prepare_skips_unsupported_family_views():
+    """prepare() consults the family's capability set: no int8 weight rows
+    and no mesh placement for a family that registers neither."""
+    cfg, fam, params, xs, s0 = _case(2, backend="auto")
+    sp = runtime.prepare(params, dataclasses.replace(cfg, quant="int8"))
+    assert sp.quant is None
+    assert sp.placed is None
+    assert sp.stacked is not None
+
+
+# ---------------------------------------------------------------------------
+# typed unknown-family error, registry namespaces, cache keys
+# ---------------------------------------------------------------------------
+
+def test_unknown_family_typed_error():
+    with pytest.raises(cells.UnknownCellFamily) as ei:
+        cells.get_family("convgru")
+    assert ei.value.family == "convgru"
+    assert "gru" in ei.value.known and "slstm" in ei.value.known
+    assert isinstance(ei.value, KeyError)   # old except-KeyError code holds
+    cfg = GRUConfig(input_dim=X, hidden_dim=16, family="convgru")
+    with pytest.raises(cells.UnknownCellFamily):
+        runtime.compile(cfg, batch=B, seq=T, mode="prefill")
+
+
+def test_registry_namespaces_per_family():
+    slstm_b = runtime.backends("slstm")
+    assert set(slstm_b) == {"xla", "pallas_fused"}
+    assert all(s.family == "slstm" for s in slstm_b.values())
+    gru_b = runtime.backends("gru")
+    assert {"xla", "pallas_fused", "pallas_chain"} <= set(gru_b)
+    assert all(s.family == "gru" for s in gru_b.values())
+    # default namespace is gru: pre-registry call sites see the same map
+    assert set(runtime.backends()) == set(gru_b)
+
+
+def test_exec_cache_keyed_by_family():
+    """Memoized compiles: stable within a family, never shared across."""
+    g = GRUConfig(input_dim=X, hidden_dim=16, num_layers=2, backend="xla")
+    s = dataclasses.replace(g, family="slstm")
+    eg = runtime.compile(g, batch=B, seq=T, mode="prefill")
+    es = runtime.compile(s, batch=B, seq=T, mode="prefill")
+    assert eg is not es
+    assert eg is runtime.compile(g, batch=B, seq=T, mode="prefill")
+    assert es is runtime.compile(s, batch=B, seq=T, mode="prefill")
+
+
+# ---------------------------------------------------------------------------
+# measured (family, backend) calibration round-trip
+# ---------------------------------------------------------------------------
+
+def test_family_calibration_roundtrip():
+    """Measured slstm rows drive slstm dispatch (cost_source="measured")
+    without leaking into gru dispatch, and vice versa."""
+    entries = [{"family": "slstm", "backend": b, "op": op, "depth": 2,
+                "batch": B, "hidden_dim": 16,
+                "p50_us": 5.0 if b == "xla" else 50.0}
+               for b in ("xla", "pallas_fused")
+               for op in ("decode", "sequence")]
+    try:
+        runtime.set_cost_model(runtime.CostModel.from_entries(
+            entries, source="<test: slstm rows>"))
+        cfg = GRUConfig(input_dim=X, hidden_dim=16, num_layers=2,
+                        backend="auto", family="slstm")
+        exe = runtime.compile(cfg, batch=B, mode="decode")
+        assert exe.cost_source == "measured"
+        assert exe.decode_backend == "xla"   # the measured-cheap one
+        # the same shapes under gru see NO slstm rows: static fallback
+        gcfg = dataclasses.replace(cfg, family="gru")
+        ge = runtime.compile(gcfg, batch=B, mode="decode")
+        assert ge.cost_source == "static"
+    finally:
+        runtime.set_cost_model(runtime.CostModel({}, source="<tests: static>"))
+
+
+# ---------------------------------------------------------------------------
+# ServeEngine: slstm waves through generate()
+# ---------------------------------------------------------------------------
+
+def test_serve_engine_slstm_waves():
+    from repro.distributed.sharding import ShardCtx
+    from repro.models import api as mapi
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg = get_smoke_config("slstm-jet")
+    A = mapi.get_api(cfg)
+    params = init_params(A.specs(cfg), jax.random.key(0))
+    rng = np.random.default_rng(0)
+    reqs = [Request(prompt=rng.normal(size=(int(rng.integers(3, 13)),
+                                            cfg.gru.input_dim))
+                    .astype(np.float32), max_new_tokens=4)
+            for _ in range(5)]
+    eng = ServeEngine(cfg, params, ShardCtx(), max_batch=3)
+    done = eng.generate(reqs)
+    assert all(r.done and len(r.out) == 4 for r in done)
+    stats = eng.latency_stats()
+    # per-step attribution names an (slstm, ·) backend
+    assert eng.decode_backend in ("xla", "pallas_fused")
+    assert stats["decode_backend_steps"], stats
+    assert set(stats["decode_backend_steps"]) <= {"xla", "pallas_fused"}
+    assert sum(stats["decode_backend_steps"].values()) == stats["steps"]
+    # decode-loop output equals the model API run on the same prompt
+    logits, _ = A.prefill(eng.params, cfg,
+                          {"features": jnp.asarray(reqs[0].prompt)[None]},
+                          ShardCtx())
+    assert done[0].out[0] == int(jnp.argmax(logits, -1)[0])
+
+
+def test_serve_engine_unknown_family_raises():
+    from repro.distributed.sharding import ShardCtx
+    from repro.serve.engine import ServeEngine
+
+    cfg = get_smoke_config("slstm-jet").replace(family="convgru")
+    with pytest.raises(cells.UnknownCellFamily):
+        ServeEngine(cfg, {}, ShardCtx())
