@@ -117,6 +117,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import json
+import math
 import os
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -453,6 +454,55 @@ class CostModel:
             return cls({}, source=str(path),
                        error=f"{type(e).__name__}: {e}")
 
+    def merged(self, entries, source: str = "") -> "CostModel":
+        """A NEW model: this model's table with ``entries`` folded in.
+
+        The online-recalibration API (``repro.serve.autotune``): served
+        per-step timings come back as calibration rows and REPLACE any
+        existing measured point at the same (family, backend, op, depth,
+        hidden, batch) — fresher measurements win; batches never measured
+        before extend the curve. Malformed rows and non-finite or
+        non-positive latencies are skipped (a ManualClock serving run
+        measures dt == 0, which must never poison the table with
+        "free" backends).
+
+        Pure: ``self`` is untouched. Install the result via
+        :func:`set_cost_model`, which bumps the cost epoch and evicts the
+        executable cache — the epoch is part of every cache key, so plans
+        priced under the old table are unreachable afterwards (see
+        docs/runtime.md, "Recalibration and cost epochs").
+        """
+        table = {k: list(v) for k, v in self._table.items()}
+        for e in entries:
+            try:
+                key = (str(e.get("family", "gru")), str(e["backend"]),
+                       str(e.get("op", "decode")),
+                       int(e["depth"]), int(e["hidden_dim"]))
+                batch = int(e["batch"])
+                us = float(e["p50_us"])
+            except (KeyError, TypeError, ValueError):
+                continue
+            if batch < 1 or not math.isfinite(us) or us <= 0.0:
+                continue
+            pts = table.setdefault(key, [])
+            pts[:] = [(b, c) for (b, c) in pts if b != batch]
+            pts.append((batch, us))
+            pts.sort()
+        return CostModel(table,
+                         source=source or (f"{self.source}+online"
+                                           if self.source else "<online>"))
+
+    def batch_points(self, backend: str, op: str = "decode", *, depth: int,
+                     hidden: int, family: str = "gru") -> List[tuple]:
+        """The raw measured ``(batch, p50_us)`` points of one curve,
+        sorted by batch. This is the autotuner's view of the
+        batch-latency curve: :meth:`lookup` clamps and interpolates,
+        which would fabricate a flat marginal cost outside the measured
+        range — wave-size selection needs to know where the measurements
+        actually end."""
+        return list(self._table.get((str(family), str(backend), str(op),
+                                     int(depth), int(hidden)), ()))
+
     def lookup(self, backend: str, op: str, *, depth: int, batch: int,
                hidden: int, family: str = "gru") -> Optional[float]:
         pts = self._table.get((str(family), backend, op, int(depth),
@@ -492,6 +542,15 @@ def load_cost_model(path) -> CostModel:
     model = CostModel.load(path)
     set_cost_model(model)
     return model
+
+
+def cost_epoch() -> int:
+    """The current cost/gate epoch. Part of every executable cache key:
+    :func:`set_cost_model` and :func:`set_quant_accuracy` bump it (and
+    evict the cache), so executables priced under an older table or gate
+    state are unreachable afterwards. Observability for the online
+    recalibration loop (``repro.serve.autotune``) and its tests."""
+    return _COST_EPOCH
 
 
 def cost_model() -> CostModel:

@@ -81,6 +81,14 @@ def main(argv=None):
     p.add_argument("--routing", choices=("depth", "static"), default="depth",
                    help="fleet dispatch policy: measured queue-depth scoring "
                         "vs static round-robin")
+    p.add_argument("--autotune", action="store_true",
+                   help="attach an online AutoTuner (repro.serve.autotune): "
+                        "wave size from the measured batch-latency curve, "
+                        "prompt-bucket ladder from observed length "
+                        "quantiles, served step timings folded back into "
+                        "the CostModel — retuned only at wave boundaries; "
+                        "prints the applied decisions (fleet mode tunes "
+                        "each replica independently)")
     args = p.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -110,9 +118,13 @@ def main(argv=None):
                 for _ in range(args.requests)]
     if args.replicas > 1:
         return _serve_fleet(cfg, params, reqs, args)
+    tuner = None
+    if args.autotune:
+        from repro.serve.autotune import AutoTuner
+        tuner = AutoTuner()
     engine = ServeEngine(cfg, params, ShardCtx(),
                          max_batch=args.slots or args.requests,
-                         bucket_min=args.bucket_min)
+                         bucket_min=args.bucket_min, tuner=tuner)
     done = engine.generate(reqs)
     for i, r in enumerate(done):
         print(f"req{i}: {len(r.out)} tokens -> {r.out[:8]}...")
@@ -131,7 +143,20 @@ def main(argv=None):
               f"decode={engine.decode_backend} "
               f"dtype={stats.get('served_dtype')} "
               f"decode_steps=[{attributed or '-'}]")
+    if args.autotune:
+        _print_autotune(stats["autotune"])
     return done
+
+
+def _print_autotune(at: dict) -> None:
+    ladder = at.get("bucket_ladder")
+    print(f"autotune: wave_size={at['wave_size']} "
+          f"bucket_ladder={ladder or 'pow2'} "
+          f"retunes={at.get('retunes', 0)} "
+          f"prompts_observed={at.get('prompts_observed', 0)}")
+    for d in at.get("decisions", ()):
+        print(f"  [{d['kind']}] {d['from']} -> {d['to']} "
+              f"({d['measurement'].get('rule', '')})")
 
 
 def _serve_fleet(cfg, params, reqs, args):
@@ -154,7 +179,7 @@ def _serve_fleet(cfg, params, reqs, args):
                          max_batch=args.slots or max(2, args.requests // 2),
                          bucket_min=args.bucket_min, clock=clock,
                          config=FleetConfig(routing=args.routing),
-                         injector=injector)
+                         injector=injector, autotune=args.autotune)
     done = router.generate(reqs)
     for i, r in enumerate(done):
         print(f"req{i}: {len(r.out)} tokens -> {r.out[:8]}...")
@@ -165,8 +190,13 @@ def _serve_fleet(cfg, params, reqs, args):
           f"retries={s['retries']} hedges={s['hedges']} "
           f"kills={s['kills']} restores={s['restores']}")
     for name, rs in s["replicas"].items():
-        print(f"  {name}: alive={rs['alive']} restarts={rs['restarts']} "
-              f"steps={rs['steps']} requests={rs['requests']}")
+        line = (f"  {name}: alive={rs['alive']} restarts={rs['restarts']} "
+                f"steps={rs['steps']} requests={rs['requests']}")
+        if args.autotune:
+            line += (f" wave_size={rs['wave_size']} "
+                     f"bucket_ladder={rs['bucket_ladder'] or 'pow2'} "
+                     f"retunes={rs['retunes']}")
+        print(line)
     return done
 
 

@@ -31,6 +31,17 @@ cost stays one prefill, not one per request. Finished streams therefore
 free capacity immediately instead of padding the wave to the slowest
 request.
 
+Autotuning: an attached :class:`repro.serve.autotune.AutoTuner` closes
+the loop from measured serving back into these knobs — wave size from
+the measured batch-latency curve, the prompt-bucket ladder from the
+observed length distribution (``bucket_ladder`` replaces the power-of-
+two rule in ``_bucket_for``), and online CostModel recalibration. All
+retuning happens at WAVE BOUNDARIES only (``_maybe_retune``): a tuning
+decision may invalidate the jit caches (``_invalidate_jits``), which
+must never happen under a live wave — the compile-once discipline holds
+mid-wave by construction. Decisions are reported in
+``latency_stats()["autotune"]``; see docs/serving.md ("Autotuning").
+
 GRU execution dispatches through the executor (``repro.core.runtime``)
 via its compile/execute API: params are prepared ONCE against the ctx's
 placement (weight stacking and — under a mesh — device placement happen
@@ -130,12 +141,19 @@ class _GruWave:
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, ctx: ShardCtx = ShardCtx(),
                  max_batch: int = 8, bucket_min: int = 8,
-                 clock: Optional[Clock] = None):
+                 clock: Optional[Clock] = None, tuner=None):
         self.cfg = cfg
         self.ctx = ctx
         self.max_batch = max_batch
         self.bucket_min = bucket_min
         self.clock = clock or SystemClock()
+        # optional feedback loop (repro.serve.autotune.AutoTuner): observes
+        # prompts + warm step timings and retunes wave size / bucket ladder
+        # / cost rows — only ever applied at wave boundaries (_maybe_retune)
+        self.tuner = tuner
+        # autotuned prefill ladder: None = the static power-of-two ladder;
+        # else a small fixed ascending tuple of bucket lengths (jit keys)
+        self.bucket_ladder: Optional[tuple] = None
         self.api = mapi.get_api(cfg)
         prep = getattr(self.api, "prepare_params", None)
         self.params = prep(params, cfg, ctx) if prep else params
@@ -144,7 +162,12 @@ class ServeEngine:
         self._decode_plan_backends = {}  # backend traced into each decode
                                          # jit (frozen at trace time)
         self._decode_warm = set()        # keys whose compile step has passed
+        self._prefill_plan_backends = {} # backend traced into each prefill
+                                         # bucket jit (frozen at trace time)
+        self._prefill_cold = set()       # post-retune buckets whose first
+                                         # (compile) timing is excluded
         self._scatter_jit = {}           # keyed by admit-batch size
+        self._jit_gen = 0                # bumped per _invalidate_jits call
         self._wave: Optional[_GruWave] = None
         self.step_times: List[float] = []
         self.prefill_times: List[float] = []
@@ -173,6 +196,14 @@ class ServeEngine:
             def fn(params, batch):
                 return self.api.prefill(params, self.cfg, batch, self.ctx)
             self._prefill_jit[S] = jax.jit(fn)
+            if self._jit_gen > 0:
+                # a jit (re)created after a mid-serve retune: its first
+                # call recompiles, and that compile is a tuning cost —
+                # excluded from the percentiles exactly like the
+                # per-decode-jit rule (_record_prefill). First-EVER bucket
+                # compiles (gen 0) stay included: cold-start is part of
+                # the prefill story.
+                self._prefill_cold.add(S)
         return self._prefill_jit[S]
 
     def _get_scatter(self, k: int):
@@ -220,7 +251,7 @@ class ServeEngine:
         t0 = self.clock.now()
         logits, cache = prefill(self.params, {"tokens": jnp.asarray(toks)})
         logits.block_until_ready()
-        self.prefill_times.append(self.clock.now() - t0)
+        self._record_prefill(S, self.clock.now() - t0)
         now = self.clock.now()
         for r in reqs:
             r.t_admit = now
@@ -273,25 +304,61 @@ class ServeEngine:
             mask[i, Sb - p.shape[0]:] = True
         return feats, mask
 
-    def _gru_prefill(self, prompts: List[np.ndarray]):
-        """One bucketed prefill of up to max_batch prompts; returns cache."""
-        Sb = bucket_len(max(p.shape[0] for p in prompts), self.bucket_min)
-        feats, mask = self._gru_prefill_batch(prompts, Sb)
-        compiler = getattr(self.api, "executable", None)
-        if compiler is not None:         # record the executor's choice
+    def _bucket_for(self, S: int) -> int:
+        """The prefill bucket (jit key) a prompt of length ``S`` pads to:
+        the autotuned quantile ladder when one is installed (smallest rung
+        >= S; prompts above the top rung double from it, so the key space
+        stays a small fixed set), else the static power-of-two ladder."""
+        if self.bucket_ladder:
+            for b in self.bucket_ladder:
+                if S <= b:
+                    return b
+            return bucket_len(S, minimum=self.bucket_ladder[-1] * 2)
+        return bucket_len(S, self.bucket_min)
+
+    def _prefill_backend_for(self, Sb: int) -> Optional[str]:
+        """The executor backend the prefill jit for bucket ``Sb`` traced
+        with — resolved once at first use and frozen, mirroring
+        ``_decode_backend_for``: the jitted prefill embeds the backend
+        chosen in its trace-time cost epoch, so attribution must not
+        follow later cost-model changes (a retune that DOES change the
+        resolution also invalidates the jits, clearing this map)."""
+        if Sb not in self._prefill_plan_backends:
+            compiler = getattr(self.api, "executable", None)
             # mirrors the compile key gru_lm.prefill resolves for this
             # call: the engine always sends the slot-shaped batch WITH a
             # mask, so (batch, seq, masked=True) is the key the model uses
-            exe = compiler(self.cfg, batch=self.max_batch, seq=Sb,
-                           masked=True, mode="prefill",
-                           mesh=self.ctx.mesh)
-            self.prefill_backends.append(exe.sequence_backend)
+            self._prefill_plan_backends[Sb] = (
+                None if compiler is None
+                else compiler(self.cfg, batch=self.max_batch, seq=Sb,
+                              masked=True, mode="prefill",
+                              mesh=self.ctx.mesh).sequence_backend)
+        return self._prefill_plan_backends[Sb]
+
+    def _record_prefill(self, Sb: int, dt: float) -> None:
+        """Record one prefill latency. A bucket's first-EVER compile is
+        included (cold-start is part of the prefill story), but a jit
+        (re)created after a retune invalidation has its first (compile)
+        call excluded — same rule as the per-decode-jit exclusion, so
+        mid-serve retunes can't poison the steady-state percentiles."""
+        if Sb in self._prefill_cold:
+            self._prefill_cold.discard(Sb)
+            return
+        self.prefill_times.append(dt)
+
+    def _gru_prefill(self, prompts: List[np.ndarray]):
+        """One bucketed prefill of up to max_batch prompts; returns cache."""
+        Sb = self._bucket_for(max(p.shape[0] for p in prompts))
+        feats, mask = self._gru_prefill_batch(prompts, Sb)
+        backend = self._prefill_backend_for(Sb)
+        if backend is not None:          # record the executor's choice
+            self.prefill_backends.append(backend)
         prefill = self._get_prefill(Sb)
         t0 = self.clock.now()
         logits, cache = prefill(self.params, {"features": jnp.asarray(feats),
                                               "mask": jnp.asarray(mask)})
         logits.block_until_ready()
-        self.prefill_times.append(self.clock.now() - t0)
+        self._record_prefill(Sb, self.clock.now() - t0)
         return cache
 
     def _make_slot(self, r: Request) -> _Slot:
@@ -322,10 +389,13 @@ class ServeEngine:
     # bucketed prefills, the same fixed-slot decode jit.
 
     def gru_wave_begin(self, requests: Sequence[Request] = ()) -> None:
-        """Start a fresh continuous-batching wave (cell families only)."""
+        """Start a fresh continuous-batching wave (cell families only).
+        A wave boundary: the attached tuner (if any) may retune here,
+        before any slot shape is traced for this wave."""
         if not cell_families.is_cell_family(self.cfg.family):
             raise UnknownCellFamily(self.cfg.family,
                                     known=cell_families.families())
+        self._maybe_retune()
         X = self.cfg.gru.input_dim
         Bs = self.max_batch
         self._wave = _GruWave(slots=[None] * Bs,
@@ -339,9 +409,13 @@ class ServeEngine:
         if self._wave is None:
             self.gru_wave_begin(())
         now = self.clock.now()
+        X = self.cfg.gru.input_dim
         for r in requests:
             if r.t_submit is None:
                 r.t_submit = now
+            if self.tuner is not None:
+                self.tuner.observe_prompt(
+                    np.asarray(r.prompt).reshape(-1, X).shape[0])
             self._wave.pending.append(r)
 
     def gru_wave_active(self) -> int:
@@ -365,7 +439,101 @@ class ServeEngine:
     def bucket_warm(self, prompt_len: int) -> bool:
         """Whether this engine has already compiled the prefill bucket a
         prompt of ``prompt_len`` lands in (router bucket-affinity)."""
-        return bucket_len(prompt_len, self.bucket_min) in self._prefill_jit
+        return self._bucket_for(prompt_len) in self._prefill_jit
+
+    # -- autotune surface (repro.serve.autotune) ----------------------------
+    #
+    # The tuner never mutates the engine directly: it calls these
+    # boundary-safe mutators from maybe_retune(), which the engine itself
+    # only invokes between waves (_maybe_retune). That split is what keeps
+    # the no-mid-wave-retrace invariant enforceable in one place.
+
+    def _maybe_retune(self) -> None:
+        """Run the attached tuner if (and only if) no wave work is live —
+        a retune may invalidate every jit cache, which must never happen
+        under a wave mid-decode (the donated decode cache and the frozen
+        backend attribution both assume trace stability for the wave's
+        lifetime)."""
+        if self.tuner is None:
+            return
+        if self._wave is not None and self.gru_wave_active() > 0:
+            return
+        self.tuner.maybe_retune(self)
+
+    def _invalidate_jits(self) -> None:
+        """Drop every shape-dependent jit (prefill buckets, decode steps,
+        admit scatters) plus the frozen backend attributions, so the next
+        call re-traces against the CURRENT wave size and cost epoch.
+        Only wave-boundary retunes call this. The warm/cold markers reset
+        with the jits: each re-created jit's first (compile) step is
+        excluded from the percentiles again (_record_step /
+        _record_prefill)."""
+        self._prefill_jit.clear()
+        self._decode_jit.clear()
+        self._scatter_jit.clear()
+        self._decode_plan_backends.clear()
+        self._prefill_plan_backends.clear()
+        self._decode_warm.clear()
+        self._prefill_cold.clear()
+        self._jit_gen += 1
+
+    def apply_wave_size(self, n: int) -> None:
+        """Resize the decode slot count (tuner decision). Every jit here
+        is batch-shaped — prefill pads to ``max_batch`` rows, decode and
+        scatter trace the slot axis — so the caches are invalidated; a
+        drained wave object is dropped so the next enqueue builds slots
+        at the new size. Callable only between waves (enforced by
+        _maybe_retune being the sole caller path)."""
+        n = int(n)
+        if n < 1 or n == self.max_batch:
+            return
+        self.max_batch = n
+        self._invalidate_jits()
+        if self._wave is not None and self.gru_wave_active() == 0:
+            self._wave = None
+
+    def apply_bucket_ladder(self, ladder) -> None:
+        """Install an autotuned prefill-bucket ladder (ascending lengths;
+        empty/None restores the power-of-two ladder). Existing bucket
+        jits stay valid — old buckets simply stop being chosen for new
+        admits, and identical rungs keep hitting their compiled jits —
+        but the generation marker bumps: NEW bucket jits born from this
+        retune compile mid-serve, and their first call is excluded from
+        the percentiles like any other post-retune jit (_get_prefill)."""
+        ladder = tuple(int(b) for b in (ladder or ()))
+        ladder = ladder or None
+        if ladder != self.bucket_ladder:
+            self.bucket_ladder = ladder
+            self._jit_gen += 1
+
+    def refresh_executables(self) -> bool:
+        """After a cost-model epoch bump: re-resolve the executor choice
+        for every live jit key and invalidate ONLY if some resolution
+        changed. The live jits froze their trace-time backend, so when
+        the refreshed table confirms those choices a recalibration costs
+        zero retraces; when it disagrees, serving the now-known-slower
+        backend would be worse than one boundary recompile."""
+        compiler = getattr(self.api, "executable", None)
+        if compiler is None:
+            return False
+        changed = False
+        for key, frozen in self._decode_plan_backends.items():
+            fresh = compiler(self.cfg, batch=key[0], mode="decode",
+                             mesh=self.ctx.mesh).decode_backend
+            if fresh != frozen:
+                changed = True
+                break
+        if not changed:
+            for Sb, frozen in self._prefill_plan_backends.items():
+                fresh = compiler(self.cfg, batch=self.max_batch, seq=Sb,
+                                 masked=True, mode="prefill",
+                                 mesh=self.ctx.mesh).sequence_backend
+                if fresh != frozen:
+                    changed = True
+                    break
+        if changed:
+            self._invalidate_jits()
+        return changed
 
     def gru_wave_cancel(self, request: Request) -> bool:
         """Drop a request from the live wave (queued or mid-decode): the
@@ -451,6 +619,11 @@ class ServeEngine:
                 self._finish(r)
                 w.slots[j] = None                       # retire mid-wave
                 finished.append(r)
+        if not w.pending and all(s is None for s in w.slots):
+            # the wave just drained: a boundary. The tuner may retune now
+            # (possibly invalidating jits / resizing slots) — the next
+            # enqueue starts a fresh wave against the new configuration.
+            self._maybe_retune()
         return finished
 
     # -- stats --------------------------------------------------------------
@@ -485,6 +658,14 @@ class ServeEngine:
         if key in self._decode_warm:
             self.step_times.append(dt)
             self.decode_backends.append(backend)
+            if self.tuner is not None and backend is not None:
+                # warm steps only: compile steps must not become cost rows
+                g = self.cfg.gru
+                self.tuner.observe_step(
+                    dt, batch=key[0], backend=backend,
+                    depth=g.resolved_num_layers,
+                    hidden=g.resolved_layer_dims[0],
+                    family=cell_families.cfg_family(g))
         else:
             self._decode_warm.add(key)
 
@@ -506,7 +687,17 @@ class ServeEngine:
             if b is not None:
                 per_backend[b] = per_backend.get(b, 0) + 1
         from repro.core import runtime
+        # the autotune decision trail: current tuned shape + every applied
+        # decision with the measurement that justified it (always present;
+        # enabled=False for untuned engines, so consumers need no getattr)
+        autotune = {"enabled": self.tuner is not None,
+                    "wave_size": self.max_batch,
+                    "bucket_ladder": (list(self.bucket_ladder)
+                                      if self.bucket_ladder else None)}
+        if self.tuner is not None:
+            autotune.update(self.tuner.stats())
         return {"decode_backend_steps": per_backend,
+                "autotune": autotune,
                 # per-REQUEST latencies (engine clock): queue wait is
                 # submit -> slot admission, e2e is submit -> finish — the
                 # router's depth-aware routing signal and the fleet

@@ -35,6 +35,19 @@ Architecture (one cooperative scheduler, zero wall-clock sleeps):
   cancelled. A restored replica re-enters the rotation warm:
   :meth:`FleetReplica.restart` rebuilds its engine, which re-runs
   ``prepare()`` against the replica's placement.
+* **Cancellation** — :meth:`FleetRouter.cancel` propagates a client
+  disconnect end to end: the ticket leaves the queue, every live flight's
+  wave lane is freed (``gru_wave_cancel``) including any hedged
+  duplicate, and the ticket lands in ``status="cancelled"``
+  (``reason="client_disconnect"``) — never counted as completed or
+  failed.
+* **Autotuning** (``autotune=True``) — one
+  :class:`~repro.serve.autotune.AutoTuner` per replica closes the loop
+  from that replica's measured serving back into its engine's wave size
+  and bucket ladder, and folds served step timings into the shared
+  CostModel — which the depth-routing prior (``_step_cost_s``) reads
+  live, so routing estimates refresh with recalibration. See
+  ``docs/serving.md`` ("Autotuning").
 * **Fault injection** — a :class:`FaultInjector` holds a schedule of
   kill / restore / slow / delay events against the router's injectable
   clock. Under a ``ManualClock`` the router itself advances virtual time
@@ -65,6 +78,7 @@ from repro.distributed.fault_tolerance import (Clock, HeartbeatMonitor,
                                                ManualClock, StragglerMonitor,
                                                SystemClock)
 from repro.distributed.sharding import ShardCtx
+from repro.serve.autotune import AutoTuneConfig, AutoTuner
 from repro.serve.engine import Request, ServeEngine
 
 
@@ -158,13 +172,19 @@ class FleetConfig:
     bucket_penalty_s: float = 0.05   # routing cost of a cold prefill bucket
 
 
-@dataclass
+# identity semantics: tickets live in queues/lists that are searched with
+# ``in``/``remove`` — field-wise dataclass eq would compare the numpy
+# prompt arrays inside Request (ambiguous truth value)
+@dataclass(eq=False)
 class FleetTicket:
-    """One admitted request's lifecycle in the fleet."""
+    """One admitted request's lifecycle in the fleet. ``id`` is the
+    router-assigned request id — the handle a client passes back to
+    :meth:`FleetRouter.cancel` on disconnect."""
     request: Request
     t_submit: float
+    id: int = -1
     deadline_s: Optional[float] = None    # relative to t_submit
-    status: str = "queued"           # queued|inflight|done|shed|failed
+    status: str = "queued"   # queued|inflight|done|shed|failed|cancelled
     reason: Optional[str] = None
     retries: int = 0
     hedged: bool = False
@@ -179,7 +199,7 @@ class FleetTicket:
         return self.status in ("queued", "inflight")
 
 
-@dataclass
+@dataclass(eq=False)                     # identity, same as FleetTicket
 class _Flight:
     """One dispatch attempt: a fresh clone of the ticket's request served
     by one replica (retries and hedges each get their own flight, so a
@@ -240,7 +260,9 @@ class FleetRouter:
                  max_batch: int = 4, bucket_min: int = 8,
                  clock: Optional[Clock] = None,
                  config: FleetConfig = FleetConfig(),
-                 injector: Optional[FaultInjector] = None):
+                 injector: Optional[FaultInjector] = None,
+                 autotune: bool = False,
+                 tuner_config: Optional[AutoTuneConfig] = None):
         if not cells.is_cell_family(cfg.family):
             raise NotImplementedError("the fleet serves registered cell "
                                       "families (stepwise waves: "
@@ -252,13 +274,23 @@ class FleetRouter:
         self.clock = clock or SystemClock()
         self.injector = injector
         self.max_batch = max_batch
+        # autotune=True attaches one AutoTuner PER REPLICA (each replica's
+        # engine tunes to its own observed traffic; the recalibration
+        # dimension feeds the shared process-wide CostModel, which the
+        # routing prior _step_cost_s reads live). A restarted replica gets
+        # a fresh tuner, consistent with its empty jit caches.
+        self.autotune = bool(autotune)
         ctxs = list(ctxs) if ctxs is not None else [ShardCtx()] * replicas
         assert len(ctxs) == replicas
 
         def _builder(ctx):
-            return lambda: ServeEngine(cfg, params, ctx, max_batch=max_batch,
-                                       bucket_min=bucket_min,
-                                       clock=self.clock)
+            def build():
+                tuner = (AutoTuner(tuner_config or AutoTuneConfig())
+                         if self.autotune else None)
+                return ServeEngine(cfg, params, ctx, max_batch=max_batch,
+                                   bucket_min=bucket_min, clock=self.clock,
+                                   tuner=tuner)
+            return build
 
         self.replicas = [FleetReplica(f"replica{i}", _builder(ctx))
                          for i, ctx in enumerate(ctxs)]
@@ -271,13 +303,16 @@ class FleetRouter:
         for r in self.replicas:
             self.heartbeats.beat(r.name)
         self.tickets: List[FleetTicket] = []
+        self._by_id: Dict[int, FleetTicket] = {}
+        self._next_id = 0
         self._queue: deque = deque()
         self._outstanding = 0
         self._rr = -1                # static round-robin cursor
         self.ticks = 0
         self.counters: Dict[str, int] = {
             "submitted": 0, "completed": 0, "failed": 0, "retries": 0,
-            "hedges": 0, "hedges_cancelled": 0, "kills": 0, "restores": 0}
+            "cancelled": 0, "hedges": 0, "hedges_cancelled": 0, "kills": 0,
+            "restores": 0}
         self.sheds: Dict[str, int] = {}
         self._e2e: List[float] = []
         self._queue_waits: List[float] = []
@@ -305,12 +340,56 @@ class FleetRouter:
                     f"estimated {est:.4f}s > deadline {deadline_s:.4f}s")
         if request.t_submit is None:
             request.t_submit = now
-        t = FleetTicket(request=request, t_submit=now, deadline_s=deadline_s)
+        t = FleetTicket(request=request, t_submit=now, id=self._next_id,
+                        deadline_s=deadline_s)
+        self._next_id += 1
+        self._by_id[t.id] = t
         self.tickets.append(t)
         self._queue.append(t)
         self._outstanding += 1
         self.counters["submitted"] += 1
         return t
+
+    def cancel(self, handle) -> bool:
+        """Client-disconnect propagation: drop an outstanding request
+        everywhere it lives — the bounded queue, the owning replica's
+        wave lane (:meth:`ServeEngine.gru_wave_cancel`), AND any hedged
+        duplicate still racing on another replica. ``handle`` may be the
+        :class:`FleetTicket`, its integer ``id``, or the original
+        :class:`Request`. Returns False when the ticket is not
+        outstanding (already done / shed / failed / cancelled): a
+        disconnect after completion is a no-op — the result already
+        landed in ``request.out``."""
+        t = self._find_ticket(handle)
+        if t is None or not t.outstanding:
+            return False
+        if t in self._queue:
+            self._queue.remove(t)
+        for fl in list(t.flights):
+            # the lane frees immediately; a dead replica's engine is about
+            # to be rebuilt anyway, so a failed wave-cancel there is fine
+            fl.replica.engine.gru_wave_cancel(fl.clone)
+            if fl in fl.replica.flights:
+                fl.replica.flights.remove(fl)
+            t.flights.remove(fl)
+            if fl.hedge:
+                self.counters["hedges_cancelled"] += 1
+        t.status = "cancelled"
+        t.reason = "client_disconnect"
+        t.t_done = self.clock.now()
+        self._outstanding -= 1
+        self.counters["cancelled"] += 1
+        return True
+
+    def _find_ticket(self, handle) -> Optional[FleetTicket]:
+        if isinstance(handle, FleetTicket):
+            return handle
+        if isinstance(handle, (int, np.integer)):
+            return self._by_id.get(int(handle))
+        for t in reversed(self.tickets):     # a Request: newest wins
+            if t.request is handle:
+                return t
+        return None
 
     def generate(self, requests: Sequence[Request],
                  deadline_s: Optional[float] = None) -> List[Request]:
@@ -597,17 +676,24 @@ class FleetRouter:
         per_replica = {}
         for rep in self.replicas:
             ls = rep.engine.latency_stats()
+            at = ls["autotune"]
             per_replica[rep.name] = {
                 "alive": rep.alive, "restarts": rep.restarts,
                 "steps": rep.steps, "slow_factor": rep.slow_factor,
                 "decode_p50_s": ls["p50_s"], "decode_p99_s": ls["p99_s"],
                 "queue_wait_p99_s": ls["queue_wait_p99_s"],
-                "requests": ls["requests"]}
+                "requests": ls["requests"],
+                # tuned shape summary (full decision records stay on the
+                # engine: latency_stats()["autotune"]["decisions"])
+                "wave_size": at["wave_size"],
+                "bucket_ladder": at["bucket_ladder"],
+                "retunes": at.get("retunes", 0)}
         return {**self.counters,
                 "shed": dict(self.sheds),
                 "outstanding": self._outstanding,
                 "ticks": self.ticks,
                 "routing": self.config.routing,
+                "autotune": self.autotune,
                 "e2e_mean_s": float(e2e.mean()),
                 "e2e_p50_s": float(np.percentile(e2e, 50)),
                 "e2e_p99_s": float(np.percentile(e2e, 99)),

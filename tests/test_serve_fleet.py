@@ -345,6 +345,150 @@ def test_engine_latency_stats_queue_wait_and_e2e():
         assert r.t_finish - r.t_submit >= r.t_admit - r.t_submit >= 0.0
 
 
+# ---------------------------------------------------------------------------
+# client-disconnect cancellation (FleetRouter.cancel)
+# ---------------------------------------------------------------------------
+
+def test_fleet_cancel_queued_and_inflight():
+    """cancel() drops an outstanding request everywhere it lives: a
+    queued ticket (by integer id) leaves the bounded queue without ever
+    dispatching; an inflight ticket (by FleetTicket) frees its replica
+    wave lane mid-decode; a finished ticket is a no-op returning False.
+    The survivors complete with streams matching the fault-free oracle."""
+    cfg, params = _setup()
+    reqs = _requests(cfg, 5, seed=20, max_new=6)
+    router = _fleet(cfg, params)
+    tickets = [router.submit(r) for r in reqs]
+    # queued cancel, before any dispatch tick — by id (the async handle a
+    # disconnecting client holds)
+    assert router.cancel(tickets[4].id) is True
+    assert tickets[4].status == "cancelled"
+    assert tickets[4].reason == "client_disconnect"
+    assert tickets[4] not in router._queue
+    assert router.cancel(tickets[4]) is False          # already cancelled
+    # dispatch and get mid-decode, then cancel an inflight ticket
+    while not tickets[0].flights:
+        router.tick()
+    fl = tickets[0].flights[0]
+    lane_req = fl.clone
+    rep = fl.replica
+    assert router.cancel(tickets[0]) is True
+    assert tickets[0].status == "cancelled" and not tickets[0].flights
+    assert fl not in rep.flights
+    # the wave lane really freed: a second engine-level cancel misses
+    assert rep.engine.gru_wave_cancel(lane_req) is False
+    router.run_until_done()
+    s = router.stats()
+    assert s["cancelled"] == 2
+    assert s["completed"] == 3 and s["failed"] == 0
+    assert not reqs[0].done and not reqs[4].done
+    done = [reqs[1], reqs[2], reqs[3]]
+    assert all(r.done for r in done)
+    assert [r.out for r in done] == _reference_outs(cfg, params, done)
+    # disconnect after completion: no-op, result already landed
+    done_ticket = next(t for t in tickets if t.status == "done")
+    assert router.cancel(done_ticket) is False
+    assert router.cancel(done_ticket.request) is False
+    assert router.stats()["cancelled"] == 2            # unchanged
+
+
+def test_fleet_cancel_unknown_handle_is_noop():
+    cfg, params = _setup()
+    router = _fleet(cfg, params)
+    assert router.cancel(12345) is False               # unknown id
+    assert router.cancel(Request(prompt=np.zeros((3, 5), np.float32))) \
+        is False                                       # never-submitted
+    assert router.stats()["cancelled"] == 0
+
+
+def test_fleet_cancel_kills_hedged_duplicate_under_faults():
+    """A ticket hedged onto a second replica (straggler duplicate) has
+    TWO live lanes; client disconnect must cancel both — the straggler's
+    and the duplicate's — so neither replica keeps decoding for a client
+    that went away. Deterministic via FaultInjector slow + ManualClock."""
+    cfg, params = _setup()
+    reqs = _requests(cfg, 4, seed=21, max_new=8)
+    inj = FaultInjector([
+        FaultEvent(t=0.0, kind="slow", replica="replica0", factor=10.0)])
+    router = _fleet(cfg, params, replicas=3, injector=inj,
+                    config=FleetConfig(
+                        heartbeat_timeout_s=0.5,       # slow != dead
+                        straggler_factor=3.0, tick_s=0.01))
+    tickets = [router.submit(r) for r in reqs]
+    # pump until the straggler monitor hedges some ticket: 2 live flights
+    n = 0
+    while not any(len(t.flights) >= 2 for t in tickets):
+        router.tick()
+        n += 1
+        assert n < 10_000, "straggler hedge never fired"
+    t = next(t for t in tickets if len(t.flights) >= 2)
+    lanes = [(fl.replica, fl.clone) for fl in t.flights]
+    assert any(fl.hedge for fl in t.flights)
+    before = router.stats()["hedges_cancelled"]
+    assert router.cancel(t) is True
+    assert t.status == "cancelled" and not t.flights
+    assert router.stats()["hedges_cancelled"] == before + 1
+    # BOTH lanes freed — straggler and duplicate alike
+    for rep, clone in lanes:
+        assert all(fl.clone is not clone for fl in rep.flights)
+        assert rep.engine.gru_wave_cancel(clone) is False
+    router.run_until_done()
+    s = router.stats()
+    assert s["cancelled"] == 1 and s["failed"] == 0
+    assert s["completed"] == 3
+    assert not t.request.done
+    others = [r for r in reqs if r is not t.request]
+    assert all(r.done for r in others)
+    assert [r.out for r in others] == _reference_outs(cfg, params, others)
+
+
+# ---------------------------------------------------------------------------
+# fleet autotuning: per-replica tuners, A/B vs static
+# ---------------------------------------------------------------------------
+
+def test_fleet_autotune_per_replica_tuners_ab_parity():
+    """autotune=True attaches one AutoTuner per replica: each tunes its
+    bucket ladder to its OWN observed traffic at wave boundaries. Under a
+    plain ManualClock every measured step dt is 0.0, so recalibration
+    stays inert (the shared CostModel is never touched) — and the tuned
+    fleet's streams stay bitwise-identical to the static fleet's (the
+    benchmark A/B's correctness leg)."""
+    from repro.core import runtime
+    from repro.serve.autotune import AutoTuneConfig
+    cfg, params = _setup()
+    model_before = runtime.cost_model()
+    tuned = FleetRouter(cfg, params, replicas=2, max_batch=2,
+                        clock=ManualClock(),
+                        config=FleetConfig(heartbeat_timeout_s=0.05,
+                                           backoff_base_s=0.02, tick_s=0.01),
+                        autotune=True,
+                        tuner_config=AutoTuneConfig(ladder_min_prompts=4))
+    reqs_t = _requests(cfg, 12, seed=22, max_new=4)
+    done_t = tuned.generate(reqs_t)
+    assert all(r.done for r in done_t)
+    s = tuned.stats()
+    assert s["autotune"] is True
+    assert s["completed"] == 12 and s["failed"] == 0
+    # at least one replica saw enough prompts to install a quantile ladder
+    tuned_reps = [v for v in s["replicas"].values()
+                  if v["bucket_ladder"] is not None]
+    assert tuned_reps and all(v["retunes"] >= 1 for v in tuned_reps)
+    # recalibration stayed inert at dt == 0: shared model untouched
+    assert runtime.cost_model() is model_before
+    # full decision records (with measurements) live on each engine
+    for rep in tuned.replicas:
+        at = rep.engine.latency_stats()["autotune"]
+        assert at["enabled"] is True
+        for d in at["decisions"]:
+            assert d["measurement"] and "rule" in d["measurement"]
+    # A/B: the static fleet serves the same seeds to identical streams
+    static = _fleet(cfg, params)
+    reqs_s = _requests(cfg, 12, seed=22, max_new=4)
+    static.generate(reqs_s)
+    assert static.stats()["autotune"] is False
+    assert [r.out for r in reqs_t] == [r.out for r in reqs_s]
+
+
 def test_engine_wave_enqueue_into_live_wave():
     """Requests can join a running wave (the fleet dispatch path) and are
     admitted into freed slots with the usual single-prefill batching."""
