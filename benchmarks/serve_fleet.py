@@ -172,6 +172,14 @@ def run_once(cfg, params, *, routing: str, faults: bool, n: int, rate: float,
             router.tick()
         dur = router.clock.now() - t0
         s = router.stats()
+        if s["completed"] == 0:
+            # an arm that served nothing has NaN percentiles (never a
+            # fake-perfect 0.0) — and NaN fails every <= comparison, so
+            # the p99 gates would silently become vacuous. Die loudly.
+            raise RuntimeError(
+                f"{label}: arm completed 0 requests (admitted={admitted}, "
+                f"arrival_shed={arrival_shed}, failed={s['failed']}) — "
+                f"empty arms have no percentiles and cannot be gated")
         row = {"label": label, "routing": routing, "faults": faults,
                "autotune": autotune,
                "arrivals": n, "admitted": admitted,

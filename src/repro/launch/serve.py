@@ -17,6 +17,11 @@ persistent stack kernel (one pallas_call per step), ``auto`` lets the
 plan pick the cheapest legal backend. The resolved prefill/decode
 backends are printed with the latency stats.
 
+``--async`` serves through the asyncio front-end
+(``repro.serve.async_frontend``): one client coroutine per request over a
+FleetRouter — solo (``--replicas 1``) or fleet — with token streams
+bitwise-identical to the synchronous path.
+
 Fleet mode: ``--routing`` picks depth-aware vs static round-robin
 dispatch; ``--inject-faults`` runs a seeded kill/restore + slow schedule
 under a deterministic ManualClock (virtual time, zero sleeps) and prints
@@ -81,6 +86,13 @@ def main(argv=None):
     p.add_argument("--routing", choices=("depth", "static"), default="depth",
                    help="fleet dispatch policy: measured queue-depth scoring "
                         "vs static round-robin")
+    p.add_argument("--async", dest="use_async", action="store_true",
+                   help="serve through the asyncio front-end "
+                        "(repro.serve.async_frontend): one client coroutine "
+                        "per request over a FleetRouter — works solo "
+                        "(--replicas 1) and fleet; token streams are "
+                        "bitwise-identical to the synchronous path "
+                        "(cell families only; see docs/serving.md)")
     p.add_argument("--autotune", action="store_true",
                    help="attach an online AutoTuner (repro.serve.autotune): "
                         "wave size from the measured batch-latency curve, "
@@ -116,7 +128,12 @@ def main(argv=None):
                         .astype(np.int32),
                         max_new_tokens=args.max_new)
                 for _ in range(args.requests)]
-    if args.replicas > 1:
+    if args.replicas > 1 or args.use_async:
+        if not is_cell:
+            p.error("--async/--replicas>1 serve through the FleetRouter, "
+                    "which is cell-family only")
+        # --async with --replicas 1 is the solo path through the same
+        # front-end: one replica behind the asyncio transport
         return _serve_fleet(cfg, params, reqs, args)
     tuner = None
     if args.autotune:
@@ -180,7 +197,13 @@ def _serve_fleet(cfg, params, reqs, args):
                          bucket_min=args.bucket_min, clock=clock,
                          config=FleetConfig(routing=args.routing),
                          injector=injector, autotune=args.autotune)
-    done = router.generate(reqs)
+    if args.use_async:
+        from repro.serve.async_frontend import run_clients
+        done = run_clients(router, reqs)
+        print(f"async front-end: {len(reqs)} concurrent client coroutines "
+              f"over {args.replicas} replica(s)")
+    else:
+        done = router.generate(reqs)
     for i, r in enumerate(done):
         print(f"req{i}: {len(r.out)} tokens -> {r.out[:8]}...")
     s = router.stats()

@@ -1,0 +1,383 @@
+"""Asyncio front-end for the serving fleet: concurrent clients over the
+cooperative :class:`~repro.serve.fleet.FleetRouter` scheduler.
+
+The router is a deterministic single-threaded scheduler — ``submit()``
+enqueues, ``tick()`` advances the whole fleet one round — and until now
+every caller had to pump ``tick()`` itself (the ROADMAP's open "real
+async transport" item). :class:`AsyncFleetClient` closes that gap: it
+owns the tick loop in ONE background asyncio task and exposes the
+coroutine surface actual concurrent clients need:
+
+* **``submit()`` / ``generate()`` coroutines** — any number of client
+  coroutines submit concurrently; typed admission control surfaces
+  naturally (``FleetRejected`` raises into the awaiting client; with
+  ``wait=True`` a full queue becomes async backpressure instead).
+* **Per-token streaming** — ``async for tok in handle`` yields tokens as
+  the fleet decodes them, not only at completion. Mid-flight tokens are
+  read from the ticket's live flights; because greedy decode is
+  deterministic, every flight (retries and hedges included) produces the
+  same prefix, so the stream can follow whichever flight is furthest
+  ahead and never emits a token the final result won't contain.
+* **A thread off-ramp for the jit-bound step** — each ``tick()`` (which
+  runs the blocking ``gru_wave_step`` on every live replica) executes on
+  a dedicated single worker thread via ``run_in_executor``, so the event
+  loop never stalls on device compute. EVERY router call (submit /
+  cancel / tick) is serialized through that same one-worker executor:
+  the router stays the single-threaded scheduler it was designed to be,
+  and no locks are added to its hot path.
+* **Client-disconnect propagation** — cancelling the consuming task (or
+  abandoning the token stream) routes into
+  :meth:`FleetRouter.cancel`: the ticket leaves the queue, its wave
+  lanes and hedged duplicates are freed, and ``cancelled`` is counted —
+  exactly the synchronous cancellation semantics, driven by
+  ``asyncio.CancelledError``.
+* **Graceful drain/shutdown** — ``async with`` (or ``aclose()``) stops
+  accepting new work, pumps the scheduler until nothing is outstanding,
+  then stops the tick task and joins the worker thread.
+
+Determinism: the front-end adds no timing of its own. All fleet timing
+still flows through the router's injectable Clock — under a
+``ManualClock`` the scheduler task ticks back-to-back with
+``asyncio.sleep(0)`` yields only (zero wall-clock sleeps, tier-1 safe),
+and the deterministic FaultInjector matrix runs unchanged under the
+async loop; under a ``SystemClock``, ``tick_interval_s`` optionally
+paces the loop. When the fleet has no outstanding work the scheduler
+parks on an event (no polling) until a submit, disconnect, or close
+wakes it.
+
+Token streams are bitwise-identical to the synchronous path: the router
+mechanics are untouched, and per-request greedy decode does not depend
+on admission interleaving (asserted in ``tests/test_serve_async.py``).
+
+See ``docs/serving.md`` ("Async front-end") and
+``examples/serve_async.py`` for the N-concurrent-clients shape.
+"""
+from __future__ import annotations
+
+import asyncio
+from concurrent.futures import ThreadPoolExecutor
+from typing import AsyncIterator, List, Optional, Sequence
+
+from repro.distributed.fault_tolerance import ManualClock
+from repro.serve.engine import Request
+from repro.serve.fleet import FleetRejected, FleetRouter, FleetTicket
+
+_DONE = object()                     # end-of-stream sentinel
+
+
+class AsyncTicket:
+    """One client's handle on an admitted request: the underlying
+    :class:`FleetTicket` plus an async token stream. Single consumer:
+    iterate it (``async for tok in handle``) or ``await handle.result()``
+    to drain to completion. Dropping the iterator mid-stream (task
+    cancellation, ``break`` + close) counts as a client disconnect and
+    cancels the request fleet-wide."""
+
+    def __init__(self, client: "AsyncFleetClient", ticket: FleetTicket):
+        self._client = client
+        self.ticket = ticket
+        self.request = ticket.request
+        self._q: asyncio.Queue = asyncio.Queue()
+        self._emitted = 0            # tokens already pushed to the stream
+
+    @property
+    def id(self) -> int:
+        return self.ticket.id
+
+    @property
+    def status(self) -> str:
+        return self.ticket.status
+
+    def __aiter__(self) -> AsyncIterator[int]:
+        return self._tokens()
+
+    async def _tokens(self) -> AsyncIterator[int]:
+        try:
+            while True:
+                item = await self._q.get()
+                if item is _DONE:
+                    return
+                if isinstance(item, BaseException):
+                    raise item
+                yield item
+        except (asyncio.CancelledError, GeneratorExit):
+            # the consumer went away mid-stream: a client disconnect.
+            # No awaits here (we are unwinding a cancelled frame) — just
+            # hand the ticket to the scheduler task, which cancels it
+            # through the router before its next tick.
+            self._client._abandon(self)
+            raise
+
+    async def result(self) -> Request:
+        """Drain the stream and return the completed request (tokens in
+        ``request.out``). Raises :class:`FleetRejected` if the ticket was
+        shed (lapsed deadline) or failed (retry budget) mid-flight."""
+        async for _ in self:
+            pass
+        return self.request
+
+
+class AsyncFleetClient:
+    """Asyncio transport over one :class:`FleetRouter`. Use as an async
+    context manager::
+
+        async with AsyncFleetClient(router) as client:
+            handle = await client.submit(req)          # or client.generate
+            async for tok in handle: ...
+
+    ``tick_interval_s`` paces the scheduler under a real clock (ignored
+    under ``ManualClock``, where ticks ARE virtual time and run
+    back-to-back). ``max_stall_ticks`` bounds a fleet that stops making
+    progress (e.g. a kill with no restore and no survivor) with a loud
+    error into every live stream instead of a silent hang — the async
+    analogue of ``run_until_done(max_ticks=...)``."""
+
+    def __init__(self, router: FleetRouter, *, tick_interval_s: float = 0.0,
+                 max_stall_ticks: int = 200_000):
+        self.router = router
+        self.tick_interval_s = float(tick_interval_s)
+        self.max_stall_ticks = int(max_stall_ticks)
+        # ONE worker: every router call serializes through this thread,
+        # which is what keeps the lockless router sound under asyncio
+        self._exec = ThreadPoolExecutor(max_workers=1,
+                                        thread_name_prefix="fleet-tick")
+        self._streams: dict = {}             # ticket id -> AsyncTicket
+        self._abandoned: List[FleetTicket] = []
+        self._task: Optional[asyncio.Task] = None
+        self._wake: Optional[asyncio.Event] = None
+        self._idle: Optional[asyncio.Event] = None
+        self._slot_free: Optional[asyncio.Event] = None
+        self._accepting = True
+        self._closed = False
+
+    # -- lifecycle -----------------------------------------------------------
+
+    async def __aenter__(self) -> "AsyncFleetClient":
+        await self.start()
+        return self
+
+    async def __aexit__(self, *exc) -> None:
+        await self.aclose(drain=exc == (None, None, None))
+
+    async def start(self) -> None:
+        """Start the background scheduler task (idempotent)."""
+        if self._task is not None:
+            return
+        self._wake = asyncio.Event()
+        self._idle = asyncio.Event()
+        self._idle.set()
+        self._slot_free = asyncio.Event()
+        self._task = asyncio.get_running_loop().create_task(
+            self._scheduler(), name="fleet-scheduler")
+
+    async def drain(self) -> None:
+        """Wait until the fleet has nothing outstanding (queued or
+        in-flight). New submits are still accepted — this is a barrier,
+        not a shutdown."""
+        if self._task is None:
+            return
+        self._wake.set()
+        await self._idle.wait()
+
+    async def aclose(self, drain: bool = True) -> None:
+        """Graceful shutdown: refuse new submits, optionally drain every
+        outstanding request to completion, then stop the scheduler task
+        and join the tick worker thread. ``drain=False`` abandons
+        outstanding work (their streams end with an error)."""
+        self._accepting = False
+        if self._task is None:
+            self._exec.shutdown(wait=True)
+            return
+        if drain:
+            await self.drain()
+        self._closed = True
+        self._wake.set()
+        try:
+            await self._task
+        finally:
+            self._task = None
+            self._exec.shutdown(wait=True)
+        if not drain:
+            self._broadcast(FleetRejected(
+                "shutdown", "client closed without draining"))
+
+    # -- client surface ------------------------------------------------------
+
+    async def submit(self, request: Request,
+                     deadline_s: Optional[float] = None,
+                     wait: bool = True) -> AsyncTicket:
+        """Admit one request; returns the :class:`AsyncTicket` stream
+        handle. ``FleetRejected`` raises into the caller exactly as the
+        sync ``submit`` does; with ``wait=True`` (default) a full queue
+        is treated as backpressure — the coroutine parks until a slot
+        frees (completions/cancellations signal it) and retries, never
+        busy-spins. ``deadline_infeasible`` always raises."""
+        if not self._accepting:
+            raise RuntimeError("AsyncFleetClient is closing")
+        await self.start()
+        loop = asyncio.get_running_loop()
+        while True:
+            fut = loop.run_in_executor(
+                self._exec, self.router.submit, request, deadline_s)
+            try:
+                ticket = await asyncio.shield(fut)
+                break
+            except asyncio.CancelledError:
+                # the client disconnected DURING admission: the executor
+                # call cannot be recalled, so if it landed, hand the
+                # ticket straight to the scheduler for cancellation —
+                # the fleet must not serve a ghost with no consumer
+                def _cleanup(f):
+                    if not f.cancelled() and f.exception() is None:
+                        self._abandoned.append(f.result())
+                        if self._wake is not None:
+                            self._wake.set()
+                fut.add_done_callback(_cleanup)
+                raise
+            except FleetRejected as e:
+                if not wait or e.reason != "queue_full":
+                    raise
+                self._slot_free.clear()
+                self._wake.set()         # keep the scheduler serving
+                await self._slot_free.wait()
+        handle = AsyncTicket(self, ticket)
+        self._streams[ticket.id] = handle
+        self._idle.clear()
+        self._wake.set()
+        return handle
+
+    async def generate(self, request: Request,
+                       deadline_s: Optional[float] = None) -> Request:
+        """Submit + drain: returns the completed request (tokens in
+        ``request.out``). Cancelling the awaiting task mid-stream
+        propagates a client disconnect into :meth:`FleetRouter.cancel`."""
+        handle = await self.submit(request, deadline_s=deadline_s)
+        return await handle.result()
+
+    async def cancel(self, handle: AsyncTicket) -> bool:
+        """Explicitly cancel an outstanding request (the programmatic
+        face of a disconnect). The handle's stream ends early; returns
+        what :meth:`FleetRouter.cancel` returned."""
+        loop = asyncio.get_running_loop()
+        ok = await loop.run_in_executor(
+            self._exec, self.router.cancel, handle.ticket)
+        self._wake.set()
+        return bool(ok)
+
+    def _abandon(self, handle: AsyncTicket) -> None:
+        """Mid-stream consumer disappearance (task cancelled, iterator
+        closed). Synchronous on purpose — called while unwinding a
+        cancelled frame — the scheduler task performs the actual
+        ``router.cancel`` before its next tick."""
+        self._streams.pop(handle.ticket.id, None)
+        self._abandoned.append(handle.ticket)
+        if self._wake is not None:
+            self._wake.set()
+
+    # -- the scheduler task --------------------------------------------------
+
+    def _progress_sig(self) -> tuple:
+        c = self.router.counters
+        return (c["completed"], c["failed"], c["cancelled"],
+                sum(self.router.sheds.values()), self.router._outstanding)
+
+    async def _scheduler(self) -> None:
+        """The one owner of the router's tick loop. Each round: flush
+        pending disconnects into ``router.cancel``, run one ``tick()``
+        on the worker thread, publish freshly decoded tokens to every
+        live stream, signal freed queue slots, then yield. Parks (no
+        polling) whenever nothing is outstanding."""
+        loop = asyncio.get_running_loop()
+        manual = isinstance(self.router.clock, ManualClock)
+        sig, stalled = self._progress_sig(), 0
+        while True:
+            while self._abandoned:
+                t = self._abandoned.pop()
+                await loop.run_in_executor(self._exec, self.router.cancel, t)
+            if self.router._outstanding == 0:
+                self._idle.set()
+                self._slot_free.set()
+                if self._closed:
+                    return
+                self._wake.clear()
+                await self._wake.wait()
+                continue
+            self._idle.clear()
+            await loop.run_in_executor(self._exec, self.router.tick)
+            self._publish()
+            if self.router._outstanding < self.router.config.queue_limit:
+                self._slot_free.set()
+            now_sig = self._progress_sig()
+            stalled = 0 if now_sig != sig else stalled + 1
+            sig = now_sig
+            if stalled > self.max_stall_ticks:
+                err = RuntimeError(
+                    f"fleet made no progress in {self.max_stall_ticks} "
+                    f"ticks: {self.router._outstanding} outstanding, alive="
+                    f"{[r.name for r in self.router.replicas if r.alive]}")
+                self._broadcast(err)
+                self._idle.set()
+                raise err
+            if self.tick_interval_s > 0.0 and not manual:
+                await asyncio.sleep(self.tick_interval_s)
+            else:
+                # yield so client coroutines can submit/consume between
+                # ticks; never a wall-clock sleep under ManualClock
+                await asyncio.sleep(0)
+
+    def _publish(self) -> None:
+        """Move freshly decoded tokens into each live stream. Runs on the
+        event loop between executor calls, so it never races a tick.
+        In-flight tokens come from the ticket's furthest-ahead flight
+        (all flights of one ticket share a deterministic prefix); final
+        status pushes the terminal sentinel or a typed error."""
+        finished = []
+        for tid, handle in self._streams.items():
+            t = handle.ticket
+            if t.status == "done":
+                out = t.request.out
+                for tok in out[handle._emitted:]:
+                    handle._q.put_nowait(tok)
+                handle._emitted = len(out)
+                handle._q.put_nowait(_DONE)
+                finished.append(tid)
+            elif t.status in ("shed", "failed"):
+                handle._q.put_nowait(FleetRejected(
+                    t.reason or t.status,
+                    f"request {tid} {t.status} mid-flight"))
+                finished.append(tid)
+            elif t.status == "cancelled":
+                # disconnect already initiated client-side (or explicit
+                # cancel): end the stream quietly, status says why
+                handle._q.put_nowait(_DONE)
+                finished.append(tid)
+            elif t.flights:
+                best = max((fl.clone.out for fl in t.flights), key=len)
+                if len(best) > handle._emitted:
+                    for tok in best[handle._emitted:]:
+                        handle._q.put_nowait(tok)
+                    handle._emitted = len(best)
+        for tid in finished:
+            self._streams.pop(tid, None)
+
+    def _broadcast(self, err: BaseException) -> None:
+        for handle in self._streams.values():
+            handle._q.put_nowait(err)
+        self._streams.clear()
+
+
+def run_clients(router: FleetRouter, requests: Sequence[Request],
+                deadline_s: Optional[float] = None) -> List[Request]:
+    """Synchronous convenience: serve ``requests`` through the async
+    front-end as N concurrent client coroutines (one per request) and
+    return them completed — the async twin of ``FleetRouter.generate``,
+    used by ``launch/serve.py --async``. Must not be called from inside
+    a running event loop (it owns ``asyncio.run``)."""
+    async def _main():
+        async with AsyncFleetClient(router) as client:
+            await asyncio.gather(
+                *(client.generate(r, deadline_s=deadline_s)
+                  for r in requests))
+
+    asyncio.run(_main())
+    return list(requests)

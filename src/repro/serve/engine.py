@@ -111,6 +111,17 @@ class Request:
     t_finish: Optional[float] = None
 
 
+def _pct(xs, q: float) -> float:
+    """Percentile with honest empties: no history -> NaN, never 0.0 (an
+    engine that served nothing must not report a perfect p99 — a 0.0
+    there can silently pass ratio-based CI gates)."""
+    return float(np.percentile(np.asarray(xs), q)) if len(xs) else float("nan")
+
+
+def _mean(xs) -> float:
+    return float(np.mean(np.asarray(xs))) if len(xs) else float("nan")
+
+
 def bucket_len(S: int, minimum: int = 8) -> int:
     """Next power of two >= max(S, minimum): the prefill jit key."""
     b = max(minimum, 1)
@@ -677,11 +688,14 @@ class ServeEngine:
         actually traced with). Compile
         steps are excluded per decode-jit key at record time; prefill
         timings INCLUDE each bucket's compile (cold-start cost is part of
-        the prefill story)."""
-        ts = np.array(self.step_times or [0.0])
-        pf = np.array(self.prefill_times or [0.0])
-        qw = np.array(self.queue_waits or [0.0])
-        ee = np.array(self.e2e_times or [0.0])
+        the prefill story). Empty histories report NaN, never 0.0 — an
+        engine that served nothing has no percentiles (``steps`` /
+        ``requests`` / ``prefills`` say how much history backs each
+        number)."""
+        ts = self.step_times
+        pf = self.prefill_times
+        qw = self.queue_waits
+        ee = self.e2e_times
         per_backend: Dict[str, int] = {}
         for b in self.decode_backends:
             if b is not None:
@@ -704,21 +718,21 @@ class ServeEngine:
                 # benchmark's honest p99 (per-step decode percentiles alone
                 # hide queueing delay entirely)
                 "requests": len(self.e2e_times),
-                "queue_wait_mean_s": float(qw.mean()),
-                "queue_wait_p50_s": float(np.percentile(qw, 50)),
-                "queue_wait_p99_s": float(np.percentile(qw, 99)),
-                "e2e_mean_s": float(ee.mean()),
-                "e2e_p50_s": float(np.percentile(ee, 50)),
-                "e2e_p99_s": float(np.percentile(ee, 99)),
+                "queue_wait_mean_s": _mean(qw),
+                "queue_wait_p50_s": _pct(qw, 50),
+                "queue_wait_p99_s": _pct(qw, 99),
+                "e2e_mean_s": _mean(ee),
+                "e2e_p50_s": _pct(ee, 50),
+                "e2e_p99_s": _pct(ee, 99),
                 # the datapath precision the latest resolved decode backend
                 # serves (int8 for the *_q8 backends, float32 otherwise)
                 "served_dtype": runtime.backend_dtype(self.decode_backend),
-                "mean_s": float(ts.mean()),
-                "p50_s": float(np.percentile(ts, 50)),
-                "p90_s": float(np.percentile(ts, 90)),
-                "p99_s": float(np.percentile(ts, 99)),
-                "max_s": float(ts.max()),
+                "mean_s": _mean(ts),
+                "p50_s": _pct(ts, 50),
+                "p90_s": _pct(ts, 90),
+                "p99_s": _pct(ts, 99),
+                "max_s": float(max(ts)) if ts else float("nan"),
                 "steps": len(ts),
-                "prefill_mean_s": float(pf.mean()),
-                "prefill_p99_s": float(np.percentile(pf, 99)),
+                "prefill_mean_s": _mean(pf),
+                "prefill_p99_s": _pct(pf, 99),
                 "prefills": len(self.prefill_times)}

@@ -36,11 +36,28 @@ Architecture (one cooperative scheduler, zero wall-clock sleeps):
   :meth:`FleetReplica.restart` rebuilds its engine, which re-runs
   ``prepare()`` against the replica's placement.
 * **Cancellation** — :meth:`FleetRouter.cancel` propagates a client
-  disconnect end to end: the ticket leaves the queue, every live flight's
-  wave lane is freed (``gru_wave_cancel``) including any hedged
+  disconnect end to end: the ticket is tombstoned out of the queue (an
+  O(1) status flip; ``_dispatch_queued`` lazily skips and drops
+  non-queued entries, so the admission deque is never scanned — large
+  queues are the normal case under the async front-end), every live
+  flight's wave lane is freed (``gru_wave_cancel``) including any hedged
   duplicate, and the ticket lands in ``status="cancelled"``
   (``reason="client_disconnect"``) — never counted as completed or
   failed.
+* **Deadlines** — enforced end to end, not just at admission: a queued
+  ticket whose deadline lapses is shed before dispatch, and an IN-FLIGHT
+  ticket past its budget is shed mid-decode — its wave lanes (hedges
+  included) are cancelled so no replica keeps spending decode steps on a
+  request that can only be returned late. Both count a ``"deadline"``
+  shed.
+* **Async transport** — :class:`repro.serve.async_frontend.AsyncFleetClient`
+  wraps this router in an asyncio front-end: a background scheduler task
+  owns the ``tick()`` loop (each tick runs on a single worker thread so
+  the jit-bound ``gru_wave_step`` never stalls the event loop), clients
+  get per-token async streams, and coroutine cancellation wires client
+  disconnects into :meth:`cancel`. The router itself stays a
+  single-threaded cooperative scheduler — the front-end serializes every
+  router call through that one worker thread.
 * **Autotuning** (``autotune=True``) — one
   :class:`~repro.serve.autotune.AutoTuner` per replica closes the loop
   from that replica's measured serving back into its engine's wave size
@@ -60,7 +77,13 @@ Simulated-time semantics (``ManualClock``): a replica with
 genuinely slower, so hedges genuinely win) and records ``tick_s * f`` as
 its step time. Under a real clock the fleet is single-process, so
 ``slow``/``delay`` events inflate the *recorded* step signal (detection
-and mitigation are real; the slowdown itself is simulated).
+and mitigation are real; the slowdown itself is simulated). Virtual time
+advances ``tick_s`` per *service* tick only: ``generate()``'s
+backpressure pump — ticks spent merely waiting for a queue slot — runs
+``tick(advance_time=False)``, so waiting for admission never counts as
+service time against queued tickets' deadlines or retry backoffs (the
+clock still moves when a pump tick can make no progress at all, e.g.
+every replica dead awaiting a scheduled restore — genuine waiting).
 
 See ``docs/serving.md`` for the failure-mode table mapping each event to
 its detection signal, mitigation, and covering test.
@@ -80,6 +103,17 @@ from repro.distributed.fault_tolerance import (Clock, HeartbeatMonitor,
 from repro.distributed.sharding import ShardCtx
 from repro.serve.autotune import AutoTuneConfig, AutoTuner
 from repro.serve.engine import Request, ServeEngine
+
+
+def _pct(xs: List[float], q: float) -> float:
+    """Percentile that refuses to invent numbers: empty history is NaN,
+    never 0.0 — a replica/arm that served nothing must not report a
+    perfect p99 (which could silently pass a latency-ratio CI gate)."""
+    return float(np.percentile(np.asarray(xs), q)) if xs else float("nan")
+
+
+def _mean(xs: List[float]) -> float:
+    return float(np.mean(np.asarray(xs))) if xs else float("nan")
 
 
 class FleetRejected(RuntimeError):
@@ -306,6 +340,7 @@ class FleetRouter:
         self._by_id: Dict[int, FleetTicket] = {}
         self._next_id = 0
         self._queue: deque = deque()
+        self._deadlined: List[FleetTicket] = []  # outstanding w/ deadline_s
         self._outstanding = 0
         self._rr = -1                # static round-robin cursor
         self.ticks = 0
@@ -346,6 +381,8 @@ class FleetRouter:
         self._by_id[t.id] = t
         self.tickets.append(t)
         self._queue.append(t)
+        if deadline_s is not None:
+            self._deadlined.append(t)
         self._outstanding += 1
         self.counters["submitted"] += 1
         return t
@@ -359,27 +396,38 @@ class FleetRouter:
         :class:`Request`. Returns False when the ticket is not
         outstanding (already done / shed / failed / cancelled): a
         disconnect after completion is a no-op — the result already
-        landed in ``request.out``."""
+        landed in ``request.out``.
+
+        A still-queued ticket is TOMBSTONED, not removed: the status flip
+        to ``"cancelled"`` is O(1) and ``_dispatch_queued`` drops the
+        stale deque entry on its next pass (it already pops everything
+        each tick and skips non-queued tickets). The old
+        ``t in self._queue`` / ``remove`` pair scanned the whole deque
+        per cancel — O(queue_limit) per disconnect, which the async
+        front-end turns into the common case."""
         t = self._find_ticket(handle)
         if t is None or not t.outstanding:
             return False
-        if t in self._queue:
-            self._queue.remove(t)
-        for fl in list(t.flights):
-            # the lane frees immediately; a dead replica's engine is about
-            # to be rebuilt anyway, so a failed wave-cancel there is fine
-            fl.replica.engine.gru_wave_cancel(fl.clone)
-            if fl in fl.replica.flights:
-                fl.replica.flights.remove(fl)
-            t.flights.remove(fl)
-            if fl.hedge:
-                self.counters["hedges_cancelled"] += 1
+        self._release_flights(t)
         t.status = "cancelled"
         t.reason = "client_disconnect"
         t.t_done = self.clock.now()
         self._outstanding -= 1
         self.counters["cancelled"] += 1
         return True
+
+    def _release_flights(self, t: FleetTicket) -> None:
+        """Free every live lane a ticket holds (cancel + deadline-shed
+        path): the wave lane releases immediately — a dead replica's
+        engine is about to be rebuilt anyway, so a failed wave-cancel
+        there is fine — and cancelled hedges are counted."""
+        for fl in list(t.flights):
+            fl.replica.engine.gru_wave_cancel(fl.clone)
+            if fl in fl.replica.flights:
+                fl.replica.flights.remove(fl)
+            t.flights.remove(fl)
+            if fl.hedge:
+                self.counters["hedges_cancelled"] += 1
 
     def _find_ticket(self, handle) -> Optional[FleetTicket]:
         if isinstance(handle, FleetTicket):
@@ -401,9 +449,19 @@ class FleetRouter:
         for r in requests:
             pumped = 0
             # a full queue is backpressure here, not overload: pump the
-            # scheduler until a slot frees instead of shedding own work
+            # scheduler until a slot frees instead of shedding own work.
+            # Waiting for admission is NOT service time: these ticks run
+            # with advance_time=False, so the caller's already-queued
+            # tickets don't burn deadline budget (and backoff gates don't
+            # expire) merely because the caller is still submitting. When
+            # a pump tick performs no decode step at all (every replica
+            # dead/gated — the fleet genuinely cannot progress without
+            # time moving), the clock advances normally so scheduled
+            # restores and retry backoffs can fire.
             while self._outstanding >= self.config.queue_limit:
-                self.tick()
+                if self.tick(advance_time=False) == 0 and isinstance(
+                        self.clock, ManualClock):
+                    self.clock.advance(self.config.tick_s)
                 pumped += 1
                 if pumped > 200_000:
                     raise RuntimeError(
@@ -428,12 +486,19 @@ class FleetRouter:
                     f"{sum(t.outstanding for t in self.tickets)} outstanding,"
                     f" alive={[r.name for r in self.replicas if r.alive]}")
 
-    def tick(self) -> None:
+    def tick(self, advance_time: bool = True) -> int:
         """One scheduler round: advance virtual time, apply due faults,
         beat/detect/requeue, shed lapsed deadlines, dispatch, step every
-        live replica one decode step, hedge stragglers."""
+        live replica one decode step, hedge stragglers. Returns the
+        number of decode steps performed this round.
+
+        ``advance_time=False`` (the ``generate()`` admission pump) runs
+        the full round without consuming virtual time under a ManualClock
+        — waiting for a queue slot is not service time, so it must not
+        age queued tickets' deadlines or expire retry backoffs. Under a
+        SystemClock the flag is inert (real time is not ours to stop)."""
         self.ticks += 1
-        if isinstance(self.clock, ManualClock):
+        if advance_time and isinstance(self.clock, ManualClock):
             self.clock.advance(self.config.tick_s)
         now = self.clock.now()
         if self.injector is not None:
@@ -448,10 +513,12 @@ class FleetRouter:
                 self._on_replica_down(rep, now)
         self._shed_lapsed(now)
         self._dispatch_queued(now)
+        stepped = 0
         for rep in self.replicas:
-            self._step_replica(rep)
+            stepped += self._step_replica(rep)
         if self.config.hedge:
             self._hedge_stragglers(now)
+        return stepped
 
     def _apply_event(self, ev: FaultEvent) -> None:
         rep = self._by_name[ev.replica]
@@ -499,14 +566,31 @@ class FleetRouter:
         rep.flights = []
 
     def _shed_lapsed(self, now: float) -> None:
-        for t in list(self._queue):
-            if (t.status == "queued" and t.deadline_s is not None
-                    and now - t.t_submit > t.deadline_s):
+        """End-to-end deadline enforcement: shed every outstanding ticket
+        whose submit->now age exceeds its deadline — queued tickets are
+        tombstoned out of the deque (lazy drop in ``_dispatch_queued``),
+        and IN-FLIGHT tickets have their wave lanes (hedges included)
+        cancelled so no replica keeps spending decode steps on a request
+        that can only be returned late. Only tickets submitted with a
+        deadline live on ``_deadlined`` (resolved ones are pruned here),
+        so this never scans the admission deque or the full ticket
+        history."""
+        if not self._deadlined:
+            return
+        still: List[FleetTicket] = []
+        for t in self._deadlined:
+            if not t.outstanding:
+                continue                     # resolved some other way
+            if now - t.t_submit > t.deadline_s:
+                self._release_flights(t)     # no-op for queued tickets
                 t.status = "shed"
                 t.reason = "deadline"
-                self._queue.remove(t)
+                t.t_done = now
                 self._outstanding -= 1
                 self.sheds["deadline"] = self.sheds.get("deadline", 0) + 1
+            else:
+                still.append(t)
+        self._deadlined = still
 
     def _dispatch_queued(self, now: float) -> None:
         alive = [r for r in self.replicas if r.alive]
@@ -516,7 +600,9 @@ class FleetRouter:
         while self._queue:
             t = self._queue.popleft()
             if t.status != "queued":
-                continue
+                continue                     # tombstone (cancelled/shed):
+                                             # lazily dropped here, never
+                                             # scanned out of the deque
             if t.not_before > now:
                 held.append(t)                   # backoff not elapsed
                 continue
@@ -538,15 +624,17 @@ class FleetRouter:
             self._queue_waits.append(now - t.t_submit)
         rep.engine.gru_wave_enqueue([clone])
 
-    def _step_replica(self, rep: FleetReplica) -> None:
+    def _step_replica(self, rep: FleetReplica) -> int:
+        """Advance one replica one decode step; returns 1 if it stepped
+        (the tick's service-progress signal), 0 otherwise."""
         if not rep.alive or rep.engine.gru_wave_active() == 0:
-            return
+            return 0
         sim = isinstance(self.clock, ManualClock)
         if sim and rep.slow_factor > 1.0:
             # a straggler genuinely runs fewer steps per unit virtual time
             rep._sim_credit += 1.0 / rep.slow_factor
             if rep._sim_credit < 1.0:
-                return
+                return 0
             rep._sim_credit -= 1.0
         t0 = self.clock.now()
         finished = rep.engine.gru_wave_step()
@@ -563,6 +651,7 @@ class FleetRouter:
                 if fl.clone is clone:
                     self._resolve(fl)
                     break
+        return 1
 
     def _resolve(self, fl: _Flight) -> None:
         """First finisher wins the ticket: copy the clone's stream into the
@@ -670,9 +759,10 @@ class FleetRouter:
     def stats(self) -> dict:
         """Fleet-level accounting + per-replica engine latency stats. The
         e2e percentiles here include fleet queueing, retries and hedging —
-        the honest per-request numbers the paper's deadline is judged by."""
-        e2e = np.array(self._e2e or [0.0])
-        qw = np.array(self._queue_waits or [0.0])
+        the honest per-request numbers the paper's deadline is judged by.
+        A fleet that completed nothing reports NaN percentiles, never a
+        fake-perfect 0.0 (see ``_pct``) — consumers must check
+        ``completed`` before trusting the tails."""
         per_replica = {}
         for rep in self.replicas:
             ls = rep.engine.latency_stats()
@@ -694,9 +784,9 @@ class FleetRouter:
                 "ticks": self.ticks,
                 "routing": self.config.routing,
                 "autotune": self.autotune,
-                "e2e_mean_s": float(e2e.mean()),
-                "e2e_p50_s": float(np.percentile(e2e, 50)),
-                "e2e_p99_s": float(np.percentile(e2e, 99)),
-                "queue_wait_p50_s": float(np.percentile(qw, 50)),
-                "queue_wait_p99_s": float(np.percentile(qw, 99)),
+                "e2e_mean_s": _mean(self._e2e),
+                "e2e_p50_s": _pct(self._e2e, 50),
+                "e2e_p99_s": _pct(self._e2e, 99),
+                "queue_wait_p50_s": _pct(self._queue_waits, 50),
+                "queue_wait_p99_s": _pct(self._queue_waits, 99),
                 "replicas": per_replica}

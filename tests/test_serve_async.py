@@ -1,0 +1,312 @@
+"""The asyncio front-end, exercised deterministically.
+
+Every test drives the same ManualClock'd FleetRouter as the synchronous
+fleet suite — ``asyncio.run`` hosts the event loop, but no wall-clock
+timing leaks in: under a ManualClock the scheduler task ticks
+back-to-back with ``asyncio.sleep(0)`` yields only (zero sleeps, tier-1
+safe), so every interleaving of N client coroutines is reproducible.
+
+Covers the tentpole contracts: concurrent clients' token streams are
+bitwise-identical to the synchronous path, a mid-stream client
+disconnect propagates to ``FleetRouter.cancel`` (queue entry, wave lane,
+hedges) without stalling other clients, queue-full admission becomes
+async backpressure, and the deterministic kill/restore fault matrix
+completes under the async loop with zero drops.
+"""
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.configs.base import GRUConfig, get_smoke_config
+from repro.core.params import init_params
+from repro.distributed.fault_tolerance import ManualClock
+from repro.distributed.sharding import ShardCtx
+from repro.models import api as mapi
+from repro.serve.async_frontend import AsyncFleetClient, run_clients
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.fleet import (FaultEvent, FaultInjector, FleetConfig,
+                               FleetRejected, FleetRouter)
+
+
+def _setup(hidden=12, num_layers=1):
+    cfg = get_smoke_config("gru-jet").replace(
+        gru=GRUConfig(input_dim=5, hidden_dim=hidden, num_classes=5,
+                      seq_len=20, num_layers=num_layers))
+    A = mapi.get_api(cfg)
+    params = init_params(A.specs(cfg), __import__("jax").random.key(0),
+                         cfg.param_dtype)
+    return cfg, params
+
+
+def _requests(cfg, n, seed=0, max_new=4):
+    rng = np.random.default_rng(seed)
+    X = cfg.gru.input_dim
+    return [Request(prompt=rng.normal(size=(3 + i % 4, X))
+                    .astype(np.float32), max_new_tokens=max_new)
+            for i in range(n)]
+
+
+def _fleet(cfg, params, *, replicas=2, injector=None, config=None,
+           max_batch=2):
+    return FleetRouter(cfg, params, replicas=replicas, max_batch=max_batch,
+                       clock=ManualClock(),
+                       config=config or FleetConfig(
+                           heartbeat_timeout_s=0.05, backoff_base_s=0.02,
+                           tick_s=0.01),
+                       injector=injector)
+
+
+def _reference_outs(cfg, params, requests):
+    """Fault-free single-engine oracle for the same prompts."""
+    solo = ServeEngine(cfg, params, ShardCtx(), max_batch=1)
+    outs = []
+    for r in requests:
+        ref = Request(prompt=r.prompt, max_new_tokens=r.max_new_tokens,
+                      eos_id=r.eos_id, stream=r.stream)
+        solo.generate([ref])
+        outs.append(ref.out)
+    return outs
+
+
+# ---------------------------------------------------------------------------
+# bitwise parity: N concurrent client coroutines vs the synchronous path
+# ---------------------------------------------------------------------------
+
+def test_async_streams_bitwise_match_sync_path():
+    """8 concurrent client coroutines each stream their tokens through
+    ``async for``; every stream must be bitwise-equal to the synchronous
+    fleet path AND the fault-free single-engine oracle — admission
+    interleaving must not leak into greedy decode."""
+    cfg, params = _setup()
+    reqs = _requests(cfg, 8, seed=50, max_new=6)
+    streamed = {}
+
+    async def client_coro(client, i, req):
+        handle = await client.submit(req)
+        toks = []
+        async for tok in handle:
+            toks.append(tok)
+        streamed[i] = toks
+
+    async def main():
+        router = _fleet(cfg, params)
+        async with AsyncFleetClient(router) as client:
+            await asyncio.gather(*(client_coro(client, i, r)
+                                   for i, r in enumerate(reqs)))
+        return router
+
+    router = asyncio.run(main())
+    # same prompts through the synchronous one-call surface
+    sync_reqs = _requests(cfg, 8, seed=50, max_new=6)
+    _fleet(cfg, params).generate(sync_reqs)
+    oracle = _reference_outs(cfg, params, reqs)
+    for i, r in enumerate(reqs):
+        assert r.done
+        assert streamed[i] == r.out          # stream == final result
+        assert r.out == sync_reqs[i].out     # async == sync path
+        assert r.out == oracle[i]            # == fault-free oracle
+    s = router.stats()
+    assert s["completed"] == s["submitted"] == 8
+    assert s["failed"] == 0 and s["cancelled"] == 0
+
+
+def test_async_stream_yields_tokens_mid_flight():
+    """Per-token streaming is real streaming: tokens arrive while the
+    ticket is still in flight, not in one burst at completion."""
+    cfg, params = _setup()
+    req = _requests(cfg, 1, seed=51, max_new=16)[0]
+    statuses = []
+
+    async def main():
+        router = _fleet(cfg, params)
+        async with AsyncFleetClient(router) as client:
+            handle = await client.submit(req)
+            async for _ in handle:
+                statuses.append(handle.status)
+        return router
+
+    asyncio.run(main())
+    assert req.done and len(req.out) == len(statuses)
+    assert "inflight" in statuses            # tokens seen mid-decode
+    assert statuses[-1] == "done"
+
+
+# ---------------------------------------------------------------------------
+# client disconnect -> FleetRouter.cancel propagation
+# ---------------------------------------------------------------------------
+
+def test_async_disconnect_cancels_without_stalling_others():
+    """Cancelling a consuming task mid-stream propagates into
+    ``FleetRouter.cancel``: the ticket's wave lane frees, ``cancelled``
+    counts it, its request never completes — and the other concurrent
+    clients finish with oracle-equal streams."""
+    cfg, params = _setup()
+    reqs = _requests(cfg, 4, seed=52, max_new=10)
+
+    async def consumer(client, req, first_token):
+        handle = await client.submit(req)
+        async for _ in handle:
+            first_token.set()
+        return handle
+
+    async def main():
+        router = _fleet(cfg, params)
+        async with AsyncFleetClient(router) as client:
+            first_token = asyncio.Event()
+            victim = asyncio.create_task(consumer(client, reqs[0],
+                                                  first_token))
+            others = [asyncio.create_task(client.generate(r))
+                      for r in reqs[1:]]
+            await first_token.wait()         # victim is mid-stream
+            victim.cancel()
+            res = await asyncio.gather(victim, *others,
+                                       return_exceptions=True)
+            assert isinstance(res[0], asyncio.CancelledError)
+        return router
+
+    router = asyncio.run(main())
+    s = router.stats()
+    assert s["cancelled"] == 1
+    assert s["completed"] == 3 and s["failed"] == 0
+    t = router.tickets[0]
+    assert t.status == "cancelled" and t.reason == "client_disconnect"
+    assert t.flights == []                   # lane freed, nothing racing
+    assert not reqs[0].done
+    survivors = reqs[1:]
+    assert all(r.done for r in survivors)
+    assert [r.out for r in survivors] == _reference_outs(cfg, params,
+                                                         survivors)
+
+
+def test_async_explicit_cancel_ends_stream():
+    """client.cancel(handle) is the programmatic disconnect: the stream
+    ends early (status says why) instead of raising into the consumer."""
+    cfg, params = _setup()
+    req = _requests(cfg, 1, seed=53, max_new=32)[0]
+
+    async def main():
+        router = _fleet(cfg, params)
+        async with AsyncFleetClient(router) as client:
+            handle = await client.submit(req)
+            toks = []
+            async for tok in handle:
+                toks.append(tok)
+                if len(toks) == 2:
+                    assert await client.cancel(handle) is True
+            assert handle.status == "cancelled"
+            assert len(toks) < req.max_new_tokens
+        return router
+
+    router = asyncio.run(main())
+    assert router.stats()["cancelled"] == 1 and not req.done
+
+
+def test_async_cancel_during_admission_leaves_no_ghost():
+    """A client task cancelled while submit() is still on the executor
+    must not leave a ghost request serving with no consumer: whichever
+    side of the admission race the cancel lands on, the ticket ends
+    cancelled and the fleet keeps serving everyone else."""
+    cfg, params = _setup()
+    reqs = _requests(cfg, 2, seed=57, max_new=6)
+
+    async def main():
+        router = _fleet(cfg, params)
+        async with AsyncFleetClient(router) as client:
+            task = asyncio.create_task(client.generate(reqs[0]))
+            await asyncio.sleep(0)           # task is inside submit()
+            task.cancel()
+            res = await asyncio.gather(task, return_exceptions=True)
+            assert isinstance(res[0], asyncio.CancelledError)
+            await client.generate(reqs[1])   # fleet unaffected
+        return router
+
+    router = asyncio.run(main())
+    s = router.stats()
+    assert s["cancelled"] == 1 and not reqs[0].done
+    assert s["completed"] == 1 and reqs[1].done
+
+
+# ---------------------------------------------------------------------------
+# admission: typed rejection + async backpressure
+# ---------------------------------------------------------------------------
+
+def test_async_queue_full_backpressure_and_reject():
+    """With wait=False a full queue raises the same typed FleetRejected
+    as the sync surface; with the default wait=True the submit coroutine
+    parks until a slot frees and every client completes."""
+    cfg, params = _setup()
+    small = FleetConfig(heartbeat_timeout_s=10.0, backoff_base_s=0.02,
+                        tick_s=0.01, queue_limit=2)
+    reqs = _requests(cfg, 6, seed=54, max_new=4)
+
+    async def main():
+        router = _fleet(cfg, params, config=small)
+        async with AsyncFleetClient(router) as client:
+            h0 = await client.submit(reqs[0])
+            h1 = await client.submit(reqs[1])
+            with pytest.raises(FleetRejected) as ei:
+                await client.submit(reqs[2], wait=False)
+            assert ei.value.reason == "queue_full"
+            # backpressured path: all remaining clients park + complete
+            await asyncio.gather(
+                h0.result(), h1.result(),
+                *(client.generate(r) for r in reqs[2:]))
+        return router
+
+    router = asyncio.run(main())
+    assert all(r.done for r in reqs)
+    assert router.stats()["completed"] == 6
+    assert [r.out for r in reqs] == _reference_outs(cfg, params, reqs)
+
+
+# ---------------------------------------------------------------------------
+# the deterministic fault matrix under the async loop
+# ---------------------------------------------------------------------------
+
+def test_async_kill_restore_schedule_zero_drops():
+    """The PR-7 failure matrix headline, now under asyncio: kill a
+    replica mid-wave, restore it later — 100% of admitted requests
+    complete with oracle-equal streams, zero drops, and the run_clients
+    convenience drives one coroutine per request."""
+    cfg, params = _setup()
+    reqs = _requests(cfg, 8, seed=55, max_new=6)
+    inj = FaultInjector([
+        FaultEvent(t=0.05, kind="kill", replica="replica0"),
+        FaultEvent(t=0.15, kind="restore", replica="replica0")])
+    router = _fleet(cfg, params, injector=inj)
+    done = run_clients(router, reqs)
+    s = router.stats()
+    assert s["kills"] == 1 and s["restores"] == 1
+    assert s["completed"] == s["submitted"] == 8
+    assert s["failed"] == 0 and s["cancelled"] == 0 and s["shed"] == {}
+    assert all(r.done for r in done)
+    assert [r.out for r in done] == _reference_outs(cfg, params, reqs)
+
+
+# ---------------------------------------------------------------------------
+# lifecycle: drain semantics, shutdown, reuse guards
+# ---------------------------------------------------------------------------
+
+def test_async_drain_and_close_semantics():
+    cfg, params = _setup()
+    reqs = _requests(cfg, 3, seed=56, max_new=4)
+
+    async def main():
+        router = _fleet(cfg, params)
+        client = AsyncFleetClient(router)
+        await client.start()
+        handles = [await client.submit(r) for r in reqs]
+        await client.drain()                 # barrier: everything served
+        assert router._outstanding == 0
+        assert all(h.status == "done" for h in handles)
+        # streams still consumable after the work finished
+        for h, r in zip(handles, reqs):
+            assert [t async for t in h] == r.out
+        await client.aclose()
+        with pytest.raises(RuntimeError):
+            await client.submit(reqs[0])     # closed clients refuse work
+        return router
+
+    router = asyncio.run(main())
+    assert router.stats()["completed"] == 3

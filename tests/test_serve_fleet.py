@@ -364,7 +364,12 @@ def test_fleet_cancel_queued_and_inflight():
     assert router.cancel(tickets[4].id) is True
     assert tickets[4].status == "cancelled"
     assert tickets[4].reason == "client_disconnect"
+    # tombstone semantics: the deque entry is only skipped lazily, the
+    # O(1) cancel just flips status — the next dispatch pass drops it
+    assert tickets[4] in router._queue
+    router.tick()
     assert tickets[4] not in router._queue
+    assert tickets[4].replicas == []                   # never dispatched
     assert router.cancel(tickets[4]) is False          # already cancelled
     # dispatch and get mid-decode, then cancel an inflight ticket
     while not tickets[0].flights:
@@ -506,3 +511,144 @@ def test_engine_wave_enqueue_into_live_wave():
         assert n < 100
     assert all(r.done for r in first + late)
     assert [len(r.out) for r in first + late] == [3, 3, 2, 2]
+
+
+# ---------------------------------------------------------------------------
+# scheduler bugfix regressions: virtual time, deadlines, stats, tombstones
+# ---------------------------------------------------------------------------
+
+def test_tick_advance_time_false_freezes_virtual_time():
+    """tick(advance_time=False) runs a full scheduler round (dispatch,
+    decode steps) without consuming ManualClock time, and reports how
+    many decode steps it performed; the default tick still advances
+    tick_s per round."""
+    cfg, params = _setup()
+    clock = ManualClock()
+    router = _fleet(cfg, params, clock=clock)
+    router.submit(_requests(cfg, 1, seed=30)[0])
+    stepped = router.tick(advance_time=False)
+    assert clock.now() == 0.0                # waiting is not service time
+    assert stepped > 0                       # ...but the fleet did work
+    router.tick()
+    assert clock.now() == pytest.approx(router.config.tick_s)
+    router.run_until_done()
+    assert router.stats()["completed"] == 1
+
+
+def test_generate_admission_pump_does_not_age_virtual_time():
+    """Regression: generate()'s backpressure pump used to run normal
+    ticks, advancing virtual time per pumped round while merely waiting
+    for a queue slot — spuriously aging queued tickets' deadlines and
+    expiring retry backoffs. Pump ticks now run with advance_time=False,
+    so far fewer virtual seconds elapse than scheduler rounds ran, and a
+    deadline that per-request service comfortably meets is never shed
+    just because the caller submitted under backpressure."""
+    cfg, params = _setup()
+    clock = ManualClock()
+    small = FleetConfig(heartbeat_timeout_s=10.0, backoff_base_s=0.02,
+                        tick_s=0.01, queue_limit=2)
+    router = _fleet(cfg, params, clock=clock, config=small)
+    reqs = _requests(cfg, 8, seed=31, max_new=6)
+    done = router.generate(reqs, deadline_s=0.5)
+    assert all(r.done for r in done)
+    s = router.stats()
+    assert s["completed"] == 8 and s["shed"] == {}
+    # the old pump made now() == ticks * tick_s exactly; admission waits
+    # no longer consume virtual time
+    assert clock.now() < router.ticks * router.config.tick_s
+    assert [r.out for r in done] == _reference_outs(cfg, params, reqs)
+
+
+def test_generate_pump_advances_time_when_fleet_cannot_step():
+    """Liveness of the frozen-time pump: with every replica dead and the
+    queue full, a pump round performs zero decode steps — the clock must
+    then advance manually so the scheduled restore can fire, instead of
+    spinning forever at a frozen now()."""
+    cfg, params = _setup()
+    clock = ManualClock()
+    inj = FaultInjector([
+        FaultEvent(t=0.0, kind="kill", replica="replica0"),
+        FaultEvent(t=0.0, kind="kill", replica="replica1"),
+        FaultEvent(t=0.06, kind="restore", replica="replica0")])
+    small = FleetConfig(heartbeat_timeout_s=10.0, backoff_base_s=0.02,
+                        tick_s=0.01, queue_limit=2)
+    router = _fleet(cfg, params, injector=inj, clock=clock, config=small)
+    reqs = _requests(cfg, 4, seed=32, max_new=4)
+    done = router.generate(reqs)
+    assert all(r.done for r in done)
+    s = router.stats()
+    assert s["kills"] == 2 and s["restores"] == 1
+    assert s["completed"] == 4 and s["failed"] == 0
+    assert clock.now() >= 0.06               # time DID move to the restore
+
+
+def test_deadline_sheds_inflight_ticket_and_frees_lane():
+    """End-to-end deadline enforcement: an IN-FLIGHT ticket past its
+    deadline is shed mid-decode — wave lane cancelled so no replica keeps
+    spending steps on a request that can only be returned late — instead
+    of the old queued-only check letting it run to completion."""
+    cfg, params = _setup()
+    clock = ManualClock()
+    router = _fleet(cfg, params, clock=clock)
+    long_req = _requests(cfg, 1, seed=33, max_new=60)[0]
+    shorts = _requests(cfg, 3, seed=34, max_new=4)
+    t_long = router.submit(long_req, deadline_s=0.2)
+    for r in shorts:
+        router.submit(r)
+    while not t_long.flights:                # definitely dispatched
+        router.tick()
+    router.run_until_done()
+    assert t_long.status == "shed" and t_long.reason == "deadline"
+    assert router.sheds["deadline"] == 1
+    assert t_long.flights == []              # lane freed fleet-wide
+    assert not long_req.done                 # never returned late
+    assert t_long.t_first_dispatch is not None   # it WAS in flight
+    # shed at the first round past the deadline, not at completion
+    assert t_long.t_done - t_long.t_submit <= 0.2 + 2 * router.config.tick_s
+    # bystanders unharmed
+    assert all(r.done for r in shorts)
+    assert [r.out for r in shorts] == _reference_outs(cfg, params, shorts)
+
+
+def test_empty_history_stats_are_nan_not_zero():
+    """Regression: a fleet/engine that served nothing used to report
+    0.0 percentiles — a fake-perfect p99 that silently passes CI's
+    `tuned p99 <= 1.1x static` gate. Empty histories now report NaN,
+    which fails any <=/>= comparison."""
+    cfg, params = _setup()
+    router = _fleet(cfg, params)
+    s = router.stats()
+    for k in ("e2e_mean_s", "e2e_p50_s", "e2e_p99_s",
+              "queue_wait_p50_s", "queue_wait_p99_s"):
+        assert np.isnan(s[k]), k
+    assert not (s["e2e_p99_s"] <= 1.1 * 0.005)   # the gate cannot pass
+    ls = router.replicas[0].engine.latency_stats()
+    for k in ("mean_s", "p50_s", "p90_s", "p99_s", "max_s",
+              "prefill_mean_s", "queue_wait_p99_s", "e2e_p50_s"):
+        assert np.isnan(ls[k]), k
+    # after real traffic the numbers come back
+    router.generate(_requests(cfg, 2, seed=35))
+    s2 = router.stats()
+    assert s2["e2e_p99_s"] > 0.0 and not np.isnan(s2["e2e_mean_s"])
+
+
+def test_cancelled_queue_entries_tombstoned_and_never_dispatch():
+    """O(1) cancel: a queued cancel only flips status (no deque scan);
+    the stale entry is lazily dropped by the next dispatch pass and the
+    ticket never reaches a replica. Survivors complete bitwise-clean."""
+    cfg, params = _setup()
+    router = _fleet(cfg, params)
+    reqs = _requests(cfg, 10, seed=36, max_new=4)
+    tickets = [router.submit(r) for r in reqs]
+    for t in tickets[::2]:
+        assert router.cancel(t) is True
+    assert len(router._queue) == 10          # tombstones still in deque
+    router.tick()                            # ...dropped lazily here
+    assert all(t.status == "cancelled" and t.replicas == []
+               for t in tickets[::2])
+    router.run_until_done()
+    s = router.stats()
+    assert s["cancelled"] == 5 and s["completed"] == 5
+    live = [r for i, r in enumerate(reqs) if i % 2 == 1]
+    assert all(r.done for r in live)
+    assert [r.out for r in live] == _reference_outs(cfg, params, live)
